@@ -1,0 +1,75 @@
+"""Quickstart: build any assigned architecture at reduced size, train a few
+steps, and decode — the whole public API in 40 lines.
+
+  PYTHONPATH=src python examples/quickstart.py --arch qwen3-moe-30b-a3b
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig, get_arch, list_archs, reduced
+from repro.data import pipeline
+from repro.models import transformer as tf
+from repro.models.transformer import ModelCtx
+from repro.optimizer import adamw
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b", choices=list_archs())
+    ap.add_argument("--steps", type=int, default=20)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(reduced(get_arch(args.arch)), dtype="float32")
+    ctx = ModelCtx(attn_chunk=8, mamba_chunk=4, moe_group=16)
+    print(f"arch={cfg.name}  family={cfg.family}  "
+          f"reduced params={sum(x.size for x in jax.tree.leaves(tf.init_params(jax.random.PRNGKey(0), cfg))):,}")
+
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init_opt_state(params)
+    tcfg = TrainConfig(steps=args.steps, learning_rate=1e-3,
+                       checkpoint_every=0)
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, _), g = jax.value_and_grad(
+            lambda p: tf.loss_fn(cfg, p, batch, ctx), has_aux=True)(params)
+        params, opt = adamw.adamw_apply(params, g, opt, 1e-3, tcfg)
+        return params, opt, loss
+
+    for i, batch in enumerate(pipeline.synthetic_lm_batches(
+            cfg.vocab_size, 8, 32, args.steps)):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        if cfg.encoder_layers:
+            batch["frames"] = jnp.zeros((8, cfg.encoder_frames, cfg.d_model),
+                                        jnp.float32)
+        if cfg.pos_type == "mrope":
+            batch["patch_embeds"] = jnp.zeros(
+                (8, int(cfg.image_prefix_frac * 32), cfg.d_model), jnp.float32)
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(32)[None, :, None], (8, 32, 3)).astype(jnp.int32)
+        params, opt, loss = step(params, opt, batch)
+        if i % 5 == 0:
+            print(f"step {i:3d}  loss {float(loss):.4f}")
+
+    # greedy decode a few tokens
+    if cfg.pos_type != "mrope":
+        cache = tf.init_cache(cfg, 1, 16)
+        if cfg.encoder_layers:
+            ck, cv = tf.whisper_prefill_cross(
+                cfg, params, jnp.zeros((1, cfg.encoder_frames, cfg.d_model),
+                                       jnp.float32), ctx)
+            cache["cross_k"], cache["cross_v"] = ck, cv
+        tok = jnp.ones((1, 1), jnp.int32)
+        out = []
+        for _ in range(8):
+            logits, cache = tf.decode_step(cfg, params, cache, tok, ctx)
+            tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+            out.append(int(tok[0, 0]))
+        print("greedy decode:", out)
+
+
+if __name__ == "__main__":
+    main()

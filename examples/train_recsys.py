@@ -1,0 +1,102 @@
+"""End-to-end driver (deliverable b): train the paper's RecLLM recommender
+on the synthetic Amazon-Electronics dataset with the full runtime —
+checkpointing/restart, LR schedule, gradient clipping, HR@10/NDCG@10 eval.
+
+Default config is CPU-sized; ``--full`` selects the ~160M recllm-base
+(paper-scale backbone — expect hours on CPU, minutes on accelerators).
+
+  PYTHONPATH=src python examples/train_recsys.py --steps 200
+"""
+import argparse
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import TrainConfig, get_arch, reduced
+from repro.models.transformer import ModelCtx
+from repro.optimizer import adamw, schedule
+from repro.recsys import dataset, metrics, model as recmodel
+from repro.runtime import trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--scale", type=float, default=0.01,
+                    help="dataset scale (1.0 = full Table 1 sizes)")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full recllm-base (~160M params)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_recsys_ckpt")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    ds = dataset.generate(scale=args.scale, seed=0)
+    print(f"dataset: {ds.n_users:,} users, {ds.n_items:,} items, "
+          f"{len(ds.user):,} interactions (80/10/10 chronological)")
+
+    base = get_arch("recllm-base")
+    cfg = dataclasses.replace(
+        base if args.full else reduced(base, layers=4),
+        vocab_size=ds.n_items + 3, vocab_pad_to=64, dtype="float32")
+    ctx = ModelCtx(attn_chunk=min(args.seq, 512))
+    tcfg = TrainConfig(steps=args.steps, learning_rate=args.lr,
+                       warmup_steps=max(args.steps // 20, 5),
+                       checkpoint_every=max(args.steps // 4, 25),
+                       checkpoint_dir=args.ckpt_dir, keep_checkpoints=2)
+
+    params = recmodel.init_recllm(jax.random.PRNGKey(0), cfg, ds.n_users)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"RecLLM params: {n/1e6:.1f}M  (backbone {cfg.num_layers}L "
+          f"d={cfg.d_model})")
+    opt = adamw.init_opt_state(params)
+
+    def loss_fn(p, b):
+        return recmodel.recllm_loss(cfg, p, b, ctx)
+
+    @jax.jit
+    def step_fn(params, opt, batch):
+        lr = schedule.warmup_cosine(opt["step"], tcfg.learning_rate,
+                                    tcfg.warmup_steps, tcfg.steps)
+        (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params,
+                                                                 batch)
+        params, opt = adamw.adamw_apply(params, g, opt, lr, tcfg)
+        return params, opt, {"loss": loss}
+
+    # fault tolerance: resume if a previous run died
+    start, state = trainer.resume_or_init({"params": params, "opt": opt},
+                                          tcfg)
+    if start:
+        print(f"resumed from checkpoint at step {start}")
+
+    def batches():
+        for b in dataset.seq_batches(ds, args.batch, args.seq,
+                                     steps=args.steps - start, seed=start):
+            yield {k: jnp.asarray(v) for k, v in b.items()}
+
+    res = trainer.train_loop(state, batches(), step_fn, tcfg,
+                             start_step=start,
+                             samples_per_batch=args.batch, verbose=True,
+                             log_every=max(args.steps // 10, 1))
+    print(f"throughput: {res.throughput:.1f} samples/s (host)")
+
+    # --- evaluation: HR@10 / NDCG@10 with history exclusion ---------------
+    toks, gold, lens = dataset.eval_examples(ds, seq_len=args.seq,
+                                             max_users=256)
+    users = jnp.zeros((toks.shape[0],), jnp.int32)
+    scores = recmodel.score_users(cfg, state["params"], jnp.asarray(toks),
+                                  users, jnp.asarray(lens), ctx)
+    excl = jnp.asarray(metrics.history_exclusion(toks, cfg.padded_vocab))
+    hr, ndcg = metrics.hr_ndcg_at_k(scores, jnp.asarray(gold), k=10,
+                                    exclude=excl)
+    rand_hr = 10 / ds.n_items
+    print(f"HR@10 {float(hr):.4f}  NDCG@10 {float(ndcg):.4f}  "
+          f"(random baseline HR@10 ~ {rand_hr:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,395 @@
+"""Trip-count-aware cost analysis of SPMD-partitioned HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits each while body ONCE, so programs
+built from ``lax.scan`` (every model here) under-report FLOPs/bytes/
+collectives by the trip count.  This analyzer walks the computation call
+graph with multipliers from ``backend_config={"known_trip_count":...}``:
+
+* FLOPs: from ``dot`` ops (2 * result_elems * contracted_elems) — matmuls
+  dominate every workload here; elementwise FLOPs are ignored (<2%).
+* memory bytes: per top-level op, result + operand bytes (fusion bodies are
+  not double-counted: a fusion op's own operands/result model its HBM
+  traffic, which is exactly the fused-kernel memory model).
+* collectives: bytes by op kind, split intra-pod vs cross-pod by replica
+  group analysis (see ``_crosses_pod``).
+
+Shapes in the partitioned module are per-device, so totals are per-chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "f8e4m3b11fnuz": 1, "s4": 1, "u4": 1, "token": 0,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([\d,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->")
+_WHILE_RE = re.compile(
+    r"\bwhile\(.*?condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"\bcalls=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"\bto_apply=%?([\w\.\-]+)")
+_COND_RE = re.compile(
+    r"true_computation=%?([\w\.\-]+),\s*false_computation=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]*)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=(?:\[([\d,]+)\]T\(([\d,]+)\)|\[(\d+)\])")
+
+_FREE_OPS = (" parameter(", " get-tuple-element(", " tuple(", " bitcast(",
+             " constant(", " after-all(", " partition-id(", " replica-id(",
+             " iota(",)
+
+# ops assumed to touch HBM in a well-fused TPU executable ("fused" byte
+# model): matmuls, reductions, scan machinery, collectives.  Elementwise
+# chains, transposes, pads and layout copies fuse into their neighbours on
+# TPU (the MXU consumes transposed operands natively).
+_MATERIAL_OPS = (" dot(", " convolution(", " reduce(", " reduce-window(",
+                 " dynamic-update-slice(", " dynamic-slice(", " gather(",
+                 " scatter(", " sort(", " fusion(", " rng(",
+                 " cholesky(", " triangular-solve(",
+                 " select-and-scatter(")
+
+_CONST_RE = re.compile(r"%([\w\.\-]+)\s*=\s*\w+\[\]\s*constant\((\d+)\)")
+_COMPARE_RE = re.compile(
+    r"compare\(([^)]*)\),\s*direction=(LT|LE|GT|GE)")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _line_shapes_bytes(seg: str) -> int:
+    return sum(shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(seg))
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(len(ids), 1)
+    return max(n_devices, 1)
+
+
+def _crosses_pod(line: str, n_devices: int) -> bool:
+    if n_devices <= 0:
+        return False
+    half = n_devices // 2
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        try:
+            ids = [int(x) for x in m.group(1).split(",") if x.strip()]
+        except ValueError:
+            return True
+        return bool(ids) and min(ids) < half <= max(ids)
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        if m.group(5):                         # plain iota [g,s]<=[N]
+            return s > half
+        reshape = [int(x) for x in m.group(3).split(",")]
+        perm = [int(x) for x in m.group(4).split(",")]
+        stride = 1
+        for d in reshape[perm[-1] + 1:]:
+            stride *= d
+        return (s - 1) * stride >= half
+    return False
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {op: 0.0 for op in COLLECTIVE_OPS})
+    coll_cross: float = 0.0
+    coll_count: float = 0.0
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll_bytes.values())
+
+    @property
+    def coll_intra(self) -> float:
+        return self.coll_total - self.coll_cross
+
+    def add(self, other: "Costs", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k in self.coll_bytes:
+            self.coll_bytes[k] += other.coll_bytes[k] * mult
+        self.coll_cross += other.coll_cross * mult
+        self.coll_count += other.coll_count * mult
+
+
+_LHS_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _result_info(line: str) -> Tuple[int, List[int]]:
+    """(total result bytes, dims of the first result shape) from the LHS."""
+    eq = line.find("=")
+    op_par = line.find("(", eq)
+    seg = line[eq:op_par if op_par > 0 else None]
+    shapes = _SHAPE_RE.findall(seg)
+    total = sum(shape_bytes(dt, dims) for dt, dims in shapes)
+    first = [int(d) for d in shapes[0][1].split(",") if d] if shapes else []
+    return total, first
+
+
+def _operands(line: str, op_token: str) -> List[str]:
+    """Operand names between the op's '(' and the first ')'."""
+    start = line.find(op_token)
+    if start < 0:
+        return []
+    start = line.find("(", start)
+    end = line.find(")", start)
+    if start < 0 or end < 0:
+        return []
+    return _OPERAND_RE.findall(line[start:end])
+
+
+def _dot_flops(line: str, sym: Dict[str, Tuple[int, List[int]]]) -> float:
+    """2 * result_elems * prod(lhs contracting dims) via the symbol table."""
+    _, res_dims = _result_info(line)
+    ops = _operands(line, " dot(")
+    lhs_dims: List[int] = []
+    if ops and ops[0] in sym:
+        lhs_dims = sym[ops[0]][1]
+    m = _CONTRACT_RE.search(line)
+    k = 1
+    if m and m.group(1) and lhs_dims:
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                k *= lhs_dims[i]
+    res = 1
+    for d in res_dims:
+        res *= d
+    return 2.0 * res * k
+
+
+def _trip_from_cond(cond_lines: List[str]) -> Optional[float]:
+    """Extract the trip count from a jax-scan while condition: the constant
+    bound of the ROOT compare (counter starts at 0, step 1)."""
+    consts: Dict[str, int] = {}
+    for line in cond_lines:
+        for nm, val in _CONST_RE.findall(line):
+            consts[nm] = int(val)
+    for line in cond_lines:
+        if "ROOT" in line:
+            m = _COMPARE_RE.search(line)
+            if not m:
+                return None
+            ops = _OPERAND_RE.findall(m.group(1))
+            for nm in ops:
+                if nm in consts:
+                    n = consts[nm]
+                    return float(n + 1) if m.group(2) in ("LE", "GE") \
+                        else float(n)
+            # inline constant form: compare(%x, s32[] constant(N))
+            mc = re.search(r"constant\((\d+)\)", m.group(1))
+            if mc:
+                return float(mc.group(1))
+    return None
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, List[str]], Optional[str]]:
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HEADER_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+        else:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps, entry
+
+
+def analyze(hlo: str, n_devices: int = 0, byte_model: str = "fused") -> Costs:
+    """byte_model: 'fused' (TPU fused-kernel traffic model — only
+    materializing ops count) or 'all' (every op's result+operands)."""
+    comps, entry = parse_computations(hlo)
+    if entry is None:
+        return Costs()
+
+    # computations that are fusion bodies / reducers: excluded from traversal
+    fusion_bodies = set()
+    for lines in comps.values():
+        for line in lines:
+            if " fusion(" in line:
+                m = _CALLS_RE.search(line)
+                if m:
+                    fusion_bodies.add(m.group(1))
+            m = _TO_APPLY_RE.search(line)
+            if m:
+                fusion_bodies.add(m.group(1))
+
+    # symbol tables: per computation, name -> (result bytes, first dims)
+    syms: Dict[str, Dict[str, Tuple[int, List[int]]]] = {}
+    for cname, lines in comps.items():
+        tbl: Dict[str, Tuple[int, List[int]]] = {}
+        for line in lines:
+            m = _LHS_NAME_RE.match(line)
+            if m and "=" in line:
+                tbl[m.group(1)] = _result_info(line)
+        syms[cname] = tbl
+
+    memo: Dict[str, Costs] = {}
+
+    def _op_read_bytes(line: str, op_token: str,
+                       tbl: Dict[str, Tuple[int, List[int]]]) -> int:
+        return sum(tbl.get(nm, (0, []))[0]
+                   for nm in _operands(line, op_token))
+
+    def _feeds_only_slice(res_name: str, lines: List[str]) -> bool:
+        """True if every consumer of res_name is a (dynamic-)slice."""
+        token = f"%{res_name}"
+        found = False
+        for other in lines:
+            pos = other.find(token)
+            if pos < 0:
+                continue
+            # skip the defining line
+            m = _LHS_NAME_RE.match(other)
+            if m and m.group(1) == res_name:
+                continue
+            nxt = other[pos + len(token)]if pos + len(token) < len(other) \
+                else " "
+            if nxt.isalnum() or nxt in "._-":
+                continue                        # prefix of a longer name
+            found = True
+            if " dynamic-slice(" not in other and " slice(" not in other:
+                return False
+        return found
+
+    def visit(name: str) -> Costs:
+        if name in memo:
+            return memo[name]
+        memo[name] = Costs()                    # cycle guard
+        total = Costs()
+        tbl = syms.get(name, {})
+        for line in comps.get(name, ()):
+            stripped = " " + line.strip()
+            if any(op in stripped for op in _FREE_OPS):
+                # parameters/GTE/tuple/constants/iota: no HBM traffic
+                pass
+            elif " dot(" in stripped:
+                total.flops += _dot_flops(line, tbl)
+                total.bytes += (_result_info(line)[0]
+                                + _op_read_bytes(line, " dot(", tbl))
+            elif " while(" in stripped:
+                m = _WHILE_RE.search(line)
+                t = _TRIP_RE.search(line)
+                if t:
+                    trips = float(t.group(1))
+                elif m:
+                    trips = _trip_from_cond(comps.get(m.group(1), [])) or 1.0
+                else:
+                    trips = 1.0
+                if m:
+                    total.add(visit(m.group(2)), trips)   # body
+                    total.add(visit(m.group(1)), trips)   # cond (cheap)
+                # while's own tuple shuffling ~ free
+            elif " conditional(" in stripped:
+                m = _COND_RE.search(line)
+                names = list(m.groups()) if m else []
+                mb = _BRANCH_RE.search(line)
+                if mb:
+                    names = [x.strip().lstrip("%")
+                             for x in mb.group(1).split(",")]
+                for nm in names:                 # upper bound: all branches
+                    total.add(visit(nm), 1.0)
+            elif " call(" in stripped:
+                m = _TO_APPLY_RE.search(line) or _CALLS_RE.search(line)
+                if m:
+                    total.add(visit(m.group(1)), 1.0)
+            else:
+                is_coll = False
+                for op in COLLECTIVE_OPS:
+                    if f" {op}(" in stripped or f" {op}-start(" in stripped:
+                        used = op if f" {op}(" in stripped else f"{op}-start"
+                        b_res = _result_info(line)[0]
+                        N = _group_size(line, n_devices)
+                        ring = (N - 1) / N
+                        # per-device ring wire bytes (EXPERIMENTS.md
+                        # §Methodology)
+                        if op == "all-reduce":
+                            nm = _LHS_NAME_RE.match(line)
+                            if nm and _feeds_only_slice(nm.group(1),
+                                                        comps[name]):
+                                # TPU ReduceScatterCreator turns AR+slice
+                                # into reduce-scatter (CPU pipeline doesn't)
+                                wire = b_res * ring
+                            else:
+                                wire = 2 * b_res * ring
+                        elif op == "reduce-scatter":
+                            ops_in = _operands(line, used + "(")
+                            b_in = tbl.get(ops_in[0], (b_res * N, []))[0] \
+                                if ops_in else b_res * N
+                            wire = b_in * ring
+                        elif op == "collective-permute":
+                            wire = b_res
+                        else:                    # all-gather, all-to-all
+                            wire = b_res * ring
+                        total.coll_bytes[op] += wire
+                        total.coll_count += 1
+                        total.bytes += b_res
+                        if _crosses_pod(line, n_devices):
+                            total.coll_cross += wire
+                        is_coll = True
+                        break
+                    if f" {op}-done(" in stripped:
+                        is_coll = True           # counted at -start
+                        break
+                if not is_coll and "=" in line:
+                    if byte_model == "fused" and not any(
+                            op in stripped for op in _MATERIAL_OPS):
+                        continue                 # fuses into a neighbour
+                    tok = line[line.find("=") + 1:].strip()
+                    sp = tok.find("(")
+                    op_name = tok[:sp].split()[-1] if sp > 0 else ""
+                    if op_name == "dynamic-slice":
+                        # reads only the slice (result), not the source
+                        total.bytes += 2 * _result_info(line)[0]
+                    elif op_name == "dynamic-update-slice":
+                        # in-place read-modify-write of the update region
+                        ops_in = _operands(line, " dynamic-update-slice(")
+                        upd = tbl.get(ops_in[1], (0, []))[0] \
+                            if len(ops_in) > 1 else _result_info(line)[0]
+                        total.bytes += 2 * upd
+                    else:
+                        total.bytes += _result_info(line)[0]
+                        total.bytes += _op_read_bytes(line, f" {op_name}(",
+                                                      tbl)
+        memo[name] = total
+        return total
+
+    return visit(entry)

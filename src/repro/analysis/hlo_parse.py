@@ -1,0 +1,110 @@
+"""Parse compiled (SPMD-partitioned) HLO text for collective traffic.
+
+Shapes in the partitioned module are PER-DEVICE buffer sizes, so the summed
+bytes here are per-chip wire bytes — matching ``cost_analysis()``'s
+per-device FLOPs (see EXPERIMENTS.md §Roofline methodology).
+
+Cross-pod classification: replica groups are parsed (explicit lists and iota
+``[g,s]<=[N]`` forms, incl. transposed); a collective whose group spans both
+halves of a 2-pod device space (ids < N/2 and >= N/2) is charged to the
+slower DCI link.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "f8e4m3b11fnuz": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(.*?)\}\}?,")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=(?:\[([\d,]+)\]T\(([\d,]+)\)|\[(\d+)\])")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _lhs_bytes(line: str, op: str) -> int:
+    """Sum the byte sizes of the op's result shapes (LHS of '=')."""
+    eq = line.find("=")
+    if eq < 0:
+        return 0
+    lhs_end = line.find(op, eq)
+    seg = line[eq:lhs_end]
+    return sum(shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(seg))
+
+
+def _crosses_pod(line: str, n_devices: int) -> bool:
+    """Does this collective's replica group span both pods (halves)?"""
+    half = n_devices // 2
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        first_group = m.group(1).split("}")[0].lstrip("{")
+        try:
+            ids = [int(x) for x in first_group.split(",") if x.strip()]
+        except ValueError:
+            return True
+        return bool(ids) and min(ids) < half <= max(ids)
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        if m.group(5):                          # plain iota [g,s]<=[N]
+            return s > half
+        # transposed iota: group elements stride across the device space
+        reshape = [int(x) for x in m.group(3).split(",")]
+        perm = [int(x) for x in m.group(4).split(",")]
+        # group members differ in the minor (post-transpose) dims; they span
+        # pods iff the id-distance across a group exceeds half the space.
+        stride = 1
+        for d in reshape[perm[-1] + 1:]:
+            stride *= d
+        return (s - 1) * stride >= half
+    return False                                 # single-group default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    by_op: Dict[str, int]
+    count: int
+    total_bytes: int
+    cross_pod_bytes: int
+    intra_pod_bytes: int
+
+
+def collective_stats(hlo_text: str, n_devices: int = 0) -> CollectiveStats:
+    by_op: Dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    total = cross = 0
+    count = 0
+    for line in hlo_text.splitlines():
+        for op in COLLECTIVE_OPS:
+            tok = f" {op}("
+            tok_start = f" {op}-start("
+            if tok in line or tok_start in line:
+                used = op if tok in line else f"{op}-start"
+                b = _lhs_bytes(line, used + "(")
+                by_op[op] += b
+                total += b
+                count += 1
+                if n_devices and _crosses_pod(line, n_devices):
+                    cross += b
+                break
+    return CollectiveStats(by_op=by_op, count=count, total_bytes=total,
+                           cross_pod_bytes=cross,
+                           intra_pod_bytes=total - cross)

@@ -1,0 +1,123 @@
+"""Assemble the EXPERIMENTS.md roofline table from dry-run result JSONs.
+
+  PYTHONPATH=src python -m repro.analysis.report experiments/dryrun
+"""
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+from repro.config import PEAK_FLOPS_BF16, SHAPES, get_arch
+from repro.core import hybrid
+
+
+def _refresh_fractions(r: Dict) -> None:
+    """Recompute MODEL_FLOPS-derived columns with the current cost model
+    (cells don't need recompiling — raw HLO terms are stored)."""
+    if r.get("status") != "ok":
+        return
+    rl = r["roofline"]
+    cfg = get_arch(r["arch"])
+    shape = SHAPES[r["shape"]]
+    if shape.kind == "decode":
+        mf = hybrid.decode_model_flops(cfg, shape.seq_len,
+                                       shape.global_batch)
+    else:
+        mf = hybrid.model_flops(cfg, shape.seq_len, shape.global_batch,
+                                training=shape.kind == "train")
+    mf_dev = mf / rl["n_devices"]
+    rl["model_flops_per_dev"] = mf_dev
+    rl["useful_fraction"] = mf_dev / max(rl["flops_per_dev"], 1.0)
+    t_bound = max(rl["t_compute"], rl["t_memory"], rl["t_collective"],
+                  1e-12)
+    rl["roofline_fraction"] = (mf_dev / PEAK_FLOPS_BF16) / t_bound
+
+
+def load_results(out_dir: str) -> List[Dict]:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            rows.append(json.load(f))
+    for r in rows:
+        _refresh_fractions(r)
+    return rows
+
+
+ARCH_ORDER = ["internlm2-20b", "olmo-1b", "deepseek-7b", "gemma3-1b",
+              "moonshot-v1-16b-a3b", "qwen3-moe-30b-a3b", "rwkv6-1.6b",
+              "jamba-v0.1-52b", "whisper-medium", "qwen2-vl-2b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _key(r):
+    a = ARCH_ORDER.index(r["arch"]) if r["arch"] in ARCH_ORDER else 99
+    s = SHAPE_ORDER.index(r["shape"]) if r["shape"] in SHAPE_ORDER else 9
+    return (a, s, r["mesh"])
+
+
+def roofline_table(rows: List[Dict], mesh: str = "16x16") -> str:
+    out = ["| arch | shape | compute ms | memory ms | collective ms | "
+           "bound | peak GB (bf16-adj) | fits 16G | useful frac | "
+           "roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=_key):
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skipped (full-attention; DESIGN.md §5) | — | — | "
+                       f"— | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | | |")
+            continue
+        rl, mem = r["roofline"], r["memory"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {rl['t_compute']*1e3:.1f} | {rl['t_memory']*1e3:.1f} "
+            f"| {rl['t_collective']*1e3:.1f} | {rl['bottleneck']} "
+            f"| {mem['peak_bf16adj_gb']:.2f} "
+            f"| {'yes' if mem['fits_16g'] else 'NO'} "
+            f"| {rl['useful_fraction']:.2f} "
+            f"| {rl['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def summary(rows: List[Dict]) -> str:
+    ok = [r for r in rows if r["status"] == "ok"]
+    sk = [r for r in rows if r["status"] == "skipped"]
+    err = [r for r in rows if r["status"] == "error"]
+    lines = [f"cells: {len(ok)} ok, {len(sk)} skipped, {len(err)} error"]
+    for r in err:
+        lines.append(f"  ERROR {r['arch']} x {r['shape']} x {r['mesh']}")
+    fits = [r for r in ok if r["memory"]["fits_16g"]]
+    lines.append(f"fits 16GB (bf16-adj): {len(fits)}/{len(ok)}")
+    # worst roofline fraction / most collective-bound (hillclimb candidates)
+    train_ok = [r for r in ok if r["mesh"] == "16x16"]
+    if train_ok:
+        worst = min(train_ok, key=lambda r: r["roofline"]["roofline_fraction"])
+        lines.append(f"worst roofline fraction: {worst['arch']} x "
+                     f"{worst['shape']} "
+                     f"({worst['roofline']['roofline_fraction']:.3f})")
+        coll = max(train_ok,
+                   key=lambda r: r["roofline"]["t_collective"]
+                   / max(r["roofline"]["t_compute"], 1e-9))
+        lines.append(f"most collective-bound: {coll['arch']} x "
+                     f"{coll['shape']}")
+    return "\n".join(lines)
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    rows = load_results(out_dir)
+    print("## Single-pod (16x16 = 256 chips)\n")
+    print(roofline_table(rows, "16x16"))
+    print("\n## Multi-pod (2x16x16 = 512 chips)\n")
+    print(roofline_table(rows, "2x16x16"))
+    print("\n## Summary\n")
+    print(summary(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Roofline analysis from dry-run compiled artifacts (deliverable g).
+
+Per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs_per_device / PEAK_FLOPS_BF16
+    memory term     = HLO_bytes_per_device / HBM_BW
+    collective term = intra_bytes / ICI_BW + cross_pod_bytes / DCI_BW
+
+``cost_analysis()`` on the SPMD-partitioned executable reports *per-device*
+FLOPs/bytes (calibrated empirically — see EXPERIMENTS.md §Methodology), so no
+further division by chip count is applied.  MODEL_FLOPS is the analytic
+6*N*D (dense) / 6*N_active*D (MoE) from the hybrid planner's cost model, per
+device, for the "useful compute fraction" column.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional
+
+from repro.config import (ArchConfig, ShapeConfig, DCI_BW_PER_LINK,
+                          HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16)
+from repro.analysis import hlo_cost
+from repro.core import hybrid
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_intra: float
+    coll_cross: float
+    model_flops_per_dev: float
+    peak_hbm_bytes: float
+    arg_bytes: float
+    temp_bytes: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_dev / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_dev / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return (self.coll_intra / ICI_BW_PER_LINK
+                + self.coll_cross / DCI_BW_PER_LINK)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/redundancy waste detector."""
+        return self.model_flops_per_dev / max(self.flops_per_dev, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU bound: useful compute time / bound time."""
+        t_useful = self.model_flops_per_dev / PEAK_FLOPS_BF16
+        return t_useful / max(self.t_bound, 1e-12)
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 useful_fraction=self.useful_fraction,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def from_costs(arch_cfg: ArchConfig, shape: ShapeConfig, mesh_name: str,
+               n_devices: int, costs: "hlo_cost.Costs", mem_stats
+               ) -> Roofline:
+    """costs: trip-count-aware per-device analysis of the post-SPMD,
+    pre-float-normalization HLO (bf16 preserved); mem_stats: compiled
+    memory_analysis (CPU-backend upper bound — f32-promoted temps)."""
+    training = shape.kind == "train"
+    # model FLOPs: decode = one token against the cache
+    if shape.kind == "decode":
+        mf = hybrid.decode_model_flops(arch_cfg, shape.seq_len,
+                                       shape.global_batch)
+    else:
+        mf = hybrid.model_flops(arch_cfg, shape.seq_len, shape.global_batch,
+                                training=training)
+    ma = mem_stats
+    return Roofline(
+        arch=arch_cfg.name, shape=shape.name, mesh=mesh_name,
+        n_devices=n_devices,
+        flops_per_dev=float(costs.flops),
+        bytes_per_dev=float(costs.bytes),
+        coll_intra=float(costs.coll_intra),
+        coll_cross=float(costs.coll_cross),
+        model_flops_per_dev=mf / n_devices,
+        peak_hbm_bytes=float(ma.temp_size_in_bytes
+                             + ma.argument_size_in_bytes
+                             + ma.output_size_in_bytes
+                             - ma.alias_size_in_bytes),
+        arg_bytes=float(ma.argument_size_in_bytes),
+        temp_bytes=float(ma.temp_size_in_bytes),
+    )
+
+
+def save(r: Roofline, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(r.to_dict(), f, indent=1)
+
+
+def format_row(d: Dict) -> str:
+    return (f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+            f"| {d['t_compute']*1e3:.1f} | {d['t_memory']*1e3:.1f} "
+            f"| {d['t_collective']*1e3:.1f} | {d['bottleneck']} "
+            f"| {d['useful_fraction']:.2f} | {d['roofline_fraction']:.2f} |")

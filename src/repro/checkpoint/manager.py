@@ -1,0 +1,118 @@
+"""Fault-tolerant checkpointing: atomic sharded saves, keep-N GC, resume
+from the latest *valid* checkpoint (torn writes are skipped), and elastic
+resharding on restore (mesh/topology changes between runs).
+
+Layout:  <dir>/step_<k>.tmp/ -> (atomic rename) -> <dir>/step_<k>/
+           arrays.npz        flat {path: array}
+           manifest.json     step, keys, mesh metadata, COMMIT marker
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree, *, keep: int = 3,
+         extra_meta: Optional[Dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f"step_{step:010d}.tmp")
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten_with_paths(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    manifest = {"step": step, "keys": sorted(flat),
+                "committed": True, **(extra_meta or {})}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)                      # atomic commit
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = list_steps(ckpt_dir)
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"),
+                      ignore_errors=True)
+
+
+def list_steps(ckpt_dir: str) -> List[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if _valid(os.path.join(ckpt_dir, name)):
+                out.append(int(name[5:]))
+    return sorted(out)
+
+
+def _valid(path: str) -> bool:
+    mf = os.path.join(path, "manifest.json")
+    if not (os.path.exists(mf) and
+            os.path.exists(os.path.join(path, "arrays.npz"))):
+        return False
+    try:
+        with open(mf) as f:
+            return bool(json.load(f).get("committed"))
+    except (json.JSONDecodeError, OSError):
+        return False
+
+
+def restore(ckpt_dir: str, step: int, template, shardings=None
+            ) -> Any:
+    """Restore into ``template``'s structure; optionally place each leaf
+    with ``shardings`` (elastic reshard across mesh changes — the loaded
+    full array is re-laid-out onto the new mesh)."""
+    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for p, leaf in leaves_p:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in p)
+        a = arrays[key]
+        if hasattr(leaf, "dtype"):
+            a = a.astype(leaf.dtype)
+        out.append(a)
+    tree = jax.tree_util.tree_unflatten(treedef, [jnp.asarray(a)
+                                                  for a in out])
+    if shardings is not None:
+        tree = jax.tree.map(lambda x, s: jax.device_put(x, s),
+                            tree, shardings)
+    return tree
+
+
+def restore_latest(ckpt_dir: str, template, shardings=None
+                   ) -> Tuple[Optional[int], Any]:
+    """(step, tree) from the newest valid checkpoint, or (None, template).
+
+    Walks backwards over checkpoints so a torn/corrupt newest write (node
+    failure mid-save) falls through to the previous one."""
+    for step in reversed(list_steps(ckpt_dir)):
+        try:
+            return step, restore(ckpt_dir, step, template, shardings)
+        except (KeyError, OSError, ValueError):
+            continue
+    return None, template

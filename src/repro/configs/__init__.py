@@ -1,0 +1,18 @@
+"""Architecture registry: importing this package registers every config."""
+from repro.configs.internlm2_20b import CONFIG as internlm2_20b
+from repro.configs.olmo_1b import CONFIG as olmo_1b
+from repro.configs.deepseek_7b import CONFIG as deepseek_7b
+from repro.configs.gemma3_1b import CONFIG as gemma3_1b
+from repro.configs.moonshot_v1_16b_a3b import CONFIG as moonshot_v1_16b_a3b
+from repro.configs.qwen3_moe_30b_a3b import CONFIG as qwen3_moe_30b_a3b
+from repro.configs.rwkv6_1_6b import CONFIG as rwkv6_1_6b
+from repro.configs.jamba_v0_1_52b import CONFIG as jamba_v0_1_52b
+from repro.configs.whisper_medium import CONFIG as whisper_medium
+from repro.configs.qwen2_vl_2b import CONFIG as qwen2_vl_2b
+from repro.configs.recllm_base import CONFIG as recllm_base
+
+ALL = (
+    internlm2_20b, olmo_1b, deepseek_7b, gemma3_1b, moonshot_v1_16b_a3b,
+    qwen3_moe_30b_a3b, rwkv6_1_6b, jamba_v0_1_52b, whisper_medium,
+    qwen2_vl_2b, recllm_base,
+)

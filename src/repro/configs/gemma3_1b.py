@@ -1,0 +1,25 @@
+"""Gemma3-1B — 5:1 local:global attention, MQA (kv=1), 128k context
+[hf:google/gemma-3-1b-pt; unverified]."""
+from repro.config import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="gemma3-1b",
+    family="dense",
+    num_layers=26,
+    d_model=1152,
+    num_heads=4,
+    num_kv_heads=1,
+    head_dim=256,                   # gemma3 fixed head_dim (> d_model/heads)
+    d_ff=6912,
+    vocab_size=262144,
+    sliding_window=1024,            # local layers
+    local_global_pattern=5,         # 5 local then 1 global
+    qk_norm=True,
+    norm_type="rmsnorm",
+    mlp_gated=True,
+    act="gelu",
+    pos_type="rope",
+    rope_theta=1e6,
+    tie_embeddings=True,
+    source="hf:google/gemma-3-1b-pt; unverified",
+))

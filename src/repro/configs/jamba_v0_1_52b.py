@@ -1,0 +1,28 @@
+"""Jamba-v0.1-52B — Mamba+attention 1:7 interleave, MoE 16e top-2 every other
+layer [arXiv:2403.19887; hf]."""
+from repro.config import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=65536,
+    num_experts=16,
+    experts_per_token=2,
+    moe_period=2,                   # MoE at every other FFN
+    ssm_type="mamba",
+    attn_period=8,                  # 1 attn : 7 mamba
+    ssm_d_state=16,
+    ssm_d_conv=4,
+    ssm_expand=2,
+    norm_type="rmsnorm",
+    mlp_gated=True,
+    act="silu",
+    pos_type="none",                # jamba uses no positional encoding
+    source="arXiv:2403.19887; hf",
+))

@@ -1,0 +1,24 @@
+"""Qwen2-VL-2B — VLM text backbone with M-RoPE; vision frontend STUBBED
+(``input_specs`` provides precomputed patch embeddings) [arXiv:2409.12191; hf]."""
+from repro.config import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab_size=151936,
+    norm_type="rmsnorm",
+    mlp_gated=True,
+    act="silu",
+    pos_type="mrope",
+    mrope_sections=(16, 24, 24),    # head_dim/2 = 64 split across (t, h, w)
+    image_prefix_frac=0.25,         # leading fraction of seq = patch embeds
+    rope_theta=1e6,
+    tie_embeddings=True,
+    source="arXiv:2409.12191; hf",
+))

@@ -1,0 +1,23 @@
+"""Whisper-medium — encoder-decoder audio backbone; conv frontend STUBBED
+(``input_specs`` provides 1500 precomputed frame embeddings) [arXiv:2212.04356]."""
+from repro.config import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="whisper-medium",
+    family="audio",
+    num_layers=24,                  # decoder layers
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=51865,
+    encoder_layers=24,
+    encoder_frames=1500,            # 30s audio -> 1500 frames (stub frontend)
+    norm_type="layernorm",
+    mlp_gated=False,
+    act="gelu",
+    pos_type="learned",
+    tie_embeddings=True,
+    source="arXiv:2212.04356; unverified",
+))

@@ -1,0 +1,101 @@
+"""Asynchronous data parallelism with delay compensation (paper C7, Eq. 12).
+
+A real parameter server cannot live inside one XLA program, so this is a
+faithful *simulation* (DESIGN.md §3): P virtual workers push gradients
+computed against stale parameter snapshots; the server applies
+
+    theta_{t+1} = theta_t - eta * g_p / (1 + tau_p)          (Eq. 12)
+
+where tau_p is the staleness of worker p's snapshot.  The staleness process
+is configurable (fixed, random, or straggler-heavy) so the convergence /
+throughput trade-off the paper discusses is measurable, and delay
+compensation can be switched off to reproduce the naive-async degradation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class AsyncConfig:
+    n_workers: int = 4
+    max_staleness: int = 4
+    compensate: bool = True           # Eq. 12 down-weighting
+    lr: float = 0.1
+    staleness: str = "random"         # fixed | random | straggler
+
+
+def _staleness_schedule(cfg: AsyncConfig, steps: int, rng: np.random.Generator
+                        ) -> np.ndarray:
+    """(steps,) worker id + staleness per arriving gradient."""
+    if cfg.staleness == "fixed":
+        tau = np.full(steps, cfg.max_staleness // 2)
+    elif cfg.staleness == "random":
+        tau = rng.integers(0, cfg.max_staleness + 1, steps)
+    elif cfg.staleness == "straggler":
+        # one slow worker contributes maximally stale gradients
+        tau = rng.integers(0, 2, steps)
+        worker = rng.integers(0, cfg.n_workers, steps)
+        tau = np.where(worker == 0, cfg.max_staleness, tau)
+    else:
+        raise ValueError(cfg.staleness)
+    return tau.astype(np.int32)
+
+
+def simulate_async_sgd(loss_fn: Callable, params0, data_stream,
+                       cfg: AsyncConfig, seed: int = 0
+                       ) -> Tuple[object, List[float]]:
+    """Run the async simulation.
+
+    loss_fn(params, batch) -> scalar; data_stream: iterable of batches.
+    Keeps a ring buffer of the last ``max_staleness+1`` parameter snapshots;
+    each arriving gradient is computed at snapshot (t - tau_t).
+    """
+    rng = np.random.default_rng(seed)
+    batches = list(data_stream)
+    steps = len(batches)
+    tau_sched = _staleness_schedule(cfg, steps, rng)
+
+    grad_fn = jax.jit(jax.grad(loss_fn))
+
+    @jax.jit
+    def apply_update(params, grads, tau):
+        scale = cfg.lr / (1.0 + tau) if cfg.compensate else cfg.lr
+        return jax.tree.map(lambda p, g: p - scale * g, params, grads)
+
+    history = [params0] * (cfg.max_staleness + 1)   # ring of snapshots
+    params = params0
+    losses = []
+    loss_jit = jax.jit(loss_fn)
+    for t in range(steps):
+        tau = int(min(tau_sched[t], t))             # cannot be staler than t
+        stale_params = history[(t - tau) % len(history)]
+        g = grad_fn(stale_params, batches[t])
+        params = apply_update(params, g, jnp.float32(tau))
+        history[t % len(history)] = params
+        losses.append(float(loss_jit(params, batches[t])))
+    return params, losses
+
+
+def simulate_sync_sgd(loss_fn: Callable, params0, data_stream, lr: float
+                      ) -> Tuple[object, List[float]]:
+    """Synchronous baseline on the same stream (Eq. 8/9)."""
+    grad_fn = jax.jit(jax.grad(loss_fn))
+    loss_jit = jax.jit(loss_fn)
+
+    @jax.jit
+    def upd(params, g):
+        return jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+
+    params = params0
+    losses = []
+    for batch in data_stream:
+        params = upd(params, grad_fn(params, batch))
+        losses.append(float(loss_jit(params, batch)))
+    return params, losses

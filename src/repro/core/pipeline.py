@@ -1,0 +1,102 @@
+"""Pipeline parallelism (paper C2): GPipe schedule over a ``stage`` mesh axis
+via shard_map + lax.ppermute + lax.scan over ticks.
+
+TPU-native mapping of the paper's PP: stage-to-stage activation transfer is
+``collective_permute`` (the ICI neighbour send), micro-batches overlap
+compute with those sends, and the backward schedule falls out of autodiff
+through the scan (ppermute's transpose is the reverse permute), i.e. a
+GPipe-style full-forward / full-backward with activation stashing.
+
+Stage balancing (bubbles from uneven stages, §V.A) is handled upstream by
+``load_balance.balance_stages``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def gpipe(stage_fn: Callable, mesh: Mesh, n_stages: int, n_micro: int,
+          stage_axis: str = "stage"):
+    """Build a pipelined apply: (stage_params, x_micro) -> y_micro.
+
+    stage_fn(params_slice, x) -> y : one stage's computation, same x/y shape
+    (inter-stage activations must be shape-uniform).
+    stage_params: pytree with leading dim n_stages (sharded over the axis).
+    x_micro: (n_micro, mb, ...) microbatched input, consumed by stage 0.
+    Returns (n_micro, mb, ...) outputs produced by the last stage.
+    """
+    T = n_micro + n_stages - 1                      # GPipe ticks
+
+    def inner(params, x_micro):
+        # params leaves: (1, ...) local stage slice; x_micro: (n_micro, ...)
+        p_local = jax.tree.map(lambda a: a[0], params)
+        sid = jax.lax.axis_index(stage_axis)
+        buf0 = jnp.zeros_like(x_micro[0])
+        ysink0 = jnp.zeros_like(x_micro)
+
+        def tick(carry, t):
+            buf, ysink = carry
+            # stage 0 injects microbatch t (clipped index; masked later)
+            x_in = jax.lax.dynamic_index_in_dim(
+                x_micro, jnp.clip(t, 0, n_micro - 1), keepdims=False)
+            inp = jnp.where(sid == 0, x_in, buf)
+            y = stage_fn(p_local, inp)
+            # last stage banks its output at micro index t-(n_stages-1)
+            out_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            bank = (sid == n_stages - 1) & (t >= n_stages - 1)
+            ysink = jax.lax.cond(
+                bank,
+                lambda s: jax.lax.dynamic_update_index_in_dim(
+                    s, y, out_idx, axis=0),
+                lambda s: s, ysink)
+            # send activations downstream (wraps around; wrap is ignored)
+            nxt = jax.lax.ppermute(
+                y, stage_axis,
+                [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            return (nxt, ysink), None
+
+        (_, ysink), _ = jax.lax.scan(tick, (buf0, ysink0), jnp.arange(T))
+        # every stage holds a ysink; only the last stage's is real.
+        ysink = jax.lax.psum(
+            jnp.where(sid == n_stages - 1, ysink, jnp.zeros_like(ysink)),
+            stage_axis)
+        return ysink
+
+    return shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(stage_axis), P()),
+        out_specs=P(),
+        check_rep=False)
+
+
+def make_pipeline_loss(stage_fn: Callable, last_fn: Callable, mesh: Mesh,
+                       n_stages: int, n_micro: int,
+                       stage_axis: str = "stage"):
+    """Pipelined loss: stages 0..S-1 run stage_fn; ``last_fn(y, target)``
+    maps final activations to per-microbatch scalar loss (e.g. logits + CE).
+
+    Returns loss_fn(stage_params, last_params, x_micro, tgt_micro) -> scalar.
+    Differentiable end-to-end (GPipe backward via autodiff).
+    """
+    pipe = gpipe(stage_fn, mesh, n_stages, n_micro, stage_axis)
+
+    def loss(stage_params, last_params, x_micro, tgt_micro):
+        y = pipe(stage_params, x_micro)             # (n_micro, mb, ...)
+        per = jax.vmap(lambda yy, tt: last_fn(last_params, yy, tt))(
+            y, tgt_micro)
+        return jnp.mean(per)
+
+    return loss
+
+
+def microbatch(x: jnp.ndarray, n_micro: int) -> jnp.ndarray:
+    """(B, ...) -> (n_micro, B/n_micro, ...)."""
+    B = x.shape[0]
+    assert B % n_micro == 0, (B, n_micro)
+    return x.reshape((n_micro, B // n_micro) + x.shape[1:])

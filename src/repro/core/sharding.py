@@ -1,0 +1,311 @@
+"""Sharding plan: logical-axis partition rules -> PartitionSpecs (paper C1/C8).
+
+Megatron-style tensor parallelism over the ``model`` mesh axis, batch over
+``data`` (and ``pod``), MoE experts over ``model`` (expert parallelism),
+optimizer state additionally ZeRO-1 sharded over the dp axes, activations
+optionally sequence-sharded over ``model`` (Megatron-SP).
+
+Every sharded dim is divisibility-guarded: if a dim does not divide evenly
+over its assigned axes the spec falls back to replication for that dim (this
+is what makes gemma3-1b's 4-head attention or batch=1 long-context decode
+lower cleanly — see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ArchConfig, ParallelConfig, ShapeConfig
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    mesh: Mesh
+    dp_axes: Tuple[str, ...]          # ('data',) or ('pod', 'data')
+    tp_axis: Optional[str]            # 'model' or None
+    seq_shard: bool = True            # Megatron-SP residual stream
+    zero1: bool = True
+    # dp_heavy (auto-planner, dense archs): batch shards over ALL mesh axes
+    # (model included); weights stay model-sharded for storage and are
+    # all-gathered at use (FSDP) — activations never reshard.
+    dp_heavy: bool = False
+
+    # -- helpers -----------------------------------------------------------
+
+    @property
+    def dp(self) -> Tuple[str, ...]:
+        return self.dp_axes
+
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        if self.dp_heavy and self.tp_axis is not None:
+            return self.dp_axes + (self.tp_axis,)
+        return self.dp_axes
+
+    def guard(self, spec: Sequence, shape: Sequence[int]) -> P:
+        """Drop sharding on any dim that does not divide evenly."""
+        out = []
+        for dim_spec, size in zip(spec, shape):
+            if dim_spec is None:
+                out.append(None)
+            elif size % _axis_size(self.mesh, dim_spec) == 0 and size > 0:
+                out.append(dim_spec)
+            else:
+                out.append(None)
+        return P(*out)
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # -- parameters ---------------------------------------------------------
+
+    def param_specs(self, cfg: ArchConfig, params_shape) -> Any:
+        """Pytree of PartitionSpec matching a params pytree (of arrays or
+        ShapeDtypeStructs)."""
+        M = self.tp_axis
+        q_ok = M is not None and cfg.num_heads % self.mesh.shape[M] == 0
+        kv_ok = M is not None and cfg.num_kv_heads % self.mesh.shape[M] == 0
+
+        # FSDP for expert weights: when the per-device expert bytes after
+        # EP sharding are still large (jamba: 1 expert/dev = 5.6GB), shard
+        # the d_ff dim over the dp axes too.  Weights are all-gathered at
+        # use; gradients accumulate *sharded* through the layer scan (the
+        # ZeRO-2 constraint alone cannot reach inside scan accumulators).
+        fsdp_experts = False
+        if cfg.is_moe and M is not None:
+            mats = 3 if cfg.mlp_gated else 2
+            n_moe_layers = sum(
+                1 for i in range(cfg.num_layers)
+                if i % cfg.moe_period == cfg.moe_period - 1)
+            expert_bytes = (n_moe_layers * cfg.num_experts * mats
+                            * cfg.d_model * cfg.d_ff * 2
+                            / max(self.mesh.shape[M], 1))
+            fsdp_experts = expert_bytes > 2e9
+
+        def rule(path, leaf) -> P:
+            names = [getattr(k, "key", getattr(k, "idx", None))
+                     for k in path]
+            names = [str(n) for n in names]
+            last = names[-1]
+            shape = leaf.shape
+            base: Tuple = ()
+            if "moe" in names:
+                dp = self.dp_axes if len(self.dp_axes) > 1 \
+                    else self.dp_axes[0]
+                if last == "router":
+                    base = (None, None)
+                elif fsdp_experts and last in ("wi", "wi_gate", "wi_up"):
+                    base = (M, None, dp)                # (E, d, f): f over dp
+                elif fsdp_experts and last == "wo":
+                    base = (M, dp, None)                # (E, f, d)
+                else:                                   # (E, din, dout)
+                    base = (M, None, None)
+            elif "mlp" in names or "cmix" in names:
+                if last in ("wi", "wi_gate", "wi_up", "Wk"):
+                    base = (None, M)
+                elif last in ("wo", "Wv"):
+                    base = (M, None)
+                elif last == "Wr":
+                    base = (None, None)
+                elif last == "mix":
+                    base = (None, None)
+                else:
+                    base = (None,) * 2
+            elif "tmix" in names:
+                if last in ("Wr", "Wk", "Wv", "Wg"):
+                    base = (None, M)
+                elif last == "Wo":
+                    base = (M, None)
+                elif last == "w_lora_b":
+                    base = (None, M)
+                elif last == "u":
+                    base = (M, None)
+                elif last in ("w_base",):
+                    base = (M,)
+                elif last in ("scale", "bias"):
+                    base = (None,)
+                elif last == "mix":
+                    base = (None, None)
+                else:
+                    base = (None,) * len(shape)
+            elif "m" in names or "mamba" in names:      # mamba inner
+                if last in ("in_proj",):
+                    base = (None, M)
+                elif last in ("conv_w",):
+                    base = (None, M)
+                elif last in ("x_proj", "A_log", "out_proj"):
+                    base = (M, None)
+                elif last in ("D", "dt_bias"):
+                    base = (M,)
+                elif last in ("scale", "bias"):
+                    base = (None,)
+                else:
+                    base = (None,) * len(shape)
+            elif "attn" in names or "cross" in names:
+                if last == "wq":
+                    base = (None, M if q_ok else None)
+                elif last in ("wk", "wv"):
+                    base = (None, M if kv_ok else None)
+                elif last == "wo":
+                    base = (M if q_ok else None, None)
+                else:                                   # norms, q/k_norm
+                    base = (None,) * len(shape)
+            elif last == "embed":
+                base = (M, None)
+            elif last == "lm_head":
+                base = (None, M)
+            elif last == "dec_pos":
+                base = (None, None)
+            else:                                       # final norms etc.
+                base = (None,) * len(shape)
+            # prepend Nones for stacked layer/period dims
+            full = (None,) * (len(shape) - len(base)) + tuple(base)
+            return self.guard(full, shape)
+
+        return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+    # -- optimizer state (ZeRO-1) --------------------------------------------
+
+    def zero1_spec(self, pspec: P, shape: Sequence[int]) -> P:
+        """Add dp axes to the largest unsharded, divisible dim (ZeRO-1)."""
+        if not self.zero1:
+            return pspec
+        dp_n = _axis_size(self.mesh, self.dp_axes)
+        spec = list(pspec) + [None] * (len(shape) - len(pspec))
+        # already dp-sharded (e.g. FSDP expert weights): nothing to add
+        used = set()
+        for s in spec:
+            if s is None:
+                continue
+            used.update((s,) if isinstance(s, str) else s)
+        if used & set(self.dp_axes):
+            return pspec
+        best, best_size = -1, 0
+        for i, (sp, size) in enumerate(zip(spec, shape)):
+            if sp is None and size % dp_n == 0 and size > best_size:
+                best, best_size = i, size
+        if best >= 0:
+            spec[best] = self.dp_axes if len(self.dp_axes) > 1 \
+                else self.dp_axes[0]
+        return P(*spec)
+
+    def opt_specs(self, cfg: ArchConfig, params_shape) -> Any:
+        pspecs = self.param_specs(cfg, params_shape)
+        return jax.tree.map(
+            lambda sp, leaf: self.zero1_spec(sp, leaf.shape),
+            pspecs, params_shape)
+
+    # -- batches -------------------------------------------------------------
+
+    def batch_specs(self, batch_shape) -> Any:
+        def rule(path, leaf) -> P:
+            shape = leaf.shape
+            if len(shape) == 0:
+                return P()
+            base = (self.batch_axes,) + (None,) * (len(shape) - 1)
+            return self.guard(base, shape)
+        return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+    # -- decode caches ---------------------------------------------------------
+
+    def cache_specs(self, cfg: ArchConfig, cache_shape) -> Any:
+        M = self.tp_axis
+
+        def rule(path, leaf) -> P:
+            names = [str(getattr(k, "key", getattr(k, "idx", ""))) for k in path]
+            last = names[-1]
+            shape = leaf.shape
+            nd = len(shape)
+            if last in ("k", "v", "cross_k", "cross_v") or \
+                    (len(names) >= 2 and names[-2] in ("k", "v")):
+                # (..., B, S, Hk, D): batch->dp, seq->model
+                if self.dp_heavy:
+                    base = (None,) * (nd - 4) + (self.batch_axes, None,
+                                                 None, None)
+                else:
+                    base = (None,) * (nd - 4) + (self.dp_axes, M, None, None)
+            elif last == "len":
+                base = (self.dp_axes,)
+            elif last in ("conv",):                    # (..., B, K-1, d_in)
+                base = (None,) * (nd - 3) + (self.dp_axes, None, M)
+            elif last in ("ssm",):                     # (..., B, d_in, N)
+                base = (None,) * (nd - 3) + (self.dp_axes, M, None)
+            elif last == "wkv":                        # (L, B, H, hs, hs)
+                base = (None,) * (nd - 4) + (self.dp_axes, M, None, None)
+            elif last in ("tmix_last", "cmix_last"):   # (L, B, d)
+                base = (None,) * (nd - 2) + (self.dp_axes, M)
+            else:
+                base = (None,) * nd
+            return self.guard(base, shape)
+
+        return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+    # -- activation hooks ------------------------------------------------------
+
+    def constrain(self, x: jnp.ndarray, name: str) -> jnp.ndarray:
+        M = self.tp_axis
+        if M is None:
+            return x
+        shape = x.shape
+        if name == "residual" and x.ndim == 3:
+            if self.dp_heavy:
+                spec = self.guard((self.batch_axes, None, None), shape)
+            else:
+                seq = M if self.seq_shard else None
+                spec = self.guard((self.dp_axes, seq, None), shape)
+        elif name in ("heads", "kv_heads") and x.ndim == 4:
+            # heads over model when divisible; otherwise REPLICATE over
+            # model (Megatron GQA rule: kv replicated tp/kv ways) — mixing
+            # head-sharded q with seq-sharded kv causes involuntary remats.
+            if self.dp_heavy:
+                spec = self.guard((self.batch_axes, None, None, None), shape)
+            else:
+                spec = self.guard((self.dp_axes, None, M, None), shape)
+        elif name == "logits" and x.ndim == 3:
+            spec = self.guard(
+                (self.batch_axes, None, None) if self.dp_heavy
+                else (self.dp_axes, None, M), shape)
+        elif name == "moe_groups" and x.ndim == 3:
+            spec = self.guard((self.dp_axes, None, None), shape)
+        elif name == "embed_onehot" and x.ndim == 2:
+            # (flat tokens, V): keep tokens batch-sharded -> psum contraction
+            spec = self.guard((self.batch_axes, None), shape)
+        elif name == "embed_grad" and x.ndim == 2:
+            # (V, d): match the ZeRO-2 gradient layout
+            spec = self.guard((M, self.dp_axes), shape)
+        elif name == "expert_stack" and x.ndim == 4:
+            # (groups, E, C, d) — groups over dp, experts over model (EP)
+            spec = self.guard((self.dp_axes, M, None, None), shape)
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.named(spec))
+
+
+def make_plan(mesh: Mesh, pcfg: ParallelConfig,
+              seq_shard: Optional[bool] = None,
+              dp_heavy: bool = False) -> ShardingPlan:
+    axes = set(mesh.axis_names)
+    dp_axes = tuple(a for a in ("pod", "data") if a in axes)
+    tp_axis = "model" if "model" in axes and mesh.shape["model"] > 1 else \
+        ("model" if "model" in axes else None)
+    return ShardingPlan(
+        mesh=mesh,
+        dp_axes=dp_axes or ("data",),
+        tp_axis=tp_axis,
+        seq_shard=pcfg.seq_shard_activations if seq_shard is None else seq_shard,
+        zero1=True,
+        dp_heavy=dp_heavy,
+    )

@@ -1,0 +1,60 @@
+"""Host-side data pipeline: synthetic batch sources, device placement with
+the plan's shardings, and a background prefetcher (overlap host data prep
+with device compute).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def synthetic_lm_batches(vocab: int, batch: int, seq: int, steps: int,
+                         seed: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+    """Deterministic synthetic LM stream (zipf-ish token distribution)."""
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        ranks = rng.zipf(1.3, size=(batch, seq + 1))
+        tokens = np.minimum(ranks - 1, vocab - 1).astype(np.int32)
+        yield {"tokens": tokens[:, :-1],
+               "targets": tokens[:, 1:],
+               "mask": np.ones((batch, seq), np.float32)}
+
+
+def place_batch(batch: Dict[str, np.ndarray], shardings: Optional[Any] = None
+                ) -> Dict[str, jnp.ndarray]:
+    """Host numpy -> device arrays with the plan's batch shardings."""
+    if shardings is None:
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+    return jax.tree.map(
+        lambda v, s: jax.device_put(jnp.asarray(v), s), batch, shardings)
+
+
+class Prefetcher:
+    """Background-thread prefetch of N batches (host->device overlap)."""
+
+    def __init__(self, it: Iterator, size: int = 2,
+                 place: Callable = place_batch, shardings=None):
+        self._q: "queue.Queue" = queue.Queue(maxsize=size)
+        self._done = object()
+
+        def worker():
+            try:
+                for item in it:
+                    self._q.put(place(item, shardings))
+            finally:
+                self._q.put(self._done)
+
+        self._t = threading.Thread(target=worker, daemon=True)
+        self._t.start()
+
+    def __iter__(self):
+        while True:
+            item = self._q.get()
+            if item is self._done:
+                return
+            yield item

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: fused AdamW update.
+
+Reads p, g, m, v once from HBM and writes p', m', v' once — 7 streams total
+versus ~12+ for the unfused elementwise graph, a pure memory-roofline win.
+Traced hyperparameters (lr schedule, bias corrections) arrive as a (1, 8)
+f32 operand pinned to block (0, 0).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(hyper_ref, p_ref, g_ref, m_ref, v_ref, p_out, m_out, v_out):
+    h = hyper_ref[0]
+    lr, b1, b2, eps, wd, bc1, bc2 = h[0], h[1], h[2], h[3], h[4], h[5], h[6]
+    p = p_ref[...]
+    g = g_ref[...]
+    m = b1 * m_ref[...] + (1 - b1) * g
+    v = b2 * v_ref[...] + (1 - b2) * g * g
+    mh = m / bc1
+    vh = v / bc2
+    p_out[...] = p - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p)
+    m_out[...] = m
+    v_out[...] = v
+
+
+def adamw_update(p, g, m, v, *, lr, b1, b2, eps, wd, bc1, bc2,
+                 block: int = 2048, interpret=False):
+    """All of p, g, m, v: flat (N,) f32 (N % 8 == 0).  Returns (p', m', v')."""
+    N = p.shape[0]
+    rows = 8
+    M = N // rows
+    block = min(block, M)
+    assert M % block == 0, (N, block)
+    nb = M // block
+    hyper = jnp.stack([jnp.asarray(x, jnp.float32)
+                       for x in (lr, b1, b2, eps, wd, bc1, bc2, 0.0)])[None]
+
+    def spec():
+        return pl.BlockSpec((rows, block), lambda i: (0, i))
+
+    args = [x.reshape(rows, M) for x in (p, g, m, v)]
+    p1, m1, v1 = pl.pallas_call(
+        _kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, 8), lambda i: (0, 0)),
+                  spec(), spec(), spec(), spec()],
+        out_specs=[spec(), spec(), spec()],
+        out_shape=[jax.ShapeDtypeStruct((rows, M), jnp.float32)] * 3,
+        interpret=interpret,
+    )(hyper, *args)
+    return p1.reshape(N), m1.reshape(N), v1.reshape(N)

@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: fused MoE router — softmax + iterative top-k with
+first-occurrence tie-break (paper §III.A.c).  One pass over the (tokens x
+experts) logits block; E <= 128 fits a single lane tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(logits_ref, gates_ref, idx_ref, probs_ref, *, k: int, E: int):
+    x = logits_ref[...].astype(jnp.float32)                 # (bt, E)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    probs_ref[...] = probs
+
+    bt = x.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bt, E), 1)
+    tmp = probs
+    gsum = jnp.zeros((bt,), jnp.float32)
+    gates = []
+    for j in range(k):
+        mj = jnp.max(tmp, axis=-1)                          # (bt,)
+        is_max = tmp == mj[:, None]
+        idxj = jnp.min(jnp.where(is_max, iota, E), axis=-1)
+        idx_ref[:, j] = idxj
+        gates.append(mj)
+        gsum = gsum + mj
+        tmp = jnp.where(iota == idxj[:, None], -jnp.inf, tmp)
+    gsum = jnp.maximum(gsum, 1e-9)
+    for j in range(k):
+        gates_ref[:, j] = gates[j] / gsum
+
+
+def moe_router(logits: jnp.ndarray, k: int, block_t: int = 1024,
+               interpret=False):
+    """logits (T, E) -> (gates (T,k), idx (T,k) i32, probs (T,E))."""
+    T, E = logits.shape
+    block_t = min(block_t, T)
+    pad = (-T) % block_t
+    if pad:
+        logits = jnp.pad(logits, ((0, pad), (0, 0)))
+    Tp = T + pad
+    nb = Tp // block_t
+    gates, idx, probs = pl.pallas_call(
+        functools.partial(_kernel, k=k, E=E),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block_t, E), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((block_t, k), lambda i: (i, 0)),
+                   pl.BlockSpec((block_t, k), lambda i: (i, 0)),
+                   pl.BlockSpec((block_t, E), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((Tp, k), jnp.float32),
+                   jax.ShapeDtypeStruct((Tp, k), jnp.int32),
+                   jax.ShapeDtypeStruct((Tp, E), jnp.float32)],
+        interpret=interpret,
+    )(logits)
+    return gates[:T], idx[:T], probs[:T]

@@ -1,0 +1,123 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On a CPU backend (this container) kernels run in ``interpret=True`` mode so
+they are validated end-to-end; on TPU they compile natively.  ``impl`` can
+force ``"ref"`` (pure-jnp oracle) — the default for *lowering* paths where a
+clean HLO matters (dry-run roofline) is chosen by the caller.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fused_adamw as _adamw
+from repro.kernels import wkv6 as _wkv6
+from repro.kernels import flash_attention as _flash
+from repro.kernels import grad_compress as _gc
+from repro.kernels import moe_router as _router
+from repro.kernels import ref
+from repro.kernels import topk_sparsify as _topk
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+# -- flash attention ---------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("causal", "window", "softmax_scale",
+                                   "block_q", "block_k", "impl"))
+def flash_attention_bhsd(q, k, v, *, causal=True, window=0,
+                         softmax_scale=None, block_q=128, block_k=128,
+                         impl="kernel"):
+    """Layout (B, H, S, D)."""
+    if impl == "ref":
+        return ref.flash_attention(q, k, v, causal=causal, window=window,
+                                   softmax_scale=softmax_scale)
+    return _flash.flash_attention(q, k, v, causal=causal, window=window,
+                                  softmax_scale=softmax_scale,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softmax_scale=None,
+                    block_q=128, block_k=128, impl="kernel"):
+    """Layout (B, S, H, D) — the model-stack layout."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                             softmax_scale=softmax_scale, block_q=block_q,
+                             block_k=block_k, impl=impl)
+    return o.transpose(0, 2, 1, 3)
+
+
+# -- MoE router ---------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k", "impl"))
+def moe_router(logits, k: int, impl="kernel"):
+    if impl == "ref":
+        return ref.moe_router(logits, k)
+    return _router.moe_router(logits, k, interpret=_interpret())
+
+
+# -- 1-bit compression ---------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("block", "impl"))
+def onebit_quantize(g: jnp.ndarray, block: int = 512, impl="kernel"):
+    """Flat (N,) f32, N % (8*block) == 0 -> (packed (N/8,) u8, scales)."""
+    g2d = g.reshape(8, g.shape[0] // 8)
+    if impl == "ref":
+        return ref.onebit_quantize(g2d, block)
+    return _gc.onebit_quantize(g2d, block, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("block", "impl"))
+def onebit_dequantize(packed, scales, block: int = 512, impl="kernel"):
+    if impl == "ref":
+        g2d = ref.onebit_dequantize(packed, scales, block)
+    else:
+        g2d = _gc.onebit_dequantize(packed, scales, block,
+                                    interpret=_interpret())
+    return g2d.reshape(-1)
+
+
+# -- top-k sparsification -------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k", "block", "impl"))
+def topk_sparsify(g: jnp.ndarray, k: int, block: int = 2048, impl="kernel"):
+    """Flat (N,) f32 -> (kept (N,), residual (N,)); block-local top-k."""
+    N = g.shape[0]
+    assert N % block == 0, (N, block)
+    x2d = g.reshape(N // block, block)
+    if impl == "ref":
+        kept, resid = ref.topk_sparsify(x2d, k)
+    else:
+        kept, resid = _topk.topk_sparsify(x2d, k, interpret=_interpret())
+    return kept.reshape(N), resid.reshape(N)
+
+
+# -- fused AdamW -----------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("b1", "b2", "eps", "wd", "impl"))
+def adamw_update(p, g, m, v, lr, bc1, bc2, *, b1=0.9, b2=0.95, eps=1e-8,
+                 wd=0.1, impl="kernel"):
+    if impl == "ref":
+        return ref.adamw_update(p, g, m, v, lr=lr, b1=b1, b2=b2, eps=eps,
+                                wd=wd, bc1=bc1, bc2=bc2)
+    return _adamw.adamw_update(p, g, m, v, lr=lr, b1=b1, b2=b2, eps=eps,
+                               wd=wd, bc1=bc1, bc2=bc2,
+                               interpret=_interpret())
+
+
+# -- chunked WKV6 ---------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("chunk", "impl"))
+def wkv6_chunked(r, k, v, w, u, chunk: int = 32, impl="kernel"):
+    """r,k,v,w: (B, H, T, hs) -> (B, H, T, hs); zero initial state."""
+    if impl == "ref":
+        return ref.wkv6_chunked(r, k, v, w, u)
+    return _wkv6.wkv6_chunked(r, k, v, w, u, chunk=chunk,
+                              interpret=_interpret())

@@ -1,0 +1,47 @@
+"""Pallas TPU kernel for block-local top-k gradient sparsification with
+error-feedback residual (paper Eq. 11).
+
+Semantics (shared with ``ref.topk_sparsify``): within each block keep every
+element with |x| >= t where t is the k-th largest magnitude (ties included);
+residual = x - kept.  The k-th magnitude is found by k iterations of
+max-and-mask on the VPU — k is small (<= 64) in practice.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, kept_ref, resid_ref, *, k: int):
+    x = x_ref[...]                                          # (1, block)
+    a = jnp.abs(x)
+
+    def body(_, carry):
+        tmp, thr = carry
+        m = jnp.max(tmp)
+        tmp = jnp.where(tmp >= m, -1.0, tmp)
+        return tmp, m
+
+    _, t = jax.lax.fori_loop(0, k, body, (a, jnp.float32(jnp.inf)))
+    kept = jnp.where(a >= t, x, 0.0)
+    kept_ref[...] = kept
+    resid_ref[...] = x - kept
+
+
+def topk_sparsify(x2d: jnp.ndarray, k: int, interpret=False):
+    """x2d: (nb, block) f32 -> (kept, residual) same shape."""
+    nb, block = x2d.shape
+    kept, resid = pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, block), lambda i: (i, 0)),
+                   pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, block), jnp.float32),
+                   jax.ShapeDtypeStruct((nb, block), jnp.float32)],
+        interpret=interpret,
+    )(x2d)
+    return kept, resid

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: chunked WKV6 (rwkv6 time-mix recurrence).
+
+The §Perf H1 hillclimb showed the WKV state scan is the SSM family's
+hot-spot; this kernel keeps the (hs, hs) state AND the (C, C, hs) intra-
+chunk decay tensor in VMEM across the chunk loop — HBM traffic is just the
+r/k/v/w streams and one output write.  All decay exponents are <= 0 (exact,
+no overflow; see models/ssm._wkv6_chunked for the math).
+
+Grid: (B, H, T/C) with the chunk axis "arbitrary" (sequential) carrying the
+state in VMEM scratch.  Tiles: (C, hs) streams, C=32..128, hs=64.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_scr, *, chunk: int,
+            hs: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0, 0].astype(jnp.float32)              # (C, hs)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)                 # (hs,)
+
+    lw = jnp.log(jnp.maximum(w, 1e-30))
+    cum = jnp.cumsum(lw, axis=0)                     # (C, hs), <= 0
+    cum_prev = cum - lw
+    # intra-chunk decay tensor, strictly causal (s < t): VMEM-resident
+    expo = cum_prev[:, None, :] - cum[None, :, :]    # (C, C, hs)
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+           > jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    d = jnp.where(tri[:, :, None], jnp.exp(jnp.minimum(expo, 0.0)), 0.0)
+    m = jnp.sum(r[:, None, :] * d * k[None, :, :], axis=-1)   # (C, C)
+    o = jax.lax.dot_general(m, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # cross-chunk state contribution
+    o += jax.lax.dot_general(r * jnp.exp(cum_prev), s_scr[...],
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    # bonus (current token)
+    o += jnp.sum(r * k * u[None, :], axis=-1, keepdims=True) * v
+    # state update: S' = diag(exp(cum_C)) S + (k * exp(cum_C - cum))^T v
+    cum_c = cum[-1]                                  # (hs,)
+    k2 = k * jnp.exp(cum_c[None, :] - cum)
+    s_scr[...] = (jnp.exp(cum_c)[:, None] * s_scr[...]
+                  + jax.lax.dot_general(k2, v, (((0,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32))
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+def wkv6_chunked(r, k, v, w, u, *, chunk: int = 32, interpret=False):
+    """r,k,v,w: (B, H, T, hs); w decay in (0,1); u: (H, hs) -> (B, H, T, hs).
+
+    Zero initial state (prefill/train); T % chunk == 0.
+    """
+    B, H, T, hs = r.shape
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    grid = (B, H, nc)
+    kernel = functools.partial(_kernel, chunk=chunk, hs=hs, n_chunks=nc)
+
+    def spec():
+        return pl.BlockSpec((1, 1, chunk, hs), lambda b, h, c: (b, h, c, 0))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec(), spec(), spec(), spec(),
+                  pl.BlockSpec((1, hs), lambda b, h, c: (h, 0))],
+        out_specs=spec(),
+        out_shape=jax.ShapeDtypeStruct((B, H, T, hs), r.dtype),
+        scratch_shapes=[pltpu.VMEM((hs, hs), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return out

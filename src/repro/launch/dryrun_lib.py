@@ -1,0 +1,236 @@
+"""Dry-run machinery: build, lower and compile every (arch x shape x mesh)
+cell without allocating real arrays (ShapeDtypeStruct in, compiled HLO out).
+
+Kept separate from ``dryrun.py`` (which owns the XLA_FLAGS 512-device env
+setup) so tests and benchmarks can reuse it on small host meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.analysis import hlo_cost
+from repro.analysis import roofline as roofline_mod
+from repro.config import (ArchConfig, ParallelConfig, ShapeConfig, SHAPES,
+                          cell_is_runnable, get_arch, list_archs,
+                          HBM_BYTES_PER_CHIP)
+from repro.core.hybrid import Plan, auto_plan
+from repro.core.sharding import ShardingPlan
+from repro.models import model_zoo, transformer as tf
+from repro.models.transformer import ModelCtx
+from repro.optimizer import adamw
+from repro.runtime import trainer as trainer_mod
+from repro.config import TrainConfig
+
+
+def _named_tree(sh: ShardingPlan, spec_tree):
+    return jax.tree.map(sh.named, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _kv_constrainer(sh: ShardingPlan):
+    """Output-sharding hook for prefill KV trees."""
+    M = sh.tp_axis
+
+    def one(x):
+        if not hasattr(x, "ndim"):
+            return x
+        if x.ndim == 5:        # (L, B, S, Hk, D)
+            spec = sh.guard((None, sh.dp_axes, M, None, None), x.shape)
+        elif x.ndim == 4:      # (B, S, Hk, D)
+            spec = sh.guard((sh.dp_axes, M, None, None), x.shape)
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(x, sh.named(spec))
+
+    return lambda tree: jax.tree.map(one, tree)
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+               pcfg: ParallelConfig = ParallelConfig(),
+               tcfg: TrainConfig = TrainConfig(),
+               plan: Optional[Plan] = None):
+    """Returns (lower_fn) -> lowered; deferred so callers control timing."""
+    plan = plan or auto_plan(cfg, mesh, shape, pcfg)
+    sh = plan.sharding
+    ctx = ModelCtx(remat=plan.remat, constrain=sh.constrain)
+    bundle = model_zoo.build(cfg, ctx)
+
+    params_shape = bundle.init_eval_shape()
+    param_specs = sh.param_specs(cfg, params_shape)
+    param_sh = _named_tree(sh, param_specs)
+
+    if shape.kind == "train":
+        opt_shape = jax.eval_shape(adamw.init_opt_state, params_shape)
+        step, jitted, shardings_for = trainer_mod.make_hybrid_train_step(
+            cfg, plan, tcfg)
+        batch_shape = model_zoo.batch_specs(cfg, shape)
+        psh, osh, bsh = shardings_for(params_shape, batch_shape)
+
+        def lower():
+            return jax.jit(step, in_shardings=(psh, osh, bsh),
+                           out_shardings=(psh, osh, None),
+                           donate_argnums=(0, 1)).lower(
+                               params_shape, opt_shape, batch_shape)
+        return lower, plan
+
+    if shape.kind == "prefill":
+        batch_shape = model_zoo.batch_specs(cfg, shape)
+        bsh = _named_tree(sh, sh.batch_specs(batch_shape))
+        kv_con = _kv_constrainer(sh)
+
+        def prefill_fn(params, batch):
+            logits, kvs = bundle.prefill(params, batch)
+            return logits, kv_con(kvs)
+
+        def lower():
+            return jax.jit(prefill_fn, in_shardings=(param_sh, bsh)).lower(
+                params_shape, batch_shape)
+        return lower, plan
+
+    # decode
+    specs = model_zoo.decode_specs(cfg, shape)
+    cache_shape = specs["cache"]
+    cache_sh = _named_tree(sh, sh.cache_specs(cfg, cache_shape))
+    tok_sh = sh.named(sh.guard((sh.dp_axes, None),
+                               specs["tokens"].shape))
+    has_pos = "positions" in specs
+
+    def decode_fn(params, cache, tokens, positions=None):
+        return bundle.decode(params, cache, tokens, positions=positions)
+
+    def lower():
+        if has_pos:
+            pos_sh = sh.named(sh.guard((sh.dp_axes, None, None),
+                                       specs["positions"].shape))
+            return jax.jit(
+                decode_fn, in_shardings=(param_sh, cache_sh, tok_sh, pos_sh),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,)).lower(
+                    params_shape, cache_shape, specs["tokens"],
+                    specs["positions"])
+        return jax.jit(
+            decode_fn, in_shardings=(param_sh, cache_sh, tok_sh),
+            out_shardings=(None, cache_sh),
+            donate_argnums=(1,)).lower(
+                params_shape, cache_shape, specs["tokens"])
+    return lower, plan
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    status: str                      # ok | skipped | error
+    lower_s: float = 0.0
+    compile_s: float = 0.0
+    roofline: Optional[Dict] = None
+    memory: Optional[Dict] = None
+    error: Optional[str] = None
+    notes: Tuple[str, ...] = ()
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def _find_dump(dump_dir: Optional[str], fn_name: str) -> Optional[str]:
+    """Newest post-SPMD dump (before all-reduce promotion / bf16
+    normalization — CPU-only passes that TPU would not run)."""
+    if not dump_dir:
+        return None
+    for stage in ("before_all-reduce-promotion",
+                  "before_float-normalization-bf16"):
+        pat = os.path.join(dump_dir, f"*jit_{fn_name}*{stage}.txt")
+        files = sorted(glob.glob(pat), key=os.path.getmtime)
+        if files:
+            return files[-1]
+    return None
+
+
+_KIND_FN = {"train": "step", "prefill": "prefill_fn", "decode": "decode_fn"}
+
+
+def run_cell(arch: str, shape_name: str, mesh: Mesh, mesh_name: str,
+             pcfg: ParallelConfig = ParallelConfig(),
+             keep_hlo_dir: Optional[str] = None,
+             dump_dir: Optional[str] = None) -> CellResult:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    if not cell_is_runnable(arch, shape_name):
+        return CellResult(arch, shape_name, mesh_name, "skipped",
+                          notes=("long_500k requires sub-quadratic attention "
+                                 "(DESIGN.md §5)",))
+    try:
+        lower_fn, plan = build_cell(cfg, shape, mesh, pcfg)
+        t0 = time.perf_counter()
+        lowered = lower_fn()
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t2 = time.perf_counter()
+        dump = _find_dump(dump_dir, _KIND_FN[shape.kind])
+        if dump:
+            with open(dump) as f:
+                hlo = f.read()
+            hlo_src = "pre-normalization-dump"
+        else:                       # fallback: f32-promoted compiled module
+            hlo = compiled.as_text()
+            hlo_src = "compiled-module"
+        costs = hlo_cost.analyze(hlo, mesh.size)
+        rl = roofline_mod.from_costs(cfg, shape, mesh_name, mesh.size,
+                                     costs, compiled.memory_analysis())
+        ma = compiled.memory_analysis()
+        mem = {"argument_gb": ma.argument_size_in_bytes / 1e9,
+               "output_gb": ma.output_size_in_bytes / 1e9,
+               "temp_gb": ma.temp_size_in_bytes / 1e9,
+               "alias_gb": ma.alias_size_in_bytes / 1e9,
+               "peak_est_gb": (ma.argument_size_in_bytes
+                               + ma.output_size_in_bytes
+                               + ma.temp_size_in_bytes
+                               - ma.alias_size_in_bytes) / 1e9,
+               # CPU backend promotes bf16 temps to f32; TPU temps are
+               # roughly half (args/outputs keep their true dtypes)
+               "peak_bf16adj_gb": (ma.argument_size_in_bytes
+                                   + ma.output_size_in_bytes
+                                   + ma.temp_size_in_bytes / 2
+                                   - ma.alias_size_in_bytes) / 1e9,
+               "fits_16g": (ma.argument_size_in_bytes
+                            + ma.output_size_in_bytes
+                            + ma.temp_size_in_bytes / 2
+                            - ma.alias_size_in_bytes)
+               < HBM_BYTES_PER_CHIP}
+        if keep_hlo_dir:
+            os.makedirs(keep_hlo_dir, exist_ok=True)
+            with open(os.path.join(
+                    keep_hlo_dir,
+                    f"{arch}_{shape_name}_{mesh_name}.hlo.txt"), "w") as f:
+                f.write(hlo)
+        return CellResult(arch, shape_name, mesh_name, "ok",
+                          lower_s=t1 - t0, compile_s=t2 - t1,
+                          roofline=rl.to_dict(), memory=mem,
+                          notes=plan.notes + (f"hlo:{hlo_src}",))
+    except Exception as e:  # noqa: BLE001 — cell isolation by design
+        return CellResult(arch, shape_name, mesh_name, "error",
+                          error=f"{type(e).__name__}: {e}\n"
+                                f"{traceback.format_exc(limit=8)}")
+
+
+def result_path(out_dir: str, arch: str, shape: str, mesh_name: str) -> str:
+    return os.path.join(out_dir, f"{arch}__{shape}__{mesh_name}.json")
+
+
+def save_result(res: CellResult, out_dir: str) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    p = result_path(out_dir, res.arch, res.shape, res.mesh)
+    with open(p, "w") as f:
+        json.dump(res.to_dict(), f, indent=1)
+    return p

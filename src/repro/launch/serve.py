@@ -1,0 +1,62 @@
+"""Serving launcher: batched decode benchmark for any --arch.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
+      --batch 8 --new-tokens 32
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import get_arch, list_archs, reduced
+from repro.models import transformer as tf
+from repro.models.transformer import ModelCtx
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b", choices=list_archs())
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = dataclasses.replace(reduced(cfg), dtype="float32")
+    ctx = ModelCtx(attn_chunk=64, mamba_chunk=16, moe_group=64)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    cache = tf.init_cache(cfg, args.batch, args.cache_len)
+    if cfg.encoder_layers:
+        frames = jnp.zeros((args.batch, cfg.encoder_frames, cfg.d_model),
+                           jnp.dtype(cfg.dtype))
+        ck, cv = tf.whisper_prefill_cross(cfg, params, frames, ctx)
+        cache["cross_k"], cache["cross_v"] = ck, cv
+
+    decode = jax.jit(lambda p, c, t, pos=None: tf.decode_step(
+        cfg, p, c, t, ctx, positions=pos))
+    tok = jnp.ones((args.batch, 1), jnp.int32)
+    pos = (jnp.zeros((args.batch, 1, 3), jnp.int32)
+           if cfg.pos_type == "mrope" else None)
+
+    # warmup + timed loop
+    logits, cache = decode(params, cache, tok, pos)
+    jax.block_until_ready(logits)
+    t0 = time.perf_counter()
+    for _ in range(args.new_tokens):
+        logits, cache = decode(params, cache, tok, pos)
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    jax.block_until_ready(logits)
+    dt = time.perf_counter() - t0
+    tps = args.batch * args.new_tokens / dt
+    print(f"{cfg.name}: {tps:.1f} tokens/s (host CPU), "
+          f"{dt / args.new_tokens * 1e3:.1f} ms/step at batch {args.batch}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,326 @@
+"""Attention: GQA with causal / sliding-window masking.
+
+Three implementations share one math contract:
+
+* ``naive_attention``  — O(S^2) materialized scores; test oracle only.
+* ``chunked_attention``— flash-style online softmax over KV chunks via
+  ``lax.scan``; this is what gets *lowered* (dry-run + CPU runs).  Its HLO has
+  block-sized intermediates, so roofline memory terms reflect a flash
+  implementation rather than an S^2 score tensor.
+* ``kernels.flash_attention`` — the Pallas TPU kernel (same math, MXU tiling),
+  validated against ``naive_attention`` in interpret mode.
+
+Layouts: q (B, Sq, H, D); k/v (B, Sk, Hkv, D).  GQA is computed group-wise
+without materializing repeated KV heads.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _grad_cast(dtype_str: str, x):
+    """Identity with a cotangent dtype barrier: the f32 softmax internals
+    of attention otherwise leak f32 cotangents into the seq-gather
+    collectives (2x wire bytes vs the bf16 primal)."""
+    return x
+
+
+def _grad_cast_fwd(dtype_str, x):
+    return x, None
+
+
+def _grad_cast_bwd(dtype_str, _, g):
+    return (g.astype(jnp.dtype(dtype_str)),)
+
+
+_grad_cast.defvjp(_grad_cast_fwd, _grad_cast_bwd)
+
+
+def grad_dtype_barrier(x):
+    return _grad_cast(str(x.dtype), x)
+
+
+def _mask(pos_q, pos_k, *, causal: bool, window: int, kv_len=None):
+    """Boolean mask (..., Sq, Sk): True = attend."""
+    pq = pos_q[..., :, None]
+    pk = pos_k[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(pq.shape, pk.shape), bool)
+    if causal:
+        m &= pk <= pq
+    if window > 0:
+        m &= pk > pq - window
+    if kv_len is not None:
+        m &= pk < kv_len[..., None, None]
+    return m
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    kv_len=None, softmax_scale=None):
+    """Reference implementation. q:(B,Sq,H,D) k,v:(B,Sk,Hk,D)."""
+    B, Sq, H, D = q.shape
+    _, Sk, Hk, _ = k.shape
+    G = H // Hk
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    qg = q.reshape(B, Sq, Hk, G, D)
+    # MXU semantics: low-precision operands, f32 accumulation
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    pos_q = q_offset + jnp.arange(Sq)
+    pos_k = jnp.arange(Sk)
+    m = _mask(pos_q, pos_k, causal=causal, window=window,
+              kv_len=kv_len)                                 # (Sq,Sk) or (B,Sq,Sk)
+    while m.ndim < scores.ndim:
+        m = jnp.expand_dims(m, -3 if m.ndim >= 3 else 0)     # broadcast over h,g
+    scores = jnp.where(m, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                      kv_len=None, chunk=1024, softmax_scale=None):
+    """Flash-style attention: lax.scan over KV chunks with running (m, l, acc).
+
+    Memory high-water per step is O(Sq * chunk) instead of O(Sq * Sk).
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, Hk, _ = k.shape
+    G = H // Hk
+    chunk = min(chunk, Sk)
+    if Sk % chunk:                                           # pad KV to chunk multiple
+        pad = chunk - Sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_len = jnp.full((B,), Sk, jnp.int32) if kv_len is None else kv_len
+        Sk = Sk + pad
+    n_chunks = Sk // chunk
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+
+    qg = q.reshape(B, Sq, Hk, G, D)
+    pos_q = q_offset + jnp.arange(Sq)
+    kc = k.reshape(B, n_chunks, chunk, Hk, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, Hk, D).transpose(1, 0, 2, 3, 4)
+
+    # flash-attention semantics in the backward too: the step is
+    # rematerialized, so per-chunk score/softmax tensors are recomputed
+    # instead of stacked into an (n_chunks, ..., Sq, chunk) == O(S^2) buffer.
+    @jax.checkpoint
+    def step(carry, inp):
+        # NOTE: the kv position counter rides in the carry (not scan xs) so
+        # the mask is loop-variant — XLA cannot hoist + materialize a
+        # (n_chunks, B, .., Sq, chunk) mask tensor outside the loop.
+        m_run, l_run, acc, k0 = carry
+        kb, vb = inp                                         # (B,chunk,Hk,D)
+        pos_k = k0 + jnp.arange(chunk)
+        # MXU semantics: low-precision operands, f32 accumulation
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        msk = _mask(pos_q, pos_k, causal=causal, window=window,
+                    kv_len=kv_len)
+        if msk.ndim == 2:                                # (Sq, Ck)
+            msk = msk[None, None, None]
+        else:                                            # (B, Sq, Ck)
+            msk = msk[:, None, None]
+        s = jnp.where(msk, s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        # guard fully-masked rows (m_new == NEG_INF): exp(0)=1 but l stays 0-safe
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(msk, p, 0.0)
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(vb.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+        return (m_new, l_new, acc_new, k0 + chunk), None
+
+    m0 = jnp.full((B, Hk, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hk, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hk, G, D), jnp.float32)
+    (m_f, l_f, acc, _), _ = jax.lax.scan(
+        step, (m0, l0, a0, jnp.zeros((), jnp.int32)), (kc, vc))
+    l_f = jnp.maximum(l_f, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    out = acc / l_f
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style custom VJP: the autodiff backward of the chunked scan stacks
+# per-chunk softmax tensors and accumulates/reshards f32 carries.  This
+# hand-written backward recomputes s/p per chunk (true flash semantics),
+# emits dk/dv in the model dtype, and keeps only (out, lse) as residuals.
+# ---------------------------------------------------------------------------
+
+def _chunked_fwd_lse(q, k, v, *, causal, window, chunk, scale):
+    """Forward identical to chunked_attention; also returns lse (B,Hk,G,Sq)."""
+    B, Sq, H, D = q.shape
+    _, Sk, Hk, _ = k.shape
+    G = H // Hk
+    n_chunks = Sk // chunk
+    qg = q.reshape(B, Sq, Hk, G, D)
+    pos_q = jnp.arange(Sq)
+    kc = k.reshape(B, n_chunks, chunk, Hk, D).swapaxes(0, 1)
+    vc = v.reshape(B, n_chunks, chunk, Hk, D).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def step(carry, inp):
+        m_run, l_run, acc, k0 = carry
+        kb, vb = inp
+        pos_k = k0 + jnp.arange(chunk)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        msk = _mask(pos_q, pos_k, causal=causal, window=window)
+        msk = msk[None, None, None]
+        s = jnp.where(msk, s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.where(msk, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(vb.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+        return (m_new, l_new, acc, k0 + chunk), None
+
+    m0 = jnp.full((B, Hk, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hk, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hk, G, D), jnp.float32)
+    (m_f, l_f, acc, _), _ = jax.lax.scan(
+        step, (m0, l0, a0, jnp.zeros((), jnp.int32)), (kc, vc))
+    l_f = jnp.maximum(l_f, 1e-30)
+    out = (acc / l_f.transpose(0, 3, 1, 2)[..., None]).astype(q.dtype)
+    lse = m_f + jnp.log(l_f)                       # (B,Hk,G,Sq)
+    return out.reshape(B, Sq, H, D), lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, window, chunk, scale):
+    out, _ = _chunked_fwd_lse(q, k, v, causal=causal, window=window,
+                              chunk=chunk, scale=scale)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, window, chunk, scale):
+    out, lse = _chunked_fwd_lse(q, k, v, causal=causal, window=window,
+                                chunk=chunk, scale=scale)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, chunk, scale, res, do):
+    q, k, v, out, lse = res
+    B, Sq, H, D = q.shape
+    _, Sk, Hk, _ = k.shape
+    G = H // Hk
+    n_chunks = Sk // chunk
+    qg = q.reshape(B, Sq, Hk, G, D)
+    dog = do.reshape(B, Sq, Hk, G, D)
+    outg = out.reshape(B, Sq, Hk, G, D)
+    # delta = rowsum(do * out): (B,Hk,G,Sq) f32
+    delta = jnp.einsum("bqhgd,bqhgd->bhgq", dog.astype(jnp.float32),
+                       outg.astype(jnp.float32))
+    pos_q = jnp.arange(Sq)
+    kc = k.reshape(B, n_chunks, chunk, Hk, D).swapaxes(0, 1)
+    vc = v.reshape(B, n_chunks, chunk, Hk, D).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def step(carry, inp):
+        dq_acc, k0 = carry
+        kb, vb = inp
+        pos_k = k0 + jnp.arange(chunk)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        msk = _mask(pos_q, pos_k, causal=causal, window=window)[None, None,
+                                                                None]
+        p = jnp.where(msk, jnp.exp(s - lse[..., None]), 0.0)   # (B,Hk,G,Sq,Ck)
+        pb = p.astype(vb.dtype)
+        dv = jnp.einsum("bhgqk,bqhgd->bkhd", pb, dog,
+                        preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bqhgd,bkhd->bhgqk", dog, vb,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[..., None]) * scale               # f32
+        dsb = ds.astype(q.dtype)
+        dk = jnp.einsum("bhgqk,bqhgd->bkhd", dsb, qg,
+                        preferred_element_type=jnp.float32)
+        dq_c = jnp.einsum("bhgqk,bkhd->bqhgd", dsb, kb,
+                          preferred_element_type=jnp.float32)
+        return (dq_acc + dq_c, k0 + chunk), (dk.astype(k.dtype),
+                                             dv.astype(v.dtype))
+
+    dq0 = jnp.zeros((B, Sq, Hk, G, D), jnp.float32)
+    (dq, _), (dks, dvs) = jax.lax.scan(
+        step, (dq0, jnp.zeros((), jnp.int32)), (kc, vc))
+    dk = dks.swapaxes(0, 1).reshape(B, Sk, Hk, D)
+    dv = dvs.swapaxes(0, 1).reshape(B, Sk, Hk, D)
+    return (dq.reshape(B, Sq, H, D).astype(q.dtype), dk, dv)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_chunked_attention(q, k, v, *, causal=True, window=0,
+                            chunk=1024, softmax_scale=None):
+    """chunked_attention with the hand-written flash backward.  Requires
+    Sk % chunk == 0 and no kv_len masking (the training path)."""
+    D = q.shape[-1]
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    chunk = min(chunk, k.shape[1])
+    if k.shape[1] % chunk:
+        import math
+        chunk = math.gcd(chunk, k.shape[1])
+    return _flash(q, k, v, causal, window, chunk, scale)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, window=0,
+                     softmax_scale=None):
+    """One-token decode. q:(B,1,H,D); caches:(B,S,Hk,D); lengths:(B,) valid len
+    (the new token's position is lengths-1 and must be attendable)."""
+    B, _, H, D = q.shape
+    _, S, Hk, _ = k_cache.shape
+    G = H // Hk
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    qg = q.reshape(B, Hk, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos_k = jnp.arange(S)[None, :]                           # (1,S)
+    valid = pos_k < lengths[:, None]
+    if window > 0:
+        valid &= pos_k > (lengths[:, None] - 1 - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=0, q_offset=0, kv_len=None,
+              impl="chunked", chunk=1024, softmax_scale=None,
+              flash_vjp=False):
+    """Public dispatch used by the transformer stack."""
+    if impl == "naive":
+        return naive_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, kv_len=kv_len,
+                               softmax_scale=softmax_scale)
+    if impl == "chunked":
+        if flash_vjp and q_offset == 0 and kv_len is None \
+                and q.shape[1] == k.shape[1]:
+            # hand-written flash backward: only for plans whose activations
+            # are not head-sharded (dp_heavy / tp==1) — under Megatron-SP
+            # the grouped-head reshape inside the bwd scan fights GSPMD.
+            return flash_chunked_attention(
+                q, k, v, causal=causal, window=window, chunk=chunk,
+                softmax_scale=softmax_scale)
+        q, k, v = map(grad_dtype_barrier, (q, k, v))
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset, kv_len=kv_len, chunk=chunk,
+                                 softmax_scale=softmax_scale)
+    if impl == "pallas":
+        from repro.kernels import ops
+        return ops.flash_attention(q, k, v, causal=causal, window=window,
+                                   softmax_scale=softmax_scale)
+    raise ValueError(impl)

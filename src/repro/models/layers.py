@@ -1,0 +1,253 @@
+"""Core layer primitives: norms, rotary embeddings (RoPE / M-RoPE), MLPs.
+
+Everything is purely functional: ``init_*`` builds a param pytree (nested dicts
+of jnp arrays), ``apply`` functions consume ``(params, x)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ArchConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": jnp.zeros((d,), jnp.float32)}          # gemma-style (1+scale)
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    if cfg.norm_type == "nonparam_ln":
+        return {}
+    raise ValueError(cfg.norm_type)
+
+
+def apply_norm(cfg: ArchConfig, params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * (1.0 + params["scale"])
+    else:
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + eps)
+        if cfg.norm_type == "layernorm":
+            y = y * params["scale"] + params["bias"]
+    return y.astype(x.dtype)
+
+
+def rms_norm_simple(x, scale, eps: float = 1e-6):
+    """Standalone RMSNorm used for qk-norm (scale is multiplicative 1+s)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = _rope_freqs(d, theta)                         # (D/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                sections: Tuple[int, ...]) -> jnp.ndarray:
+    """Multimodal RoPE (qwen2-vl): positions (..., S, 3) = (t, h, w) grids.
+
+    The D/2 frequency slots are split into ``sections`` (sum == D/2); slots in
+    section i rotate by position component i.
+    """
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    freqs = _rope_freqs(d, theta)                          # (D/2,)
+    # component selector per frequency slot
+    comp = jnp.concatenate([jnp.full((s,), i, jnp.int32)
+                            for i, s in enumerate(sections)])
+    pos = jnp.take(positions.astype(jnp.float32), comp, axis=-1)  # (..., S, D/2)
+    angles = pos[..., None, :] * freqs                     # (..., S, 1, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def position_embedding(cfg: ArchConfig, x, positions):
+    """Dispatch on cfg.pos_type for q/k tensors. positions: (B,S) or (B,S,3)."""
+    if cfg.pos_type == "rope":
+        return apply_rope(x, positions, cfg.rope_theta)
+    if cfg.pos_type == "mrope":
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return x  # learned / none handled at embedding level
+
+
+# ---------------------------------------------------------------------------
+# Dense / MLP
+# ---------------------------------------------------------------------------
+
+def init_dense(key, in_dim: int, out_dim: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / jnp.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def init_mlp(key, cfg: ArchConfig, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_gated:
+        return {"wi_gate": init_dense(ks[0], cfg.d_model, d_ff, dtype),
+                "wi_up": init_dense(ks[1], cfg.d_model, d_ff, dtype),
+                "wo": init_dense(ks[2], d_ff, cfg.d_model, dtype)}
+    return {"wi": init_dense(ks[0], cfg.d_model, d_ff, dtype),
+            "wo": init_dense(ks[1], d_ff, cfg.d_model, dtype)}
+
+
+def apply_mlp(cfg: ArchConfig, params, x):
+    act = activation(cfg.act)
+    if cfg.mlp_gated:
+        h = act(x @ params["wi_gate"]) * (x @ params["wi_up"])
+    else:
+        h = act(x @ params["wi"])
+    return h @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg: ArchConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    emb = (jax.random.normal(key, (cfg.padded_vocab, cfg.d_model), jnp.float32)
+           * 0.02).astype(dtype)
+    return emb
+
+
+from functools import partial as _partial  # noqa: E402
+
+
+def _no_constrain(x, name):
+    return x
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _embed_lookup(constrain, vocab: int, dtype_str: str, emb, tokens):
+    return jnp.take(emb, tokens, axis=0)
+
+
+def _embed_fwd(constrain, vocab, dtype_str, emb, tokens):
+    return jnp.take(emb, tokens, axis=0), tokens
+
+
+def _embed_bwd(constrain, vocab, dtype_str, tokens, g):
+    """Vocab-dim-shardable embedding gradient.
+
+    The scatter-add autodiff emits a *replicated* (V, d) f32 buffer under
+    GSPMD (2+ GB/device for 256k vocabs).  The one-hot einsum form keeps
+    the vocab dim sharded like the embedding itself; the explicit
+    constraints keep the token dim batch-sharded so GSPMD contracts with a
+    psum instead of all-gathering 1M-token operands.
+    """
+    onehot = jax.nn.one_hot(tokens.reshape(-1), vocab, dtype=g.dtype)
+    onehot = constrain(onehot, "embed_onehot")
+    d = jnp.einsum("tv,td->vd", onehot, g.reshape(-1, g.shape[-1]),
+                   preferred_element_type=jnp.float32)
+    d = constrain(d, "embed_grad")
+    return d.astype(jnp.dtype(dtype_str)), None
+
+
+_embed_lookup.defvjp(_embed_fwd, _embed_bwd)
+
+
+def embed_tokens(emb, tokens, constrain=_no_constrain):
+    return _embed_lookup(constrain, emb.shape[0], str(emb.dtype), emb,
+                         tokens)
+
+
+def lm_logits(cfg: ArchConfig, params, h):
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return h @ head.T if cfg.tie_embeddings else h @ head
+
+
+@jax.custom_vjp
+def _nll(logits, targets):
+    """Per-position negative log-likelihood with a memory-lean VJP.
+
+    The naive autodiff path materializes an f32 copy of the logits (fwd) and
+    a second one for softmax in bwd — for 256k-vocab models that is the
+    single largest activation.  Here the forward saves only (logits, lse)
+    and the backward streams (softmax - onehot) in the logits dtype.
+    """
+    lse = _lse32(logits)
+    gold = jnp.take_along_axis(logits, targets[..., None],
+                               axis=-1)[..., 0].astype(jnp.float32)
+    return lse - gold
+
+
+def _lse32(logits):
+    """logsumexp with f32 accumulation; the f32 convert fuses into the
+    reduce so no f32 logits copy is materialized."""
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1)).astype(jnp.float32)
+    s = jnp.sum(jnp.exp(logits.astype(jnp.float32) - m[..., None]), axis=-1)
+    return m + jnp.log(s)
+
+
+def _nll_fwd(logits, targets):
+    lse = _lse32(logits)
+    gold = jnp.take_along_axis(logits, targets[..., None],
+                               axis=-1)[..., 0].astype(jnp.float32)
+    return lse - gold, (logits, targets, lse)
+
+
+def _nll_bwd(res, g):
+    logits, targets, lse = res
+    # softmax recomputed in the logits dtype; d_logits = g*(p - onehot)
+    p = jnp.exp(logits.astype(jnp.float32) - lse[..., None])
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=jnp.float32)
+    d = (g[..., None] * (p - onehot)).astype(logits.dtype)
+    return d, None
+
+
+_nll.defvjp(_nll_fwd, _nll_bwd)
+
+
+def cross_entropy_loss(logits, targets, mask=None,
+                       vocab_size: Optional[int] = None):
+    """Next-token CE; ``mask`` zeroes padded / non-text positions.
+
+    ``logits``: (..., V_padded); targets int32.  Padded vocab rows are never
+    valid targets so no extra masking of the vocab axis is needed.
+    """
+    nll = _nll(logits, targets)
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

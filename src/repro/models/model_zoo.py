@@ -1,0 +1,86 @@
+"""Model zoo: arch-indexed bundle of init / loss / prefill / decode plus the
+``input_specs`` used by the multi-pod dry-run (ShapeDtypeStruct stand-ins,
+weak-type-correct, no device allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, ShapeConfig
+from repro.models import transformer as tf
+from repro.models.transformer import ModelCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ArchConfig
+    ctx: ModelCtx
+
+    def init(self, key):
+        return tf.init_params(key, self.cfg)
+
+    def init_eval_shape(self):
+        return jax.eval_shape(lambda k: tf.init_params(k, self.cfg),
+                              jax.random.PRNGKey(0))
+
+    def loss(self, params, batch):
+        return tf.loss_fn(self.cfg, params, batch, self.ctx)
+
+    def prefill(self, params, batch):
+        logits, aux, kvs = tf.forward(self.cfg, params, batch, self.ctx,
+                                      collect_kv=True)
+        return logits, kvs
+
+    def decode(self, params, cache, tokens, positions=None):
+        return tf.decode_step(self.cfg, params, cache, tokens, self.ctx,
+                              positions=positions)
+
+
+def build(cfg: ArchConfig, ctx: ModelCtx = ModelCtx()) -> ModelBundle:
+    return ModelBundle(cfg, ctx)
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one train/prefill batch."""
+    B, S = shape.global_batch, shape.seq_len
+    specs = {"tokens": _sds((B, S), jnp.int32),
+             "targets": _sds((B, S), jnp.int32),
+             "mask": _sds((B, S), jnp.float32)}
+    if cfg.pos_type == "mrope":
+        s_img = int(cfg.image_prefix_frac * S)
+        specs["patch_embeds"] = _sds((B, s_img, cfg.d_model), cfg.dtype)
+        specs["positions"] = _sds((B, S, 3), jnp.int32)
+    if cfg.encoder_layers:
+        specs["frames"] = _sds((B, cfg.encoder_frames, cfg.d_model), cfg.dtype)
+    if shape.kind == "prefill":
+        specs.pop("targets")
+        specs.pop("mask")
+    return specs
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Inputs for one serve_step: token + KV cache of seq_len + lengths."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: tf.init_cache(cfg, B, S))
+    specs = {"tokens": _sds((B, 1), jnp.int32), "cache": cache}
+    if cfg.pos_type == "mrope":
+        specs["positions"] = _sds((B, 1, 3), jnp.int32)
+    return specs
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    if shape.kind in ("train", "prefill"):
+        return batch_specs(cfg, shape)
+    return decode_specs(cfg, shape)

@@ -1,0 +1,133 @@
+"""Mixture-of-Experts FFN with top-k routing, capacity dispatch, and the
+paper's load-balancing machinery (§III.A.c).
+
+Dispatch is the group-wise one-hot einsum formulation (Mesh-TF / Switch
+lineage), fully batched over groups: tokens are split into
+(batch x seq-subchunk) groups of ``group_size``; every tensor keeps a
+leading group dim that stays dp-sharded (no sequential loops, no global
+token reshuffle).  The (g, G, E, C) dispatch/combine tensors are bounded by
+``group_size`` per group.  Expert weights are sharded over the ``model``
+mesh axis (expert parallelism); under GSPMD the dispatch einsum lowers to
+the all-to-all the paper describes.
+
+Aux outputs: load-balance loss (Switch), router z-loss, and per-expert load
+counts consumed by ``core.load_balance.rebalance_experts``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models import layers
+
+
+def init_moe(key, cfg: ArchConfig) -> Dict:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    E, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    p = {"router": layers.init_dense(ks[0], d, E, jnp.float32)}
+    if cfg.mlp_gated:
+        p["wi_gate"] = _expert_init(ks[1], E, d, f, dtype)
+        p["wi_up"] = _expert_init(ks[2], E, d, f, dtype)
+        p["wo"] = _expert_init(ks[3], E, f, d, dtype)
+    else:
+        p["wi"] = _expert_init(ks[1], E, d, f, dtype)
+        p["wo"] = _expert_init(ks[2], E, f, d, dtype)
+    return p
+
+
+def _expert_init(key, E, din, dout, dtype):
+    scale = 1.0 / jnp.sqrt(din)
+    return (jax.random.normal(key, (E, din, dout), jnp.float32) * scale).astype(dtype)
+
+
+def router_topk(logits: jnp.ndarray, k: int, use_kernel: bool = False
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(..., E) logits -> (gates (..., k), idx (..., k), probs (..., E)).
+
+    Batched dims are preserved (no (T, E) flatten: merging the sharded
+    group dim into a single token axis made GSPMD all-gather 1M-token
+    router tensors)."""
+    if use_kernel:
+        from repro.kernels import ops
+        shp = logits.shape
+        g2, i2, p2 = ops.moe_router(logits.reshape(-1, shp[-1]), k)
+        return (g2.reshape(shp[:-1] + (k,)), i2.reshape(shp[:-1] + (k,)),
+                p2.reshape(shp))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    return gates, idx, probs
+
+
+def _capacity(group: int, k: int, E: int, factor: float) -> int:
+    c = int(group * k / E * factor)
+    return max(8, -(-c // 8) * 8)   # round up to 8
+
+
+def moe_ffn(cfg: ArchConfig, params: Dict, x: jnp.ndarray,
+            *, capacity_factor: float = 1.25, group_size: int = 1024,
+            use_kernel: bool = False, constrain=None):
+    """x: (B, S, d) -> (out, aux) where aux has losses + expert loads."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    G = min(group_size, S)
+    if S % G:
+        import math
+        G = math.gcd(G, S)
+    g = B * (S // G)
+    C = _capacity(G, k, E, capacity_factor)
+    xg = x.reshape(g, G, d)
+    if constrain is not None:
+        # MoE boundary: groups stay dp-sharded, sequence gathered (the
+        # Megatron-SP -> expert-parallel transition)
+        xg = constrain(xg, "moe_groups")
+
+    logits = xg.astype(jnp.float32) @ params["router"]           # (g, G, E)
+    gates, idx, probs = router_topk(logits, k, use_kernel)       # (g, G, .)
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)           # (g,G,k,E)
+    # position of each (token, slot) within its expert queue, per group
+    flat = onehot.transpose(0, 2, 1, 3).reshape(g, k * G, E)     # slot-major
+    pos = jnp.cumsum(flat, axis=1) - flat                        # (g,kG,E)
+    pos = pos.reshape(g, k, G, E).transpose(0, 2, 1, 3)          # (g,G,k,E)
+    pos_in_e = jnp.sum(pos * onehot, axis=-1)                    # (g,G,k)
+    keep = pos_in_e < C                                          # capacity drop
+    pos_in_e = jnp.where(keep, pos_in_e, 0).astype(jnp.int32)
+    gates_k = gates * keep
+    poshot = jax.nn.one_hot(pos_in_e, C, dtype=jnp.float32) \
+        * keep[..., None]                                        # (g,G,k,C)
+    dt = x.dtype
+    # dispatch/combine without materializing the k-dim outer product
+    dispatch = jnp.einsum("gtke,gtkc->gtec", onehot, poshot).astype(dt)
+    combine = jnp.einsum("gtke,gtkc->gtec", onehot * gates_k[..., None],
+                         poshot).astype(dt)
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch, xg)       # (g,E,C,d)
+    if constrain is not None:
+        expert_in = constrain(expert_in, "expert_stack")
+    act = layers.activation(cfg.act)
+    if cfg.mlp_gated:
+        h = act(jnp.einsum("gecd,edf->gecf", expert_in, params["wi_gate"],
+                           preferred_element_type=jnp.float32)) \
+            * jnp.einsum("gecd,edf->gecf", expert_in, params["wi_up"],
+                         preferred_element_type=jnp.float32)
+        h = h.astype(dt)
+    else:
+        h = act(jnp.einsum("gecd,edf->gecf", expert_in, params["wi"],
+                           preferred_element_type=jnp.float32)).astype(dt)
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["wo"])
+    if constrain is not None:
+        expert_out = constrain(expert_out, "expert_stack")
+    out = jnp.einsum("gtec,gecd->gtd", combine, expert_out,
+                     preferred_element_type=jnp.float32)
+
+    # aux statistics (Switch LB loss over all tokens)
+    frac_tokens = jnp.mean(onehot[..., 0, :], axis=(0, 1))       # top-1 frac
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    lb_loss = E * jnp.sum(frac_tokens * mean_prob)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    load = jnp.sum(onehot, axis=(0, 1, 2))                       # (E,)
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss, "expert_load": load}
+    return out.astype(dt).reshape(B, S, d), aux

@@ -1,0 +1,322 @@
+"""State-space / linear-attention layers: Mamba-1 (jamba) and RWKV-6 (finch).
+
+Both are written TPU-natively:
+* Mamba's selective scan is a chunked ``lax.scan`` carrying the (d_in, d_state)
+  state between chunks with an associative scan *inside* each chunk — the state
+  tensor (T, d_in, N) is only ever materialized chunk-wide (the TPU analogue of
+  the CUDA fused selective-scan kernel's SRAM blocking).
+* RWKV6's WKV recurrence is a ``lax.scan`` over time carrying the per-head
+  (dk, dv) state matrix; channels/heads are sharded over the ``model`` axis
+  (TP for attention-free layers).
+
+Decode paths are single-step state updates (O(1) per token) — this is what
+makes ``long_500k`` runnable for these families.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models import layers
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    N = cfg.ssm_d_state
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": layers.init_dense(ks[0], d, 2 * d_in, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_d_conv, d_in), jnp.float32)
+                   * (cfg.ssm_d_conv ** -0.5)).astype(dtype),
+        "x_proj": layers.init_dense(ks[2], d_in, 2 * N + 1, dtype),   # B, C, dt
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (d_in, N)).copy()),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "dt_bias": jnp.zeros((d_in,), jnp.float32),
+        "out_proj": layers.init_dense(ks[3], d_in, d, dtype),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """x: (B, T, C); w: (K, C). Returns (y, new_state) with state (B, K-1, C)."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros(x.shape[:1] + (K - 1,) + x.shape[2:], x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)              # (B, T+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return y, xp[:, -(K - 1):]
+
+
+def _ssm_scan_chunked(A, xi, dt, Bc, Cc, h0, chunk: int):
+    """Selective scan h_t = dA_t * h_{t-1} + dBx_t ; y_t = h_t . C_t.
+
+    A: (d_in, N); xi, dt: (B, T, d_in); Bc, Cc: (B, T, N); h0: (B, d_in, N).
+
+    Discretization (dA = exp(dt*A), dBx = dt*B*x) happens *inside* each
+    chunk step and the step is rematerialized — the (chunk, d_in, N) state
+    tensors exist only chunk-wide (the TPU/VMEM analogue of the fused CUDA
+    selective-scan; full-length (T, d_in, N) buffers never hit HBM).
+    """
+    B, T, d_in = xi.shape
+    N = A.shape[-1]
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    nc = T // chunk
+
+    def split(t):
+        return t.reshape((B, nc, chunk) + t.shape[2:]).swapaxes(0, 1)
+
+    def assoc(a, b):
+        return (a[0] * b[0], a[1] * b[0] + b[1])
+
+    @jax.checkpoint
+    def step(h, inp):
+        xi_c, dt_c, B_c, C_c = inp                        # (B,chunk,...)
+        dA = jnp.exp(dt_c[..., None] * A)                 # (B,chunk,d_in,N)
+        dBx = (dt_c[..., None] * B_c[..., None, :].astype(jnp.float32)
+               * xi_c[..., None].astype(jnp.float32))
+        A_cum, X_cum = jax.lax.associative_scan(assoc, (dA, dBx), axis=1)
+        h_t = A_cum * h[:, None] + X_cum                  # (B,chunk,d_in,N)
+        y = jnp.einsum("btdn,btn->btd", h_t,
+                       C_c.astype(jnp.float32))
+        return h_t[:, -1], y
+
+    h_f, ys = jax.lax.scan(step, h0, (split(xi), split(dt),
+                                      split(Bc), split(Cc)))
+    y = ys.swapaxes(0, 1).reshape(B, T, d_in)
+    return y, h_f
+
+
+def mamba_forward(cfg: ArchConfig, p: Dict, x: jnp.ndarray,
+                  state: Dict = None, chunk: int = 512
+                  ) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B, T, d). state: {'conv': (B,K-1,d_in), 'ssm': (B,d_in,N)} or None."""
+    B, T, d = x.shape
+    N = cfg.ssm_d_state
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)                     # (B,T,d_in) each
+    conv_state = None if state is None else state["conv"]
+    xi, new_conv = _causal_conv(xi, p["conv_w"], conv_state)
+    xi = jax.nn.silu(xi)
+    bcd = xi @ p["x_proj"]                                # (B,T,2N+1)
+    Bc, Cc, dt = bcd[..., :N], bcd[..., N:2 * N], bcd[..., 2 * N]
+    # per-channel dt = softplus(scalar head + channel bias)  (dt_rank=1 variant)
+    dt = jax.nn.softplus(dt[..., None].astype(jnp.float32) + p["dt_bias"])  # (B,T,d_in)
+    A = -jnp.exp(p["A_log"])                              # (d_in, N)
+    h0 = (jnp.zeros((B, cfg.ssm_expand * d, N), jnp.float32)
+          if state is None else state["ssm"])
+    y, h_f = _ssm_scan_chunked(A, xi, dt, Bc, Cc, h0, chunk)
+    y = y + xi.astype(jnp.float32) * p["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return out, {"conv": new_conv, "ssm": h_f}
+
+
+def mamba_decode_step(cfg: ArchConfig, p: Dict, x: jnp.ndarray, state: Dict
+                      ) -> Tuple[jnp.ndarray, Dict]:
+    """Single-token step. x: (B, 1, d)."""
+    return mamba_forward(cfg, p, x, state=state, chunk=1)
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int) -> Dict:
+    d_in = cfg.ssm_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_d_conv - 1, d_in), jnp.dtype(cfg.dtype)),
+        "ssm": jnp.zeros((batch, d_in, cfg.ssm_d_state), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (finch): data-dependent decay time-mix
+# ---------------------------------------------------------------------------
+
+def init_rwkv6(key, cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    H = d // hs
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    # decay: per-channel base + low-rank data-dependent delta (finch)
+    lora = max(32, d // 32)
+    return {
+        "mix": 0.5 * jnp.ones((5, d), jnp.float32),        # lerp coefs r,k,v,w,g
+        "Wr": layers.init_dense(ks[0], d, d, dtype),
+        "Wk": layers.init_dense(ks[1], d, d, dtype),
+        "Wv": layers.init_dense(ks[2], d, d, dtype),
+        "Wg": layers.init_dense(ks[3], d, d, dtype),
+        "Wo": layers.init_dense(ks[4], d, d, dtype),
+        "w_base": -6.0 + jnp.zeros((d,), jnp.float32),
+        "w_lora_a": layers.init_dense(ks[5], d, lora, dtype),
+        "w_lora_b": layers.init_dense(ks[6], lora, d, dtype),
+        "u": jnp.zeros((H, hs), jnp.float32),              # time_first bonus
+        "ln_x": {"scale": jnp.ones((d,), jnp.float32),
+                 "bias": jnp.zeros((d,), jnp.float32)},
+    }
+
+
+def _wkv6_scan(r, k, v, w, u):
+    """Sequential WKV recurrence (oracle / decode path).
+    r,k,v: (B,T,H,hs); w: (B,T,H,hs) decay in (0,1); u: (H,hs).
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T ;  o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+    """
+    B, T, H, hs = r.shape
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                               # (B,H,hs)
+        kv = kt[..., :, None] * vt[..., None, :]           # (B,H,hs,hs)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[..., None] * kv)
+        S = wt[..., None] * S + kv
+        return S, out
+
+    S0 = jnp.zeros((B, H, hs, hs), jnp.float32)
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, w))
+    S_f, out = jax.lax.scan(step, S0, xs)
+    return out.transpose(1, 0, 2, 3), S_f
+
+
+def _wkv6_chunked(r, k, v, w, u, S0=None, chunk: int = 32):
+    """Chunked WKV (the TPU-native train/prefill path).
+
+    The per-token scan reads/writes the (H, hs, hs) state every token —
+    O(T * H * hs^2) HBM traffic that made rwkv6 train_4k 99.99% memory-bound.
+    Here the state is carried once per chunk; within a chunk, contributions
+    go through decay-matrix einsums whose exponents are all <= 0 (exact, no
+    overflow; deep-past pairs underflow to their true ~0 contribution):
+
+      cum_t   = sum_{s<=t} log w_s                  (per channel, <= 0)
+      intra   : o_t += sum_{s<t} (r_t . exp(cum_{t-1}-cum_s) k_s) v_s
+      cross   : o_t += (r_t * exp(cum_{t-1})) . S_chunk_start
+      bonus   : o_t += u * (r_t . k_t) v_t
+      state   : S'  = exp(cum_C) * S + sum_s (exp(cum_C - cum_s) k_s) v_s^T
+    """
+    B, T, H, hs = r.shape
+    chunk = min(chunk, T)
+    if T % chunk:
+        import math
+        chunk = math.gcd(chunk, T)
+    nc = T // chunk
+
+    def split(t):
+        return t.reshape(B, nc, chunk, H, hs).swapaxes(0, 1)
+
+    rc, kc, vc, wc = map(split, (r, k, v, w))
+    if S0 is None:
+        S0 = jnp.zeros((B, H, hs, hs), jnp.float32)
+
+    @jax.checkpoint
+    def step(S, inp):
+        rt, kt, vt, wt = inp                     # (B,C,H,hs)
+        # 1e-30: subnormal floors flush to zero on some backends -> log(0)
+        lw = jnp.log(jnp.maximum(wt, 1e-30))
+        cum = jnp.cumsum(lw, axis=1)             # (B,C,H,hs), <= 0
+        cum_prev = cum - lw                      # cum_{t-1}
+        cum_C = cum[:, -1:]                      # (B,1,H,hs)
+        # intra-chunk: decay matrix D[t,s,c] = exp(cum_{t-1,c} - cum_{s,c})
+        expo = cum_prev[:, :, None] - cum[:, None, :, :, :]  # (B,C,C,H,hs)
+        mask = (jnp.arange(chunk)[:, None] > jnp.arange(chunk)[None, :]
+                )[None, :, :, None, None]
+        D = jnp.where(mask, jnp.exp(jnp.minimum(expo, 0.0)), 0.0)
+        M = jnp.einsum("bthc,btshc,bshc->bhts", rt, D, kt)   # (B,H,C,C)
+        o = jnp.einsum("bhts,bshv->bthv", M, vt)
+        # cross-chunk: state contribution
+        o += jnp.einsum("bthc,bhcv->bthv", rt * jnp.exp(cum_prev), S)
+        # bonus (current token): sum_c r_c u_c k_c
+        o += jnp.sum(rt * kt * u, axis=-1, keepdims=True) * vt
+        # state update
+        k2 = kt * jnp.exp(cum_C - cum)
+        S = jnp.exp(cum_C)[:, 0, :, :, None] * S \
+            + jnp.einsum("bshc,bshv->bhcv", k2, vt)
+        return S, o
+
+    S_f, out = jax.lax.scan(step, S0, (rc, kc, vc, wc))
+    return out.swapaxes(0, 1).reshape(B, T, H, hs), S_f
+
+
+def rwkv6_forward(cfg: ArchConfig, p: Dict, x: jnp.ndarray,
+                  state: Dict = None, wkv_chunk: int = 32
+                  ) -> Tuple[jnp.ndarray, Dict]:
+    """Time-mix block. x: (B,T,d). state: {'last': (B,d), 'wkv': (B,H,hs,hs)}."""
+    B, T, d = x.shape
+    hs = cfg.rwkv_head_size
+    H = d // hs
+    last = jnp.zeros((B, 1, d), x.dtype) if state is None else state["last"][:, None]
+    x_prev = jnp.concatenate([last, x[:, :-1]], axis=1)    # token shift
+    xf = x.astype(jnp.float32)
+    pf = x_prev.astype(jnp.float32)
+
+    def mixed(i):
+        m = p["mix"][i]
+        return (xf * m + pf * (1 - m)).astype(x.dtype)
+
+    r = (mixed(0) @ p["Wr"]).reshape(B, T, H, hs).astype(jnp.float32)
+    k = (mixed(1) @ p["Wk"]).reshape(B, T, H, hs).astype(jnp.float32)
+    v = (mixed(2) @ p["Wv"]).reshape(B, T, H, hs).astype(jnp.float32)
+    wx = mixed(3)
+    g = jax.nn.silu(mixed(4) @ p["Wg"])
+    w_delta = jnp.tanh(wx @ p["w_lora_a"]) @ p["w_lora_b"]
+    w = jnp.exp(-jnp.exp(p["w_base"] + w_delta.astype(jnp.float32)))  # (B,T,d)
+    w = w.reshape(B, T, H, hs)
+
+    S0 = None if state is None else state["wkv"]
+    if T == 1:
+        # decode: single sequential step (no chunk machinery)
+        def step(S, inp):
+            rt, kt, vt, wt = inp
+            kv = kt[..., :, None] * vt[..., None, :]
+            o = jnp.einsum("bhk,bhkv->bhv", rt, S + p["u"][..., None] * kv)
+            S = wt[..., None] * S + kv
+            return S, o
+        xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, w))
+        S_f, out = jax.lax.scan(
+            step, S0 if S0 is not None
+            else jnp.zeros((B, H, hs, hs), jnp.float32), xs)
+        out = out.transpose(1, 0, 2, 3)
+    else:
+        out, S_f = _wkv6_chunked(r, k, v, w, p["u"], S0, chunk=wkv_chunk)
+
+    out = out.reshape(B, T, d).astype(x.dtype)
+    out = layers.apply_norm(
+        type("c", (), {"norm_type": "layernorm"}), p["ln_x"], out)
+    out = (out * g) @ p["Wo"]
+    return out, {"last": x[:, -1], "wkv": S_f}
+
+
+def init_rwkv6_state(cfg: ArchConfig, batch: int) -> Dict:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    return {"last": jnp.zeros((batch, d), jnp.dtype(cfg.dtype)),
+            "wkv": jnp.zeros((batch, d // hs, hs, hs), jnp.float32)}
+
+
+# RWKV channel-mix (the FFN counterpart, with token shift + receptance gate)
+def init_rwkv_cmix(key, cfg: ArchConfig) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    return {"mix": 0.5 * jnp.ones((2, d), jnp.float32),
+            "Wk": layers.init_dense(ks[0], d, f, dtype),
+            "Wv": layers.init_dense(ks[1], f, d, dtype),
+            "Wr": layers.init_dense(ks[2], d, d, dtype)}
+
+
+def rwkv_cmix_forward(cfg: ArchConfig, p: Dict, x: jnp.ndarray,
+                      state=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, T, d = x.shape
+    last = jnp.zeros((B, 1, d), x.dtype) if state is None else state[:, None]
+    x_prev = jnp.concatenate([last, x[:, :-1]], axis=1)
+    xf, pf = x.astype(jnp.float32), x_prev.astype(jnp.float32)
+    xk = (xf * p["mix"][0] + pf * (1 - p["mix"][0])).astype(x.dtype)
+    xr = (xf * p["mix"][1] + pf * (1 - p["mix"][1])).astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["Wk"]))
+    out = jax.nn.sigmoid(xr @ p["Wr"]) * (k @ p["Wv"])
+    return out, x[:, -1]

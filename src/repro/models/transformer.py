@@ -1,0 +1,750 @@
+"""Composable transformer stacks for every assigned architecture family.
+
+Families and their parameter layouts:
+
+* ``uniform``  — dense / MoE decoder-only (internlm2, olmo, deepseek, moonshot,
+  qwen3-moe, qwen2-vl, recllm): one ``lax.scan`` over L stacked layers.
+* ``rwkv6``    — attention-free stack (token-shift time-mix + channel-mix).
+* ``jamba``    — periods of [attn, mamba x7] with MoE every other FFN; scan
+  over periods, unrolled inside.
+* ``gemma``    — 5 local : 1 global attention; 26 small layers, fully unrolled
+  (heterogeneous ring-buffer vs full KV caches).
+* ``whisper``  — encoder-decoder; conv frontend stubbed (precomputed frames).
+
+All functions are pure; distribution enters only through ``ModelCtx.constrain``
+(activation sharding hooks installed by ``core.sharding``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models import attention as attn_lib
+from repro.models import layers, moe, ssm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCtx:
+    """Runtime knobs threaded through the stack (not part of params)."""
+    attn_impl: str = "chunked"       # naive | chunked | pallas
+    attn_chunk: int = 1024
+    mamba_chunk: int = 512
+    remat: bool = False
+    use_kernels: bool = False
+    moe_group: int = 256
+    moe_capacity_factor: float = 1.25
+    flash_vjp: bool = False          # custom flash backward (dp_heavy/no-TP)
+    constrain: Callable[[jnp.ndarray, str], jnp.ndarray] = \
+        staticmethod(lambda x, name: x)
+
+
+# ---------------------------------------------------------------------------
+# Attention block
+# ---------------------------------------------------------------------------
+
+def init_attn_block(key, cfg: ArchConfig, cross: bool = False) -> Dict:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    d = cfg.d_model
+    p = {
+        "norm": layers.init_norm(cfg),
+        "wq": layers.init_dense(ks[0], d, cfg.q_dim, dtype),
+        "wk": layers.init_dense(ks[1], d, cfg.kv_dim, dtype),
+        "wv": layers.init_dense(ks[2], d, cfg.kv_dim, dtype),
+        "wo": layers.init_dense(ks[3], cfg.q_dim, d, dtype),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.zeros((cfg.head_dim,), jnp.float32)
+        p["k_norm"] = jnp.zeros((cfg.head_dim,), jnp.float32)
+    return p
+
+
+def _qkv(cfg: ArchConfig, p: Dict, h, positions, ctx: ModelCtx,
+         rope: bool = True):
+    B, S, _ = h.shape
+    q = (h @ p["wq"]).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = (h @ p["wk"]).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = (h @ p["wv"]).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm and "q_norm" in p:
+        q = layers.rms_norm_simple(q, p["q_norm"])
+        k = layers.rms_norm_simple(k, p["k_norm"])
+    if rope and cfg.pos_type in ("rope", "mrope"):
+        q = layers.position_embedding(cfg, q, positions)
+        k = layers.position_embedding(cfg, k, positions)
+    q = ctx.constrain(q, "heads")
+    k = ctx.constrain(k, "kv_heads")
+    v = ctx.constrain(v, "kv_heads")
+    return q, k, v
+
+
+def attn_apply(cfg: ArchConfig, p: Dict, x, positions, ctx: ModelCtx,
+               *, window: int = 0, return_kv: bool = False):
+    """Full-sequence (train/prefill) self-attention residual branch."""
+    h = layers.apply_norm(cfg, p["norm"], x)
+    q, k, v = _qkv(cfg, p, h, positions, ctx)
+    o = attn_lib.attention(q, k, v, causal=True, window=window,
+                           impl=ctx.attn_impl, chunk=ctx.attn_chunk,
+                           flash_vjp=ctx.flash_vjp)
+    out = ctx.constrain(o.reshape(x.shape[0], x.shape[1], cfg.q_dim)
+                        @ p["wo"], "residual")
+    if return_kv:
+        return out, (k, v)
+    return out, None
+
+
+def attn_decode(cfg: ArchConfig, p: Dict, x, position, ctx: ModelCtx,
+                k_cache, v_cache, cache_len, *, window: int = 0):
+    """One-token decode.  x:(B,1,d); caches (B,S,Hk,D); cache_len (B,).
+
+    Returns (out, k_cache, v_cache).  For ``window>0`` the cache is a ring
+    buffer of size W (softmax is permutation-invariant over keys; RoPE is
+    applied with absolute positions before insertion)."""
+    B = x.shape[0]
+    S = k_cache.shape[1]
+    h = layers.apply_norm(cfg, p["norm"], x)
+    q, k, v = _qkv(cfg, p, h, position[:, None] if position.ndim == 1 else position,
+                   ctx)
+    slot = cache_len % S if window > 0 else cache_len
+    k_cache = k_cache.at[jnp.arange(B), slot].set(k[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[jnp.arange(B), slot].set(v[:, 0].astype(v_cache.dtype))
+    valid = jnp.minimum(cache_len + 1, S)
+    o = attn_lib.decode_attention(q, k_cache, v_cache, valid, window=0)
+    out = o.reshape(B, 1, cfg.q_dim) @ p["wo"]
+    return out, k_cache, v_cache
+
+
+def init_cross_attn(key, cfg: ArchConfig) -> Dict:
+    return init_attn_block(key, cfg, cross=True)
+
+
+def cross_attn_apply(cfg: ArchConfig, p: Dict, x, enc_kv, ctx: ModelCtx):
+    """enc_kv: precomputed (k, v) from encoder output, (B,F,Hk,D)."""
+    B, S, _ = x.shape
+    h = layers.apply_norm(cfg, p["norm"], x)
+    q = (h @ p["wq"]).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k, v = enc_kv
+    o = attn_lib.attention(q, k, v, causal=False, impl="naive"
+                           if S == 1 else ctx.attn_impl, chunk=ctx.attn_chunk)
+    return o.reshape(B, S, cfg.q_dim) @ p["wo"]
+
+
+def enc_kv(cfg: ArchConfig, p: Dict, enc_out):
+    B, F, _ = enc_out.shape
+    k = (enc_out @ p["wk"]).reshape(B, F, cfg.num_kv_heads, cfg.head_dim)
+    v = (enc_out @ p["wv"]).reshape(B, F, cfg.num_kv_heads, cfg.head_dim)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# FFN block (dense MLP or MoE)
+# ---------------------------------------------------------------------------
+
+def init_ffn(key, cfg: ArchConfig, is_moe: bool) -> Dict:
+    p = {"norm": layers.init_norm(cfg)}
+    if is_moe:
+        p["moe"] = moe.init_moe(key, cfg)
+    else:
+        p["mlp"] = layers.init_mlp(key, cfg)
+    return p
+
+
+def ffn_apply(cfg: ArchConfig, p: Dict, x, ctx: ModelCtx):
+    h = layers.apply_norm(cfg, p["norm"], x)
+    if "moe" in p:
+        out, aux = moe.moe_ffn(cfg, p["moe"], h, group_size=ctx.moe_group,
+                               capacity_factor=ctx.moe_capacity_factor,
+                               use_kernel=ctx.use_kernels,
+                               constrain=ctx.constrain)
+    else:
+        out, aux = layers.apply_mlp(cfg, p["mlp"], h), None
+    return ctx.constrain(out, "residual"), aux
+
+
+def zero_aux(cfg: ArchConfig) -> Dict:
+    a = {"lb_loss": jnp.zeros((), jnp.float32),
+         "z_loss": jnp.zeros((), jnp.float32)}
+    if cfg.is_moe:
+        a["expert_load"] = jnp.zeros((cfg.num_experts,), jnp.float32)
+    return a
+
+
+def _aux_of(aux, cfg: ArchConfig) -> Dict:
+    if aux is None:
+        return zero_aux(cfg)
+    a = {"lb_loss": jnp.asarray(aux["lb_loss"], jnp.float32),
+         "z_loss": jnp.asarray(aux["z_loss"], jnp.float32)}
+    if cfg.is_moe:
+        a["expert_load"] = jnp.asarray(aux["expert_load"], jnp.float32)
+    return a
+
+
+def _sum_aux(a, b):
+    return {k: a[k] + b[k] for k in a}
+
+
+# ---------------------------------------------------------------------------
+# Family: uniform decoder-only (dense / full-MoE / vlm)
+# ---------------------------------------------------------------------------
+
+def _init_uniform_layer(key, cfg: ArchConfig) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {"attn": init_attn_block(k1, cfg),
+            "ffn": init_ffn(k2, cfg, cfg.is_moe)}
+
+
+def _stack_init(key, n: int, init_one) -> Dict:
+    ks = jax.random.split(key, n)
+    per = [init_one(k) for k in ks]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+
+def init_params(key, cfg: ArchConfig) -> Dict:
+    """Entry point: params for any family."""
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {"embed": layers.init_embedding(ks[0], cfg),
+                              "final_norm": layers.init_norm(cfg)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.init_dense(
+            ks[1], cfg.d_model, cfg.padded_vocab, jnp.dtype(cfg.dtype))
+
+    fam = family(cfg)
+    if fam == "uniform":
+        params["blocks"] = _stack_init(
+            ks[2], cfg.num_layers, lambda k: _init_uniform_layer(k, cfg))
+    elif fam == "rwkv6":
+        def one(k):
+            k1, k2 = jax.random.split(k)
+            return {"tmix": ssm.init_rwkv6(k1, cfg),
+                    "cmix": ssm.init_rwkv_cmix(k2, cfg),
+                    "norm1": layers.init_norm(cfg),
+                    "norm2": layers.init_norm(cfg)}
+        params["blocks"] = _stack_init(ks[2], cfg.num_layers, one)
+    elif fam == "jamba":
+        n_periods = cfg.num_layers // cfg.attn_period
+        def one_period(k):
+            kk = jax.random.split(k, 4)
+            per = cfg.attn_period
+            n_moe = per // 2
+            return {
+                "attn": init_attn_block(kk[0], cfg),
+                "mamba": _stack_init(kk[1], per - 1,
+                                     lambda k2: {"norm": layers.init_norm(cfg),
+                                                 "m": ssm.init_mamba(k2, cfg)}),
+                "ffn_dense": _stack_init(
+                    kk[2], per - n_moe, lambda k2: init_ffn(k2, cfg, False)),
+                "ffn_moe": _stack_init(
+                    kk[3], n_moe, lambda k2: init_ffn(k2, cfg, True)),
+            }
+        params["blocks"] = _stack_init(ks[2], n_periods, one_period)
+    elif fam == "gemma":
+        params["blocks"] = tuple(
+            _init_uniform_layer(k, cfg) for k in jax.random.split(
+                ks[2], cfg.num_layers))
+    elif fam == "whisper":
+        def dec_layer(k):
+            kk = jax.random.split(k, 3)
+            return {"attn": init_attn_block(kk[0], cfg),
+                    "cross": init_cross_attn(kk[1], cfg),
+                    "ffn": init_ffn(kk[2], cfg, False)}
+        params["blocks"] = _stack_init(ks[2], cfg.num_layers, dec_layer)
+        params["enc_blocks"] = _stack_init(
+            ks[3], cfg.encoder_layers, lambda k: _init_uniform_layer(k, cfg))
+        params["enc_final_norm"] = layers.init_norm(cfg)
+        params["dec_pos"] = (jax.random.normal(
+            ks[4], (32768, cfg.d_model), jnp.float32) * 0.01
+        ).astype(jnp.dtype(cfg.dtype))
+    else:
+        raise ValueError(fam)
+    return params
+
+
+def family(cfg: ArchConfig) -> str:
+    if cfg.ssm_type == "rwkv6":
+        return "rwkv6"
+    if cfg.ssm_type == "mamba":
+        return "jamba"
+    if cfg.local_global_pattern > 0:
+        return "gemma"
+    if cfg.encoder_layers > 0:
+        return "whisper"
+    return "uniform"
+
+
+def _maybe_remat(fn, ctx: ModelCtx):
+    return jax.checkpoint(fn) if ctx.remat else fn
+
+
+# --- uniform forward --------------------------------------------------------
+
+def _uniform_forward(cfg, params, h, positions, ctx, collect_kv: bool):
+    def body(carry, blk):
+        x, aux = carry
+        a_out, kv = attn_apply(cfg, blk["attn"], x, positions, ctx,
+                               return_kv=collect_kv)
+        x = x + a_out
+        f_out, f_aux = ffn_apply(cfg, blk["ffn"], x, ctx)
+        x = x + f_out
+        return (x, _sum_aux(aux, _aux_of(f_aux, cfg))), kv
+
+    body = _maybe_remat(body, ctx)
+    (h, aux), kvs = jax.lax.scan(body, (h, zero_aux(cfg)), params["blocks"])
+    return h, aux, kvs
+
+
+def _uniform_decode(cfg, params, h, position, ctx, cache):
+    def body(carry, inp):
+        x = carry
+        blk, kc, vc = inp
+        a_out, kc, vc = attn_decode(cfg, blk["attn"], x, position, ctx,
+                                    kc, vc, cache["len"])
+        x = x + a_out
+        f_out, _ = ffn_apply(cfg, blk["ffn"], x, ctx)
+        x = x + f_out
+        return x, (kc, vc)
+
+    h, (kcs, vcs) = jax.lax.scan(body, h, (params["blocks"],
+                                           cache["k"], cache["v"]))
+    return h, {"k": kcs, "v": vcs, "len": cache["len"] + 1}
+
+
+# --- rwkv forward ------------------------------------------------------------
+
+def _rwkv_forward(cfg, params, h, ctx):
+    def body(x, blk):
+        t_out, _ = ssm.rwkv6_forward(cfg, blk["tmix"],
+                                     layers.apply_norm(cfg, blk["norm1"], x))
+        x = x + t_out
+        c_out, _ = ssm.rwkv_cmix_forward(cfg, blk["cmix"],
+                                         layers.apply_norm(cfg, blk["norm2"], x))
+        x = ctx.constrain(x + c_out, "residual")
+        return x, None
+
+    body = _maybe_remat(body, ctx)
+    h, _ = jax.lax.scan(body, h, params["blocks"])
+    return h
+
+
+def _rwkv_decode(cfg, params, h, ctx, cache):
+    def body(x, inp):
+        blk, st = inp
+        xn = layers.apply_norm(cfg, blk["norm1"], x)
+        t_out, tstate = ssm.rwkv6_forward(
+            cfg, blk["tmix"], xn, state={"last": st["tmix_last"],
+                                         "wkv": st["wkv"]})
+        x = x + t_out
+        xn2 = layers.apply_norm(cfg, blk["norm2"], x)
+        c_out, clast = ssm.rwkv_cmix_forward(cfg, blk["cmix"], xn2,
+                                             state=st["cmix_last"])
+        x = x + c_out
+        new_st = {"tmix_last": xn[:, -1], "wkv": tstate["wkv"],
+                  "cmix_last": xn2[:, -1]}
+        return x, new_st
+
+    h, states = jax.lax.scan(body, h, (params["blocks"], cache["states"]))
+    return h, {"states": states, "len": cache["len"] + 1}
+
+
+# --- jamba forward -----------------------------------------------------------
+
+def _jamba_ffn_idx(j: int) -> Tuple[str, int]:
+    # global layer index within period: j odd -> MoE slot j//2, else dense j//2
+    return ("ffn_moe", j // 2) if j % 2 == 1 else ("ffn_dense", j // 2)
+
+
+def _jamba_forward(cfg, params, h, positions, ctx, collect_kv: bool):
+    per = cfg.attn_period
+
+    # nested remat: each sublayer is its own checkpoint so the period
+    # backward holds one sublayer's recomputed internals at a time (the
+    # period body is 8 layers — period-level remat alone peaks at 8x).
+    def attn_sub(blk, x):
+        a_out, kvs = attn_apply(cfg, blk["attn"], x, positions, ctx,
+                                return_kv=collect_kv)
+        return x + a_out, kvs
+
+    def mamba_sub(mblk, x):
+        m_out, _ = ssm.mamba_forward(
+            cfg, mblk["m"], layers.apply_norm(cfg, mblk["norm"], x),
+            chunk=ctx.mamba_chunk)
+        return x + ctx.constrain(m_out, "residual")
+
+    def ffn_sub(fblk, x):
+        f_out, f_aux = ffn_apply(cfg, fblk, x, ctx)
+        return x + f_out, _aux_of(f_aux, cfg)
+
+    if ctx.remat:
+        attn_sub = jax.checkpoint(attn_sub)
+        mamba_sub = jax.checkpoint(mamba_sub)
+        ffn_sub = jax.checkpoint(ffn_sub)
+
+    def body(carry, blk):
+        x, aux = carry
+        kvs = None
+        for j in range(per):
+            if j == 0:
+                x, kvs = attn_sub(blk, x)
+            else:
+                mblk = jax.tree.map(lambda a: a[j - 1], blk["mamba"])
+                x = mamba_sub(mblk, x)
+            name, idx = _jamba_ffn_idx(j)
+            fblk = jax.tree.map(lambda a: a[idx], blk[name])
+            x, f_aux = ffn_sub(fblk, x)
+            aux = _sum_aux(aux, f_aux)
+        return (x, aux), kvs
+
+    body = _maybe_remat(body, ctx)
+    (h, aux), kvs = jax.lax.scan(body, (h, zero_aux(cfg)), params["blocks"])
+    return h, aux, kvs
+
+
+def _jamba_decode(cfg, params, h, position, ctx, cache):
+    per = cfg.attn_period
+
+    def body(x, inp):
+        blk, kc, vc, mstates = inp
+        new_m = []
+        for j in range(per):
+            if j == 0:
+                a_out, kc, vc = attn_decode(cfg, blk["attn"], x, position, ctx,
+                                            kc, vc, cache["len"])
+                x = x + a_out
+            else:
+                mblk = jax.tree.map(lambda a: a[j - 1], blk["mamba"])
+                mst = jax.tree.map(lambda a: a[j - 1], mstates)
+                m_out, mst = ssm.mamba_decode_step(
+                    cfg, mblk["m"], layers.apply_norm(cfg, mblk["norm"], x), mst)
+                new_m.append(mst)
+                x = x + m_out
+            name, idx = _jamba_ffn_idx(j)
+            fblk = jax.tree.map(lambda a: a[idx], blk[name])
+            f_out, _ = ffn_apply(cfg, fblk, x, ctx)
+            x = x + f_out
+        new_m = jax.tree.map(lambda *xs: jnp.stack(xs), *new_m)
+        return x, (kc, vc, new_m)
+
+    h, (kcs, vcs, ms) = jax.lax.scan(
+        body, h, (params["blocks"], cache["k"], cache["v"], cache["mamba"]))
+    return h, {"k": kcs, "v": vcs, "mamba": ms, "len": cache["len"] + 1}
+
+
+# --- gemma forward (unrolled heterogeneous local/global) ---------------------
+
+def _gemma_forward(cfg, params, h, positions, ctx, collect_kv: bool):
+    kinds = cfg.layer_kinds()
+    kvs = []
+    aux = zero_aux(cfg)
+
+    def layer(x, blk, window):
+        a_out, kv = attn_apply(cfg, blk["attn"], x, positions, ctx,
+                               window=window, return_kv=collect_kv)
+        x = x + a_out
+        f_out, f_aux = ffn_apply(cfg, blk["ffn"], x, ctx)
+        return x + f_out, kv, f_aux
+
+    for blk, kind in zip(params["blocks"], kinds):
+        window = cfg.sliding_window if kind == "local_attn" else 0
+        fn = _maybe_remat(partial(layer, window=window), ctx)
+        h, kv, f_aux = fn(h, blk)
+        aux = _sum_aux(aux, _aux_of(f_aux, cfg))
+        kvs.append(kv)
+    return h, aux, kvs
+
+
+def _gemma_decode(cfg, params, h, position, ctx, cache):
+    kinds = cfg.layer_kinds()
+    new_k, new_v = [], []
+    for i, (blk, kind) in enumerate(zip(params["blocks"], kinds)):
+        window = cfg.sliding_window if kind == "local_attn" else 0
+        a_out, kc, vc = attn_decode(cfg, blk["attn"], h, position, ctx,
+                                    cache["k"][i], cache["v"][i], cache["len"],
+                                    window=window)
+        h = h + a_out
+        f_out, _ = ffn_apply(cfg, blk["ffn"], h, ctx)
+        h = h + f_out
+        new_k.append(kc)
+        new_v.append(vc)
+    return h, {"k": tuple(new_k), "v": tuple(new_v), "len": cache["len"] + 1}
+
+
+# --- whisper (enc-dec) --------------------------------------------------------
+
+def _sinusoid(F: int, d: int):
+    pos = jnp.arange(F)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def whisper_encode(cfg, params, frames, ctx):
+    """frames: (B, F, d) precomputed by the (stubbed) conv frontend."""
+    h = frames + _sinusoid(frames.shape[1], cfg.d_model).astype(frames.dtype)
+
+    def body(x, blk):
+        hn = layers.apply_norm(cfg, blk["attn"]["norm"], x)
+        B, F, _ = hn.shape
+        q = (hn @ blk["attn"]["wq"]).reshape(B, F, cfg.num_heads, cfg.head_dim)
+        k = (hn @ blk["attn"]["wk"]).reshape(B, F, cfg.num_kv_heads, cfg.head_dim)
+        v = (hn @ blk["attn"]["wv"]).reshape(B, F, cfg.num_kv_heads, cfg.head_dim)
+        o = attn_lib.attention(q, k, v, causal=False, impl=ctx.attn_impl,
+                               chunk=ctx.attn_chunk)
+        x = x + o.reshape(B, F, cfg.q_dim) @ blk["attn"]["wo"]
+        f_out, _ = ffn_apply(cfg, blk["ffn"], x, ctx)
+        return x + f_out, None
+
+    body = _maybe_remat(body, ctx)
+    h, _ = jax.lax.scan(body, h, params["enc_blocks"])
+    return layers.apply_norm(cfg, params["enc_final_norm"], h)
+
+
+def _whisper_dec_forward(cfg, params, h, positions, enc_out, ctx,
+                         collect_kv: bool):
+    def body(carry, blk):
+        x = carry
+        a_out, kv = attn_apply(cfg, blk["attn"], x, positions, ctx,
+                               return_kv=collect_kv)
+        x = x + a_out
+        ekv = enc_kv(cfg, blk["cross"], enc_out)
+        x = x + cross_attn_apply(cfg, blk["cross"], x, ekv, ctx)
+        f_out, _ = ffn_apply(cfg, blk["ffn"], x, ctx)
+        x = x + f_out
+        return x, (kv, ekv) if collect_kv else None
+
+    body = _maybe_remat(body, ctx)
+    h, kvs = jax.lax.scan(body, h, params["blocks"])
+    return h, zero_aux(cfg), kvs
+
+
+def whisper_prefill_cross(cfg, params, frames, ctx: ModelCtx = ModelCtx()):
+    """Run the encoder and precompute per-layer cross-attention K/V for the
+    decode cache: returns (cross_k, cross_v) stacked (L, B, F, Hk, D)."""
+    enc_out = whisper_encode(cfg, params, frames, ctx)
+
+    def one(blk):
+        return enc_kv(cfg, blk["cross"], enc_out)
+
+    ks, vs = jax.vmap(one, in_axes=(0,))(params["blocks"])
+    return ks, vs
+
+
+def _whisper_decode(cfg, params, h, position, ctx, cache):
+    def body(x, inp):
+        blk, kc, vc, ck, cv = inp
+        a_out, kc, vc = attn_decode(cfg, blk["attn"], x, position, ctx,
+                                    kc, vc, cache["len"])
+        x = x + a_out
+        x = x + cross_attn_apply(cfg, blk["cross"], x, (ck, cv), ctx)
+        f_out, _ = ffn_apply(cfg, blk["ffn"], x, ctx)
+        x = x + f_out
+        return x, (kc, vc)
+
+    h, (kcs, vcs) = jax.lax.scan(
+        body, h, (params["blocks"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    return h, {"k": kcs, "v": vcs, "cross_k": cache["cross_k"],
+               "cross_v": cache["cross_v"], "len": cache["len"] + 1}
+
+
+# ---------------------------------------------------------------------------
+# Public API: forward / loss / cache / decode
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg, params, batch, ctx):
+    tokens = batch["tokens"]
+    h = layers.embed_tokens(params["embed"], tokens, ctx.constrain)
+    if cfg.pos_type == "mrope" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(h.dtype)
+        h = jnp.concatenate([pe, h[:, pe.shape[1]:]], axis=1)
+    if cfg.pos_type == "learned":
+        S = tokens.shape[1]
+        h = h + params["dec_pos"][:S][None]
+    return ctx.constrain(h, "residual")
+
+
+def _positions(cfg, batch):
+    if cfg.pos_type == "mrope":
+        return batch["positions"]                        # (B,S,3)
+    B, S = batch["tokens"].shape
+    return jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+
+def forward_hidden(cfg: ArchConfig, params: Dict, batch: Dict,
+                   ctx: ModelCtx = ModelCtx(), collect_kv: bool = False):
+    """Full-sequence forward up to the final norm: (hidden, aux, kvs)."""
+    fam = family(cfg)
+    h = _embed_inputs(cfg, params, batch, ctx)
+    positions = _positions(cfg, batch)
+    if fam == "uniform":
+        h, aux, kvs = _uniform_forward(cfg, params, h, positions, ctx, collect_kv)
+    elif fam == "rwkv6":
+        h, aux, kvs = _rwkv_forward(cfg, params, h, ctx), zero_aux(cfg), None
+    elif fam == "jamba":
+        h, aux, kvs = _jamba_forward(cfg, params, h, positions, ctx, collect_kv)
+    elif fam == "gemma":
+        h, aux, kvs = _gemma_forward(cfg, params, h, positions, ctx, collect_kv)
+    elif fam == "whisper":
+        enc_out = whisper_encode(cfg, params, batch["frames"], ctx)
+        h, aux, kvs = _whisper_dec_forward(cfg, params, h, positions, enc_out,
+                                           ctx, collect_kv)
+    else:
+        raise ValueError(fam)
+    return layers.apply_norm(cfg, params["final_norm"], h), aux, kvs
+
+
+def forward(cfg: ArchConfig, params: Dict, batch: Dict,
+            ctx: ModelCtx = ModelCtx(), collect_kv: bool = False):
+    """Full-sequence forward.  Returns (logits, aux, kvs)."""
+    h, aux, kvs = forward_hidden(cfg, params, batch, ctx, collect_kv)
+    logits = ctx.constrain(layers.lm_logits(cfg, params, h), "logits")
+    return logits, aux, kvs
+
+
+def chunked_ce(cfg: ArchConfig, params: Dict, hidden, targets, mask,
+               ctx: ModelCtx, chunk: int = 512):
+    """LM-head + CE evaluated in sequence chunks with per-chunk remat.
+
+    The (B, S, V) logits tensor — the single largest activation for 150k+
+    vocabularies — only ever exists one chunk at a time; the backward
+    recomputes each chunk's logits (head matmul) instead of stashing three
+    full copies (fwd logits, softmax, d_logits)."""
+    B, S, d = hidden.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        import math
+        chunk = math.gcd(chunk, S)
+    nh = S // chunk
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    hs = hidden.reshape(B, nh, chunk, d).swapaxes(0, 1)
+    ts = targets.reshape(B, nh, chunk).swapaxes(0, 1)
+    ms = mask.reshape(B, nh, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def one(carry, args):
+        hc, tc, mc = args
+        logits = ctx.constrain(layers.lm_logits(cfg, params, hc), "logits")
+        nll = layers._nll(logits, tc)
+        s, n = carry
+        return (s + jnp.sum(nll * mc), n + jnp.sum(mc)), None
+
+    (s, n), _ = jax.lax.scan(one, (jnp.zeros((), jnp.float32),
+                                   jnp.zeros((), jnp.float32)),
+                             (hs, ts, ms))
+    return s / jnp.maximum(n, 1.0)
+
+
+def loss_fn(cfg: ArchConfig, params: Dict, batch: Dict,
+            ctx: ModelCtx = ModelCtx(),
+            lb_weight: float = 0.01, z_weight: float = 1e-3):
+    hidden, aux, _ = forward_hidden(cfg, params, batch, ctx)
+    loss = chunked_ce(cfg, params, hidden, batch["targets"],
+                      batch.get("mask"), ctx)
+    total = loss + lb_weight * aux["lb_loss"] + z_weight * aux["z_loss"]
+    return total, {"ce": loss, **aux}
+
+
+# --- caches -------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Dict:
+    """Decode cache pytree (all-zeros; lengths supplied separately)."""
+    fam = family(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    Hk, D = cfg.num_kv_heads, cfg.head_dim
+    L = cfg.num_layers
+
+    def kv(n, s):
+        return jnp.zeros((n, batch, s, Hk, D), dtype)
+
+    if fam == "uniform":
+        return {"k": kv(L, max_len), "v": kv(L, max_len),
+                "len": jnp.zeros((batch,), jnp.int32)}
+    if fam == "rwkv6":
+        st = {"tmix_last": jnp.zeros((L, batch, cfg.d_model), dtype),
+              "wkv": jnp.zeros((L, batch, cfg.d_model // cfg.rwkv_head_size,
+                                cfg.rwkv_head_size, cfg.rwkv_head_size),
+                               jnp.float32),
+              "cmix_last": jnp.zeros((L, batch, cfg.d_model), dtype)}
+        return {"states": st, "len": jnp.zeros((batch,), jnp.int32)}
+    if fam == "jamba":
+        n_per = cfg.num_layers // cfg.attn_period
+        d_in = cfg.ssm_expand * cfg.d_model
+        m = {"conv": jnp.zeros((n_per, cfg.attn_period - 1, batch,
+                                cfg.ssm_d_conv - 1, d_in), dtype),
+             "ssm": jnp.zeros((n_per, cfg.attn_period - 1, batch, d_in,
+                               cfg.ssm_d_state), jnp.float32)}
+        return {"k": kv(n_per, max_len), "v": kv(n_per, max_len), "mamba": m,
+                "len": jnp.zeros((batch,), jnp.int32)}
+    if fam == "gemma":
+        kinds = cfg.layer_kinds()
+        ks, vs = [], []
+        for kind in kinds:
+            s = cfg.sliding_window if kind == "local_attn" else max_len
+            ks.append(jnp.zeros((batch, s, Hk, D), dtype))
+            vs.append(jnp.zeros((batch, s, Hk, D), dtype))
+        return {"k": tuple(ks), "v": tuple(vs),
+                "len": jnp.zeros((batch,), jnp.int32)}
+    if fam == "whisper":
+        F = cfg.encoder_frames
+        return {"k": kv(L, max_len), "v": kv(L, max_len),
+                "cross_k": kv(L, F), "cross_v": kv(L, F),
+                "len": jnp.zeros((batch,), jnp.int32)}
+    raise ValueError(fam)
+
+
+def prefill_into_cache(cfg: ArchConfig, params: Dict, batch: Dict,
+                       cache: Dict, ctx: ModelCtx = ModelCtx()):
+    """Batched prefill: one full-sequence forward whose per-layer K/V land
+    in the decode cache (serving path: prefill once, then decode_step).
+
+    Supported for the uniform and whisper families (stacked (L,B,S,Hk,D)
+    caches); SSM/hybrid families prefill via their recurrent states and
+    gemma via per-layer ring buffers — those use teacher-forced decode or
+    family-specific prefill (see DESIGN.md §5).
+    Returns (last_logits (B, V), cache)."""
+    fam = family(cfg)
+    if fam not in ("uniform", "whisper"):
+        raise NotImplementedError(f"batched prefill for family {fam}")
+    B, S_p = batch["tokens"].shape
+    logits, aux, kvs = forward(cfg, params, batch, ctx, collect_kv=True)
+    if fam == "whisper":
+        kvs, ekvs = kvs
+        cache["cross_k"], cache["cross_v"] = ekvs
+    k, v = kvs                                  # (L, B, S_p, Hk, D)
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+    cache["len"] = jnp.full((B,), S_p, jnp.int32)
+    return logits[:, -1], cache
+
+
+def decode_step(cfg: ArchConfig, params: Dict, cache: Dict, tokens,
+                ctx: ModelCtx = ModelCtx(), positions=None):
+    """One decode step.  tokens (B,1) -> (logits (B,1,V), new_cache)."""
+    fam = family(cfg)
+    batch = {"tokens": tokens}
+    if positions is not None:
+        batch["positions"] = positions
+    h = layers.embed_tokens(params["embed"], tokens)
+    if cfg.pos_type == "learned":
+        h = h + jnp.take(params["dec_pos"], cache["len"], axis=0)[:, None]
+    pos = positions if positions is not None else cache["len"]
+    if fam == "uniform":
+        h, cache = _uniform_decode(cfg, params, h, pos, ctx, cache)
+    elif fam == "rwkv6":
+        h, cache = _rwkv_decode(cfg, params, h, ctx, cache)
+    elif fam == "jamba":
+        h, cache = _jamba_decode(cfg, params, h, pos, ctx, cache)
+    elif fam == "gemma":
+        h, cache = _gemma_decode(cfg, params, h, pos, ctx, cache)
+    elif fam == "whisper":
+        h, cache = _whisper_decode(cfg, params, h, pos, ctx, cache)
+    else:
+        raise ValueError(fam)
+    h = layers.apply_norm(cfg, params["final_norm"], h)
+    logits = layers.lm_logits(cfg, params, h)
+    return logits, cache

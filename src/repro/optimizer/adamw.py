@@ -1,0 +1,83 @@
+"""AdamW with fp32 master weights + ZeRO-1-shardable state (no optax in this
+environment — implemented from scratch).  Optionally routes the elementwise
+update through the fused Pallas kernel (``kernels/fused_adamw.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+class _Upd(tuple):
+    """Sentinel tuple marking one leaf's (p, m, v) update triple."""
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    """m, v and fp32 master copy, all shaped like params (specs from
+    ``ShardingPlan.opt_specs`` make this ZeRO-1)."""
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    # copy=True: f32 params must not alias the master copy (donation safety)
+    master = jax.tree.map(lambda p: jnp.array(p, jnp.float32, copy=True),
+                          params)
+    return {"m": zeros,
+            "v": jax.tree.map(jnp.copy, zeros),
+            "master": master,
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def _leaf_update(p32, g, m, v, lr, bc1, bc2, tc: TrainConfig,
+                 use_kernel: bool):
+    g = g.astype(jnp.float32)
+    if use_kernel and p32.size % (8 * 128) == 0:
+        from repro.kernels import ops
+        p1, m1, v1 = ops.adamw_update(
+            p32.reshape(-1), g.reshape(-1), m.reshape(-1), v.reshape(-1),
+            lr, bc1, bc2, b1=tc.b1, b2=tc.b2, eps=tc.eps, wd=tc.weight_decay)
+        return (p1.reshape(p32.shape), m1.reshape(p32.shape),
+                v1.reshape(p32.shape))
+    m1 = tc.b1 * m + (1 - tc.b1) * g
+    v1 = tc.b2 * v + (1 - tc.b2) * jnp.square(g)
+    mh = m1 / bc1
+    vh = v1 / bc2
+    p1 = p32 - lr * (mh / (jnp.sqrt(vh) + tc.eps) + tc.weight_decay * p32)
+    return p1, m1, v1
+
+
+def adamw_apply(params, grads, opt: Dict[str, Any], lr, tc: TrainConfig,
+                use_kernel: bool = False) -> Tuple[Any, Dict[str, Any]]:
+    """One AdamW step.  Returns (new_params_in_model_dtype, new_opt)."""
+    step = opt["step"] + 1
+    bc1 = 1.0 - tc.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - tc.b2 ** step.astype(jnp.float32)
+    if tc.grad_clip > 0:
+        grads, _ = clip_by_global_norm(grads, tc.grad_clip)
+    out = jax.tree.map(
+        lambda p32, g, m, v: _Upd(_leaf_update(p32, g, m, v, lr, bc1, bc2,
+                                               tc, use_kernel)),
+        opt["master"], grads, opt["m"], opt["v"])
+    # out is a pytree of _Upd 3-tuples at param leaves; transpose it
+    # (_Upd is a sentinel type so params pytrees containing plain tuples —
+    # e.g. gemma's unrolled blocks — are not mistaken for update leaves)
+    is_upd = lambda x: isinstance(x, _Upd)  # noqa: E731
+    master = jax.tree.map(lambda t: t[0], out, is_leaf=is_upd)
+    m = jax.tree.map(lambda t: t[1], out, is_leaf=is_upd)
+    v = jax.tree.map(lambda t: t[2], out, is_leaf=is_upd)
+    new_params = jax.tree.map(lambda mp, p: mp.astype(p.dtype),
+                              master, params)
+    return new_params, {"m": m, "v": v, "master": master, "step": step}

@@ -1,0 +1,37 @@
+"""Recommendation quality metrics: HR@K and NDCG@K (paper §IV.B)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def hr_ndcg_at_k(scores: jnp.ndarray, gold: jnp.ndarray, k: int = 10,
+                 exclude: jnp.ndarray = None):
+    """scores: (U, V) full-ranking scores; gold: (U,) gold item ids.
+
+    exclude: optional (U, V) bool — items to remove from ranking (e.g. the
+    user's own history, standard leave-one-out protocol).
+    Returns (hr@k, ndcg@k) scalars.
+    """
+    s = scores.astype(jnp.float32)
+    if exclude is not None:
+        gold_onehot = jax.nn.one_hot(gold, s.shape[-1], dtype=bool)
+        s = jnp.where(exclude & ~gold_onehot, -jnp.inf, s)
+    gold_score = jnp.take_along_axis(s, gold[:, None], axis=-1)
+    # rank = number of items scoring strictly higher than gold
+    rank = jnp.sum(s > gold_score, axis=-1)
+    hit = rank < k
+    hr = jnp.mean(hit.astype(jnp.float32))
+    ndcg = jnp.mean(jnp.where(hit, 1.0 / jnp.log2(rank + 2.0), 0.0))
+    return hr, ndcg
+
+
+def history_exclusion(tokens: np.ndarray, n_vocab: int) -> np.ndarray:
+    """(U, S) history tokens -> (U, V) bool mask of seen items (+specials)."""
+    U = tokens.shape[0]
+    mask = np.zeros((U, n_vocab), bool)
+    for u in range(U):
+        mask[u, tokens[u]] = True
+    mask[:, :3] = True                         # pad/bos/mask tokens
+    return mask

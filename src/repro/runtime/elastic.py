@@ -1,0 +1,42 @@
+"""Elastic scaling: rebuild the mesh after membership changes and reshard
+live state onto it (paper §V.B: 'dynamic expansion ... maintaining training
+continuity when nodes decrease').
+
+Checkpoints are topology-free (full logical arrays), so restore-onto-new-mesh
+is just ``device_put`` with the new plan's shardings; live-state resharding
+works the same way without a round-trip to disk.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_mesh_for(n_devices: int, *, model: int = 1,
+                  axis_names: Tuple[str, str] = ("data", "model"),
+                  devices: Optional[Sequence] = None) -> Mesh:
+    """Largest (data, model) mesh that fits the surviving device set."""
+    devs = list(devices if devices is not None else jax.devices())[:n_devices]
+    data = len(devs) // model
+    devs = devs[:data * model]
+    arr = np.asarray(devs).reshape(data, model)
+    return Mesh(arr, axis_names)
+
+
+def reshard(tree: Any, shardings: Any) -> Any:
+    """Reshard a pytree of (possibly sharded) arrays onto new shardings.
+    Works across dp-degree changes because every array is logically global."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), tree, shardings)
+
+
+def shrink_batch(batch: Any, new_dp: int, old_dp: int) -> Any:
+    """Trim the global batch so it divides the surviving dp degree."""
+    def fix(x):
+        b = x.shape[0]
+        nb = (b // new_dp) * new_dp
+        return x[:nb]
+    return jax.tree.map(fix, batch)

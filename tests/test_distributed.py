@@ -1,0 +1,64 @@
+"""Multi-device integration tests: run ``distributed_checks.py`` once in a
+subprocess with 8 host devices and assert each check's result."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_RESULTS = None
+
+
+def results():
+    global _RESULTS
+    if _RESULTS is None:
+        env = dict(os.environ)
+        env.pop("XLA_FLAGS", None)
+        env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                         "src")
+        p = subprocess.run(
+            [sys.executable, os.path.join(os.path.dirname(__file__),
+                                          "distributed_checks.py")],
+            capture_output=True, text=True, timeout=1200, env=env)
+        for line in p.stdout.splitlines():
+            if line.startswith("RESULTS_JSON:"):
+                _RESULTS = json.loads(line[len("RESULTS_JSON:"):])
+                break
+        else:
+            raise RuntimeError(
+                f"no results marker; rc={p.returncode}\n"
+                f"stdout:\n{p.stdout[-2000:]}\nstderr:\n{p.stderr[-3000:]}")
+    return _RESULTS
+
+
+CHECKS = [
+    "hierarchical_allreduce_equals_flat",
+    "onebit_sync_matches_manual",
+    "topk_sync_matches_manual",
+    "gpipe_matches_serial",
+    "dp_train_step_hier_and_compressed_converge",
+    "hybrid_gspmd_train_step_runs",
+    "elastic_reshard_roundtrip",
+    "dryrun_cell_on_host_mesh",
+]
+
+
+@pytest.mark.parametrize("name", CHECKS)
+def test_distributed_check(name):
+    r = results()
+    assert name in r, f"check {name} never ran"
+    assert r[name]["ok"], f"{name}: {r[name].get('error')}\n" \
+                          f"{r[name].get('tb', '')}"
+
+
+def test_compressed_dp_converges_like_flat():
+    r = results()
+    losses = r.get("dp_losses", {})
+    if not losses:
+        pytest.skip("dp step check failed upstream")
+    # compressed modes converge (within 10x of exact sync / below an
+    # absolute floor well under the initial ~14.0)
+    flat_final = losses["flat"][1]
+    for mode in ("onebit", "topk", "hierarchical"):
+        assert losses[mode][1] < max(10 * flat_final, 3.0), (mode, losses)

@@ -1,0 +1,204 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracle,
+swept over shapes and dtypes, plus hypothesis property tests.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,Hk,Sq,Sk,D", [
+    (1, 2, 2, 32, 32, 16),
+    (2, 4, 2, 64, 64, 32),       # GQA
+    (1, 4, 1, 48, 80, 16),       # MQA, ragged seq (padding path)
+    (2, 2, 2, 16, 128, 64),      # long kv
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 16), (False, 0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, H, Hk, Sq, Sk, D, causal, window,
+                                     dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Hk, Sk, D), dtype)
+    v = jax.random.normal(ks[2], (B, Hk, Sk, D), dtype)
+    out = ops.flash_attention_bhsd(q, k, v, causal=causal, window=window,
+                                   block_q=16, block_k=16)
+    want = ref.flash_attention(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
+                    atol=tol, rtol=tol)
+
+
+def test_flash_attention_bshd_layout():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (2, 32, 4, 16))
+    k = jax.random.normal(ks[1], (2, 32, 2, 16))
+    v = jax.random.normal(ks[2], (2, 32, 2, 16))
+    out = ops.flash_attention(q, k, v, block_q=16, block_k=16)
+    want = ref.flash_attention(q.transpose(0, 2, 1, 3),
+                               k.transpose(0, 2, 1, 3),
+                               v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_matches_model_attention():
+    """Kernel agrees with the model stack's chunked attention."""
+    from repro.models import attention as attn_lib
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (2, 64, 4, 16))
+    k = jax.random.normal(ks[1], (2, 64, 2, 16))
+    v = jax.random.normal(ks[2], (2, 64, 2, 16))
+    out = ops.flash_attention(q, k, v, block_q=16, block_k=16)
+    want = attn_lib.chunked_attention(q, k, v, causal=True, chunk=16)
+    assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE router
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,E,k", [(64, 8, 2), (128, 64, 6), (96, 128, 8)])
+def test_moe_router_matches_ref(T, E, k):
+    logits = jax.random.normal(jax.random.PRNGKey(0), (T, E))
+    g1, i1, p1 = ops.moe_router(logits, k)
+    g2, i2, p2 = ref.moe_router(logits, k)
+    assert_allclose(np.asarray(p1), np.asarray(p2), atol=1e-6, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-6, rtol=1e-6)
+
+
+def test_moe_router_gates_normalized():
+    logits = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    g, i, _ = ops.moe_router(logits, 4)
+    assert_allclose(np.asarray(jnp.sum(g, -1)), np.ones(32), atol=1e-5)
+    # indices distinct per token
+    i = np.asarray(i)
+    assert all(len(set(row)) == 4 for row in i)
+
+
+# ---------------------------------------------------------------------------
+# 1-bit compression
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,block", [(8 * 512, 512), (8 * 2048, 512),
+                                     (8 * 1024, 1024)])
+def test_onebit_roundtrip_matches_ref(N, block):
+    g = jax.random.normal(jax.random.PRNGKey(0), (N,))
+    p1, s1 = ops.onebit_quantize(g, block)
+    p2, s2 = ops.onebit_quantize(g, block, impl="ref")
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-6, rtol=1e-6)
+    d1 = ops.onebit_dequantize(p1, s1, block)
+    d2 = ops.onebit_dequantize(p2, s2, block, impl="ref")
+    assert_allclose(np.asarray(d1), np.asarray(d2), atol=1e-6, rtol=1e-6)
+
+
+def test_onebit_sign_preservation():
+    g = jax.random.normal(jax.random.PRNGKey(1), (8 * 512,)) + 0.1
+    p, s = ops.onebit_quantize(g, 512)
+    d = ops.onebit_dequantize(p, s, 512)
+    nz = np.asarray(g) != 0
+    np.testing.assert_array_equal(np.sign(np.asarray(d))[nz],
+                                  np.sign(np.asarray(g))[nz])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_onebit_error_feedback_property(seed):
+    """dequant(quant(g)) + residual == g exactly (error feedback closes)."""
+    g = jax.random.normal(jax.random.PRNGKey(seed), (8 * 512,))
+    p, s = ops.onebit_quantize(g, 512)
+    d = ops.onebit_dequantize(p, s, 512)
+    resid = g - d
+    assert_allclose(np.asarray(d + resid), np.asarray(g), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# top-k sparsification
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,block,k", [(4096, 512, 8), (8192, 2048, 32),
+                                       (2048, 256, 1)])
+def test_topk_matches_ref(N, block, k):
+    g = jax.random.normal(jax.random.PRNGKey(0), (N,))
+    k1, r1 = ops.topk_sparsify(g, k, block)
+    k2, r2 = ops.topk_sparsify(g, k, block, impl="ref")
+    assert_allclose(np.asarray(k1), np.asarray(k2), atol=1e-6)
+    assert_allclose(np.asarray(r1), np.asarray(r2), atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 64))
+def test_topk_properties(seed, k):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (2048,))
+    kept, resid = ops.topk_sparsify(g, k, 512)
+    kept, resid, g = map(np.asarray, (kept, resid, g))
+    # decomposition is exact
+    assert_allclose(kept + resid, g, atol=1e-7)
+    # per block: at least k kept (ties included), none beyond threshold missed
+    for b in range(4):
+        kb = kept[b * 512:(b + 1) * 512]
+        gb = g[b * 512:(b + 1) * 512]
+        nz = np.count_nonzero(kb)
+        assert nz >= min(k, np.count_nonzero(gb))
+        # every kept magnitude >= every dropped magnitude
+        dropped = np.abs(gb[kb == 0])
+        if nz and dropped.size:
+            assert np.abs(kb[kb != 0]).min() >= dropped.max() - 1e-7
+
+
+# ---------------------------------------------------------------------------
+# fused AdamW
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N", [8 * 2048, 8 * 4096])
+def test_adamw_matches_ref(N):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    p, g, m, v = (jax.random.normal(k, (N,)) for k in ks)
+    v = jnp.abs(v)
+    step = 3
+    bc1, bc2 = 1 - 0.9 ** step, 1 - 0.95 ** step
+    out1 = ops.adamw_update(p, g, m, v, 1e-3, bc1, bc2)
+    out2 = ops.adamw_update(p, g, m, v, 1e-3, bc1, bc2, impl="ref")
+    for a, b in zip(out1, out2):
+        assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# chunked WKV6
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,T,hs,chunk", [
+    (2, 2, 64, 16, 16),
+    (1, 4, 32, 8, 8),
+    (2, 1, 96, 32, 32),
+])
+def test_wkv6_kernel_matches_ref(B, H, T, hs, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    r, k, v = (jax.random.normal(kk, (B, H, T, hs)) for kk in ks[:3])
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, H, T, hs)) * 2 - 2))
+    u = jax.random.normal(ks[4], (H, hs)) * 0.1
+    out = ops.wkv6_chunked(r, k, v, w, u, chunk=chunk)
+    want = ops.wkv6_chunked(r, k, v, w, u, impl="ref")
+    assert_allclose(np.asarray(out), np.asarray(want), atol=5e-4, rtol=5e-4)
+
+
+def test_wkv6_kernel_extreme_decay_stable():
+    """Fast-decay channels (w -> 0) must not overflow/NaN (exponents <= 0)."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    B, H, T, hs = 1, 2, 32, 8
+    r, k, v = (jax.random.normal(kk, (B, H, T, hs)) for kk in ks[:3])
+    w = jnp.full((B, H, T, hs), 1e-6)               # near-total decay
+    u = jnp.zeros((H, hs))
+    out = ops.wkv6_chunked(r, k, v, w, u, chunk=8)
+    assert np.isfinite(np.asarray(out)).all()
+    want = ops.wkv6_chunked(r, k, v, w, u, impl="ref")
+    assert_allclose(np.asarray(out), np.asarray(want), atol=5e-4, rtol=5e-4)

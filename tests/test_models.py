@@ -1,0 +1,147 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + decode parity.
+
+Every assigned arch instantiates a reduced same-family config, runs one
+forward/train step asserting output shapes and finite values, and (for the
+decode families) checks prefill-vs-decode consistency.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.config import get_arch, list_archs, reduced
+from repro.models import transformer as tf
+from repro.models.transformer import ModelCtx
+
+ARCHS = [a for a in list_archs()]
+CTX = ModelCtx(attn_chunk=8, mamba_chunk=4, moe_group=8)
+# decode parity needs drop-free MoE (capacity drops are batch-dependent)
+CTX_NODROP = ModelCtx(attn_chunk=8, mamba_chunk=4, moe_group=8,
+                      moe_capacity_factor=64.0)
+
+
+def make_batch(cfg, B=2, S=16):
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(3, cfg.vocab_size, (B, S)),
+                              jnp.int32),
+        "targets": jnp.asarray(rng.integers(3, cfg.vocab_size, (B, S)),
+                               jnp.int32),
+        "mask": jnp.ones((B, S), jnp.float32),
+    }
+    if cfg.pos_type == "mrope":
+        s_img = int(cfg.image_prefix_frac * S)
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(0, 0.02, (B, s_img, cfg.d_model)), jnp.float32)
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(S)[None, :, None], (B, S, 3)).astype(jnp.int32)
+    if cfg.encoder_layers:
+        batch["frames"] = jnp.asarray(
+            rng.normal(0, 0.02, (B, cfg.encoder_frames, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def built():
+    out = {}
+    for name in ARCHS:
+        cfg = dataclasses.replace(reduced(get_arch(name)), dtype="float32")
+        params = tf.init_params(jax.random.PRNGKey(0), cfg)
+        out[name] = (cfg, params)
+    return out
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_forward_and_loss(built, name):
+    cfg, params = built[name]
+    batch = make_batch(cfg)
+    logits, aux, _ = tf.forward(cfg, params, batch, CTX)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    loss, metrics = tf.loss_fn(cfg, params, batch, CTX)
+    assert np.isfinite(float(loss))
+    if cfg.is_moe:
+        # every token routes k experts
+        assert float(jnp.sum(aux["expert_load"])) > 0
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_one_train_step_no_nans(built, name):
+    cfg, params = built[name]
+    batch = make_batch(cfg)
+    grads = jax.grad(lambda p: tf.loss_fn(cfg, p, batch, CTX)[0])(params)
+    new = jax.tree.map(lambda p, g: p - 1e-3 * g.astype(p.dtype),
+                       params, grads)
+    loss2, _ = tf.loss_fn(cfg, new, batch, CTX)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_decode_matches_forward(built, name):
+    """Teacher-forced decode reproduces the full-sequence forward logits."""
+    cfg, params = built[name]
+    B, S = 2, 12
+    batch = make_batch(cfg, B, S)
+    if cfg.pos_type == "mrope":
+        pytest.skip("vlm decode positions tested separately")
+    ctx = CTX_NODROP if cfg.is_moe else CTX
+    logits_full, _, _ = tf.forward(cfg, params, batch, ctx)
+
+    cache = tf.init_cache(cfg, B, S)
+    if cfg.encoder_layers:
+        ck, cv = tf.whisper_prefill_cross(cfg, params, batch["frames"], CTX)
+        cache["cross_k"], cache["cross_v"] = ck, cv
+    outs = []
+    for t in range(S):
+        tok = batch["tokens"][:, t:t + 1]
+        lg, cache = tf.decode_step(cfg, params, cache, tok, ctx)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    assert_allclose(np.asarray(dec, np.float32),
+                    np.asarray(logits_full, np.float32),
+                    atol=2e-3, rtol=2e-3)
+
+
+def test_vlm_decode_runs(built):
+    cfg, params = built["qwen2-vl-2b"]
+    cache = tf.init_cache(cfg, 2, 8)
+    pos = jnp.zeros((2, 1, 3), jnp.int32)
+    lg, cache = tf.decode_step(cfg, params, cache,
+                               jnp.ones((2, 1), jnp.int32), CTX,
+                               positions=pos)
+    assert np.isfinite(np.asarray(lg)).all()
+    assert int(cache["len"][0]) == 1
+
+
+def test_gemma_ring_buffer_window():
+    """Local-attention ring cache gives same result as full cache once the
+    window is the only visible context."""
+    cfg = dataclasses.replace(reduced(get_arch("gemma3-1b")),
+                              dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(1), cfg)
+    B, S = 1, 14
+    batch = make_batch(cfg, B, S)
+    logits_full, _, _ = tf.forward(cfg, params, batch, CTX)
+    cache = tf.init_cache(cfg, B, S)
+    for t in range(S):
+        lg, cache = tf.decode_step(cfg, params, cache,
+                                   batch["tokens"][:, t:t + 1], CTX)
+    # ring caches must be window-sized
+    kinds = cfg.layer_kinds()
+    for i, kind in enumerate(kinds):
+        if kind == "local_attn":
+            assert cache["k"][i].shape[1] == cfg.sliding_window
+    assert_allclose(np.asarray(lg[:, 0]),
+                    np.asarray(logits_full[:, -1]), atol=2e-3, rtol=2e-3)
+
+
+def test_whisper_encoder_shapes(built):
+    cfg, params = built["whisper-medium"]
+    frames = jnp.ones((2, cfg.encoder_frames, cfg.d_model), jnp.float32)
+    enc = tf.whisper_encode(cfg, params, frames, CTX)
+    assert enc.shape == (2, cfg.encoder_frames, cfg.d_model)
+    assert np.isfinite(np.asarray(enc)).all()

@@ -1,0 +1,156 @@
+"""Deep unit tests for MoE dispatch semantics and SSM chunked-scan parity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.config import get_arch, reduced
+from repro.models import moe, ssm
+
+
+def moe_cfg(E=4, k=2, d=16, f=32):
+    return dataclasses.replace(
+        reduced(get_arch("qwen3-moe-30b-a3b")), num_experts=E,
+        experts_per_token=k, d_model=d, d_ff=f, dtype="float32")
+
+
+def test_moe_single_expert_equals_dense_mlp():
+    """E=1, k=1, no drops: MoE must equal the plain expert MLP."""
+    cfg = moe_cfg(E=1, k=1)
+    p = moe.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    out, aux = moe.moe_ffn(cfg, p, x, capacity_factor=64.0, group_size=8)
+    # dense reference with the same weights
+    h = jax.nn.silu(x @ p["wi_gate"][0]) * (x @ p["wi_up"][0])
+    want = h @ p["wo"][0]
+    assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = moe_cfg(E=4, k=1)
+    p = moe.init_moe(jax.random.PRNGKey(0), cfg)
+    # logits rigged so ALL tokens pick expert 0 -> capacity must drop some
+    # (x positive so sum(x) > 0 and the +10 row always wins)
+    p["router"] = jnp.zeros_like(p["router"]).at[:, 0].set(10.0)
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(1),
+                                  (1, 64, cfg.d_model))) + 0.1
+    out_tight, _ = moe.moe_ffn(cfg, p, x, capacity_factor=0.5, group_size=64)
+    out_loose, _ = moe.moe_ffn(cfg, p, x, capacity_factor=64.0, group_size=64)
+    # dropped tokens produce zero output -> the two differ
+    diff = np.abs(np.asarray(out_tight) - np.asarray(out_loose)).max(-1)
+    assert (diff > 1e-6).any()
+    # exactly capacity tokens survive
+    nonzero = (np.abs(np.asarray(out_tight)).max(-1) > 1e-9).sum()
+    cap = max(8, -(-int(64 * 1 / 4 * 0.5) // 8) * 8)
+    assert nonzero == cap
+
+
+def test_moe_load_stats_sum():
+    cfg = moe_cfg(E=8, k=2)
+    p = moe.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 32, cfg.d_model))
+    _, aux = moe.moe_ffn(cfg, p, x, group_size=32)
+    # every token routes k experts (pre-capacity counts)
+    assert float(jnp.sum(aux["expert_load"])) == 2 * 32 * cfg.experts_per_token
+    assert float(aux["lb_loss"]) >= 1.0 - 1e-3   # >= 1 by Cauchy-Schwarz
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_moe_router_gates_sum_to_one(seed):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (4, 6, 8))
+    gates, idx, probs = moe.router_topk(logits, 3)
+    assert_allclose(np.asarray(gates.sum(-1)), np.ones((4, 6)), atol=1e-5)
+    # indices are distinct per token
+    i = np.asarray(idx).reshape(-1, 3)
+    assert all(len(set(row)) == 3 for row in i)
+
+
+# --- mamba ---------------------------------------------------------------
+
+def test_mamba_chunked_equals_full_scan():
+    cfg = dataclasses.replace(reduced(get_arch("jamba-v0.1-52b")),
+                              d_model=16, dtype="float32")
+    p = ssm.init_mamba(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 16)) * 0.5
+    y1, s1 = ssm.mamba_forward(cfg, p, x, chunk=24)
+    y2, s2 = ssm.mamba_forward(cfg, p, x, chunk=4)
+    assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4, rtol=1e-4)
+    assert_allclose(np.asarray(s1["ssm"]), np.asarray(s2["ssm"]),
+                    atol=1e-4, rtol=1e-4)
+
+
+def test_mamba_decode_matches_forward():
+    cfg = dataclasses.replace(reduced(get_arch("jamba-v0.1-52b")),
+                              d_model=16, dtype="float32")
+    p = ssm.init_mamba(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 10, 16)) * 0.5
+    y_full, _ = ssm.mamba_forward(cfg, p, x, chunk=10)
+    st_ = ssm.init_mamba_state(cfg, 1)
+    outs = []
+    for t in range(10):
+        y, st_ = ssm.mamba_decode_step(cfg, p, x[:, t:t + 1], st_)
+        outs.append(y[:, 0])
+    dec = jnp.stack(outs, 1)
+    assert_allclose(np.asarray(dec), np.asarray(y_full), atol=1e-4,
+                    rtol=1e-4)
+
+
+# --- rwkv6 ---------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([4, 8, 24]))
+def test_wkv6_chunked_equals_sequential(seed, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    B, T, H, hs = 2, 24, 2, 8
+    r, k, v = (jax.random.normal(kk, (B, T, H, hs)) for kk in ks[:3])
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, T, H, hs)) * 2 - 2))
+    u = jax.random.normal(ks[4], (H, hs)) * 0.1
+    o1, S1 = ssm._wkv6_scan(r, k, v, w, u)
+    o2, S2 = ssm._wkv6_chunked(r, k, v, w, u, chunk=chunk)
+    assert_allclose(np.asarray(o1), np.asarray(o2), atol=5e-4, rtol=5e-4)
+    assert_allclose(np.asarray(S1), np.asarray(S2), atol=5e-4, rtol=5e-4)
+
+
+def test_wkv6_chunked_gradients_finite():
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    B, T, H, hs = 1, 16, 2, 4
+    r, k, v = (jax.random.normal(kk, (B, T, H, hs)) for kk in ks[:3])
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, T, H, hs))))
+    u = jax.random.normal(ks[4], (H, hs)) * 0.1
+
+    def loss(r, k, v, w):
+        o, _ = ssm._wkv6_chunked(r, k, v, w, u, chunk=4)
+        return jnp.sum(o ** 2)
+
+    grads = jax.grad(loss, argnums=(0, 1, 2, 3))(r, k, v, w)
+    for g in grads:
+        assert np.isfinite(np.asarray(g)).all()
+
+
+def test_expert_rebalance_is_equivariant():
+    """Permuting experts (LPT placement) leaves MoE outputs unchanged."""
+    from repro.core import load_balance as lb
+    cfg = moe_cfg(E=8, k=2)
+    p = moe.init_moe(jax.random.PRNGKey(3), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 16, cfg.d_model))
+    out0, aux0 = moe.moe_ffn(cfg, p, x, group_size=16)
+    # observed loads -> LPT permutation -> rebalanced params
+    load = np.asarray(aux0["expert_load"]) + 1e-3
+    assign, perm = lb.rebalance_experts(load, n_devices=4)
+    p2 = lb.rebalance_moe_params(p, perm)
+    out1, aux1 = moe.moe_ffn(cfg, p2, x, group_size=16)
+    np.testing.assert_allclose(np.asarray(out0), np.asarray(out1),
+                               atol=1e-5, rtol=1e-5)
+    # loads follow the permutation
+    np.testing.assert_allclose(np.asarray(aux1["expert_load"]),
+                               np.asarray(aux0["expert_load"])[perm],
+                               atol=1e-6)
+    # per-device balance improved (or already optimal)
+    before = lb.balance_quality(load, np.arange(8) // 2, 4)
+    after = lb.balance_quality(load[perm], np.arange(8) // 2, 4)
+    assert after <= before + 1e-9

@@ -1,0 +1,85 @@
+"""Optimizer + schedule tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import TrainConfig
+from repro.optimizer import adamw, schedule
+
+
+def test_adamw_decreases_quadratic():
+    tc = TrainConfig(weight_decay=0.0, grad_clip=0.0, b1=0.9, b2=0.999)
+    params = {"w": jnp.ones((8,)), "nested": ({"b": jnp.ones((3,))},)}
+    opt = adamw.init_opt_state(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["nested"][0]["b"] ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        params, opt = adamw.adamw_apply(params, g, opt, 0.05, tc)
+    assert float(loss(params)) < 0.05 * l0
+    assert int(opt["step"]) == 50
+
+
+def test_adamw_bias_correction_first_step():
+    """After one step from zero moments, update = -lr * sign-ish(g)."""
+    tc = TrainConfig(weight_decay=0.0, grad_clip=0.0)
+    params = {"w": jnp.zeros((4,))}
+    opt = adamw.init_opt_state(params)
+    g = {"w": jnp.asarray([1.0, -2.0, 3.0, -4.0])}
+    new, opt = adamw.adamw_apply(params, g, opt, 0.1, tc)
+    np.testing.assert_allclose(np.asarray(new["w"]),
+                               -0.1 * np.sign([1, -2, 3, -4]), rtol=1e-4)
+
+
+def test_adamw_weight_decay():
+    tc = TrainConfig(weight_decay=0.5, grad_clip=0.0)
+    params = {"w": jnp.ones((4,))}
+    opt = adamw.init_opt_state(params)
+    g = {"w": jnp.zeros((4,))}
+    new, _ = adamw.adamw_apply(params, g, opt, 0.1, tc)
+    np.testing.assert_allclose(np.asarray(new["w"]), 1 - 0.1 * 0.5,
+                               rtol=1e-5)
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 100.0)}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(adamw.global_norm(clipped)), 1.0,
+                               rtol=1e-5)
+    assert float(norm) == 200.0
+
+
+def test_adamw_bf16_params_fp32_master():
+    tc = TrainConfig(weight_decay=0.0, grad_clip=0.0)
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    opt = adamw.init_opt_state(params)
+    assert opt["master"]["w"].dtype == jnp.float32
+    g = {"w": jnp.full((4,), 1e-3, jnp.bfloat16)}
+    new, opt = adamw.adamw_apply(params, g, opt, 1e-4, tc)
+    assert new["w"].dtype == jnp.bfloat16
+    # master accumulates below bf16 resolution
+    assert float(jnp.abs(opt["master"]["w"] - 1.0).max()) > 0
+
+
+def test_warmup_cosine_shape():
+    lrs = [float(schedule.warmup_cosine(s, 1.0, 10, 100)) for s in range(100)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[10] - 1.0) < 0.11
+    assert lrs[-1] < 0.2
+    assert max(lrs) <= 1.0 + 1e-6
+
+
+def test_gemma_tuple_params_update():
+    """Regression: tuple-of-dicts params (gemma blocks) survive the
+    _Upd transpose."""
+    tc = TrainConfig(weight_decay=0.0, grad_clip=0.0)
+    params = {"blocks": ({"w": jnp.ones((2,))}, {"w": jnp.ones((2,))})}
+    opt = adamw.init_opt_state(params)
+    g = jax.tree.map(jnp.ones_like, params)
+    new, opt2 = adamw.adamw_apply(params, g, opt, 0.1, tc)
+    assert isinstance(new["blocks"], tuple) and len(new["blocks"]) == 2
+    assert float(new["blocks"][0]["w"][0]) < 1.0

@@ -1,0 +1,149 @@
+"""End-to-end system behaviour: train a tiny RecLLM with the real trainer,
+kill it mid-run (injected node failure), restart, and verify it resumes from
+the checkpoint and converges.  Also: attention-impl parity and property
+tests on the system's invariants."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import manager as ckpt
+from repro.config import TrainConfig, get_arch, reduced
+from repro.data import pipeline
+from repro.models import transformer as tf
+from repro.models.transformer import ModelCtx
+from repro.optimizer import adamw
+from repro.runtime import trainer
+
+
+def tiny_setup(tmp_path, steps=30, ckpt_every=10):
+    cfg = dataclasses.replace(reduced(get_arch("recllm-base")),
+                              dtype="float32", num_layers=2)
+    ctx = ModelCtx(attn_chunk=8)
+    tcfg = TrainConfig(steps=steps, learning_rate=3e-3, warmup_steps=2,
+                       checkpoint_every=ckpt_every,
+                       checkpoint_dir=str(tmp_path / "ckpt"),
+                       keep_checkpoints=2, grad_clip=1.0)
+
+    def loss_fn(p, b):
+        return tf.loss_fn(cfg, p, b, ctx)
+
+    def step_fn(params, opt, batch):
+        lr = 3e-3
+        (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params,
+                                                                   batch)
+        params, opt = adamw.adamw_apply(params, g, opt, lr, tcfg)
+        return params, opt, {"loss": loss}
+
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init_opt_state(params)
+    return cfg, tcfg, jax.jit(step_fn), {"params": params, "opt": opt}
+
+
+def batches(cfg, n, start=0):
+    return list(pipeline.synthetic_lm_batches(
+        cfg.vocab_size, 8, 16, n, seed=123))[start:]
+
+
+def test_train_checkpoint_restart_resumes(tmp_path):
+    """Fault tolerance: crash at step 25, restart resumes from step 20."""
+    cfg, tcfg, step_fn, state = tiny_setup(tmp_path)
+    data = batches(cfg, 40)
+
+    with pytest.raises(RuntimeError, match="injected failure"):
+        trainer.train_loop(state, iter(data), step_fn, tcfg,
+                           samples_per_batch=8, fail_at=25)
+    # --- restart: fresh process state, resume from latest checkpoint -----
+    cfg2, tcfg2, step_fn2, fresh = tiny_setup(tmp_path)
+    start, state2 = trainer.resume_or_init(fresh, tcfg2)
+    assert start == 20
+    assert int(state2["opt"]["step"]) == 20
+    res = trainer.train_loop(state2, iter(data[start:40]), step_fn2, tcfg2,
+                             start_step=start, samples_per_batch=8)
+    assert res.final_step == 40
+    assert np.isfinite(res.losses).all()
+
+
+def test_training_reduces_loss(tmp_path):
+    cfg, tcfg, step_fn, state = tiny_setup(tmp_path, steps=60,
+                                           ckpt_every=0)
+    data = batches(cfg, 60)
+    res = trainer.train_loop(state, iter(data), step_fn, tcfg,
+                             samples_per_batch=8)
+    assert np.mean(res.losses[-10:]) < np.mean(res.losses[:10])
+    assert res.throughput > 0
+
+
+def test_checkpoint_keeps_n(tmp_path):
+    cfg, tcfg, step_fn, state = tiny_setup(tmp_path, steps=50,
+                                           ckpt_every=10)
+    data = batches(cfg, 50)
+    trainer.train_loop(state, iter(data), step_fn, tcfg,
+                       samples_per_batch=8)
+    assert ckpt.list_steps(tcfg.checkpoint_dir) == [40, 50]
+
+
+# -- attention implementation parity (system invariant) ---------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([4, 8, 16]),
+       st.sampled_from([0, 8]))
+def test_chunked_equals_naive_attention(seed, chunk, window):
+    from repro.models import attention as al
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    B, S, H, Hk, D = 2, 24, 4, 2, 16
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, Hk, D))
+    v = jax.random.normal(ks[2], (B, S, Hk, D))
+    a = al.naive_attention(q, k, v, causal=True, window=window)
+    b = al.chunked_attention(q, k, v, causal=True, window=window,
+                             chunk=chunk)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                               rtol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_decode_attention_matches_naive_last_position(seed):
+    from repro.models import attention as al
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    B, S, H, Hk, D = 2, 12, 4, 2, 16
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, Hk, D))
+    v = jax.random.normal(ks[2], (B, S, Hk, D))
+    full = al.naive_attention(q, k, v, causal=True)
+    dec = al.decode_attention(q[:, -1:], k, v,
+                              jnp.full((B,), S, jnp.int32))
+    np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                               np.asarray(full[:, -1]), atol=2e-5,
+                               rtol=2e-5)
+
+
+# -- numeric invariants --------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_loss_invariant_to_pad_masking(seed):
+    """Masked positions must not affect the loss."""
+    cfg = dataclasses.replace(reduced(get_arch("olmo-1b")), dtype="float32",
+                              num_layers=1)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(3, cfg.vocab_size, (2, 8)).astype(np.int32)
+    targets = rng.integers(3, cfg.vocab_size, (2, 8)).astype(np.int32)
+    mask = np.ones((2, 8), np.float32)
+    mask[:, 6:] = 0.0
+    ctx = ModelCtx(attn_chunk=8)
+    t2 = targets.copy()
+    t2[:, 6:] = rng.integers(3, cfg.vocab_size, (2, 2))  # garbage in masked
+    l1, _ = tf.loss_fn(cfg, params, {"tokens": jnp.asarray(tokens),
+                                     "targets": jnp.asarray(targets),
+                                     "mask": jnp.asarray(mask)}, ctx)
+    l2, _ = tf.loss_fn(cfg, params, {"tokens": jnp.asarray(tokens),
+                                     "targets": jnp.asarray(t2),
+                                     "mask": jnp.asarray(mask)}, ctx)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
