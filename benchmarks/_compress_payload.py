@@ -13,6 +13,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.config import TrainConfig, get_arch, reduced  # noqa: E402
 from repro.models.transformer import ModelCtx  # noqa: E402
 from repro.optimizer import adamw  # noqa: E402
@@ -24,8 +25,7 @@ cfg = dataclasses.replace(reduced(get_arch("recllm-base")),
                           vocab_size=ds.n_items + 3, vocab_pad_to=32,
                           dtype="float32")
 ctx = ModelCtx(attn_chunk=8)
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("data",))
 STEPS = 50
 
 

@@ -51,15 +51,14 @@ from repro.data import pipeline  # noqa: E402
 
 
 def make_mesh(scheme, n):
-    import jax.sharding as jsh
-    kw = dict(axis_types=(jsh.AxisType.Auto,) * 2)
+    from repro import compat
     if scheme == "baseline":
-        return jax.make_mesh((1, 1), ("data", "model"), **kw)
+        return compat.make_mesh((1, 1), ("data", "model"))
     if scheme == "dp":
-        return jax.make_mesh((n, 1), ("data", "model"), **kw)
+        return compat.make_mesh((n, 1), ("data", "model"))
     if scheme == "mp":
-        return jax.make_mesh((1, n), ("data", "model"), **kw)
-    return jax.make_mesh((n // 2, 2), ("data", "model"), **kw)
+        return compat.make_mesh((1, n), ("data", "model"))
+    return compat.make_mesh((n // 2, 2), ("data", "model"))
 
 
 cfg = dataclasses.replace(

@@ -215,9 +215,50 @@ def kernels(rows):
           "measured")
 
 
+# ---------------------------------------------------------------------------
+# Serving: static vs continuous batching vs int8-KV continuous, equal slots
+# ---------------------------------------------------------------------------
+
+def serve(rows):
+    import dataclasses
+
+    import jax
+    from repro.config import get_arch, reduced
+    from repro.models import transformer as tf
+    from repro.serving import EngineConfig, ServingEngine, TrafficConfig, \
+        generate
+    from repro.serving.engine import make_backend
+
+    cfg = dataclasses.replace(reduced(get_arch("olmo-1b")), dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    requests = generate(TrafficConfig(
+        n_requests=32, rate=500.0, prompt_max=24, new_tokens_max=16,
+        vocab_size=cfg.vocab_size))
+    ecfg = EngineConfig(n_slots=4, max_len=64)
+
+    out = {}
+    for name, kv, refill in (("static", "native", "static"),
+                             ("continuous", "native", "continuous"),
+                             ("continuous_int8", "int8", "continuous")):
+        backend = make_backend(cfg, params, kv=kv)
+        vcfg = dataclasses.replace(ecfg, refill=refill)
+        ServingEngine(backend, vcfg).run(requests)       # compile/warm
+        _, _, s = ServingEngine(backend, vcfg).run(requests)
+        out[name] = s
+        _emit(rows, f"serve.{name}.tok_s", s["throughput_tok_s"], "measured")
+        _emit(rows, f"serve.{name}.ttft_p95_ms", s["ttft_s"]["p95"] * 1e3,
+              "measured")
+        _emit(rows, f"serve.{name}.decode_steps", s["decode_steps"],
+              "measured")
+    _emit(rows, "serve.continuous_vs_static.speedup",
+          out["continuous"]["throughput_tok_s"]
+          / out["static"]["throughput_tok_s"], "measured")
+    _save("serve", out)
+
+
 ALL = {"table2": table2, "table3": table3, "fig4": fig4, "fig5": fig5,
        "compression": compression, "async": async_staleness,
-       "kernels": kernels}
+       "kernels": kernels, "serve": serve}
 
 
 def main() -> None:

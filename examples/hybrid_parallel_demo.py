@@ -16,6 +16,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro import compat
 from repro.config import TrainConfig, get_arch, reduced  # noqa: E402
 from repro.data import pipeline  # noqa: E402
 from repro.models import transformer as tf  # noqa: E402
@@ -28,8 +29,7 @@ def main():
     cfg = dataclasses.replace(reduced(get_arch("recllm-base")),
                               dtype="float32")
     ctx = ModelCtx(attn_chunk=8)
-    mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 4), ("pod", "data"))
     tcfg = TrainConfig(steps=30, learning_rate=3e-3, warmup_steps=3,
                        checkpoint_every=0)
 

@@ -16,6 +16,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro import compat
 from repro.config import get_arch, reduced  # noqa: E402
 from repro.core import load_balance, pipeline  # noqa: E402
 from repro.core.hybrid import layer_flops  # noqa: E402
@@ -63,8 +64,7 @@ def main():
         logits = L.lm_logits(cfg, {**lp, "embed": lp["embed"]}, h)
         return L.cross_entropy_loss(logits, tgt)
 
-    mesh = jax.make_mesh((N_STAGES,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((N_STAGES,), ("stage",))
     loss_fn = pipeline.make_pipeline_loss(stage_fn, last_fn, mesh,
                                           N_STAGES, N_MICRO)
 

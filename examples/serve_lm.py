@@ -1,100 +1,55 @@
-"""Serving example: batched request serving with slot-based continuous
-batching — prefill on arrival, interleaved decode for active slots.
+"""Serving example: the continuous-batching engine on a reduced LM.
+
+The fixed-slot `SlotServer` toy that used to live here grew into
+``src/repro/serving`` — a first-class engine with prefill-on-arrival, a
+bounded admission queue, static/continuous refill policies, an optional
+int8 KV cache, and SLO-aware latency metrics.  This example drives it over
+a small simulated recsys workload and prints both the generations and the
+latency report.
 
   PYTHONPATH=src python examples/serve_lm.py --arch olmo-1b --requests 12
 """
 import argparse
 import dataclasses
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.config import get_arch, list_archs, reduced
 from repro.models import transformer as tf
-from repro.models.transformer import ModelCtx
-
-
-class SlotServer:
-    """Fixed-slot continuous batching: each slot holds one request's cache
-    row; finished slots are refilled from the queue (the TPU-idiomatic
-    version of vLLM-style batching: static shapes, per-slot lengths)."""
-
-    def __init__(self, cfg, params, n_slots: int, max_len: int, ctx):
-        self.cfg, self.params, self.ctx = cfg, params, ctx
-        self.n_slots, self.max_len = n_slots, max_len
-        self.cache = tf.init_cache(cfg, n_slots, max_len)
-        self.active = np.zeros(n_slots, bool)
-        self.remaining = np.zeros(n_slots, np.int32)
-        self.outputs = [[] for _ in range(n_slots)]
-        self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
-        self._decode = jax.jit(
-            lambda p, c, t: tf.decode_step(cfg, p, c, t, ctx))
-
-    def add_request(self, slot: int, prompt, max_new: int):
-        # prefill = teacher-forced decode of the prompt into the cache row
-        # (a batched prefill kernel is the production path; slot-wise decode
-        # keeps this example simple)
-        for t in prompt:
-            tok = self.tokens.at[slot, 0].set(int(t))
-            _, self.cache = self._decode(self.params, self.cache, tok)
-        self.active[slot] = True
-        self.remaining[slot] = max_new
-        self.tokens = self.tokens.at[slot, 0].set(int(prompt[-1]))
-
-    def step(self):
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          self.tokens)
-        nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
-        self.tokens = nxt[:, None]
-        done = []
-        for s in range(self.n_slots):
-            if self.active[s]:
-                self.outputs[s].append(int(nxt[s]))
-                self.remaining[s] -= 1
-                if self.remaining[s] <= 0:
-                    self.active[s] = False
-                    done.append(s)
-        return done
+from repro.serving import (EngineConfig, ServingEngine, TrafficConfig,
+                           generate)
+from repro.serving.engine import make_backend
+from repro.serving.metrics import format_report
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b", choices=list_archs())
-    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=64.0)
+    ap.add_argument("--kv", default="native", choices=("native", "int8"))
     args = ap.parse_args()
 
     cfg = dataclasses.replace(reduced(get_arch(args.arch)), dtype="float32")
-    if cfg.pos_type == "mrope" or cfg.encoder_layers:
-        raise SystemExit("serve_lm demo targets text decoder archs")
+    if tf.family(cfg) != "uniform":
+        raise SystemExit("serve_lm targets uniform text-decoder archs; "
+                         "use `python -m repro.launch.serve --mode raw` "
+                         "for ssm/hybrid/enc-dec families")
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
-    ctx = ModelCtx(attn_chunk=8, mamba_chunk=4, moe_group=8)
-    server = SlotServer(cfg, params, args.slots, 128, ctx)
 
-    rng = np.random.default_rng(0)
-    queue = [rng.integers(3, cfg.vocab_size, size=rng.integers(4, 10)).tolist()
-             for _ in range(args.requests)]
-    served = 0
-    for s in range(min(args.slots, len(queue))):
-        server.add_request(s, queue.pop(0), args.new_tokens)
+    requests = generate(TrafficConfig(
+        n_requests=args.requests, rate=args.rate, prompt_max=24,
+        new_tokens_max=16, vocab_size=cfg.vocab_size))
+    engine = ServingEngine(make_backend(cfg, params, kv=args.kv),
+                           EngineConfig(n_slots=args.slots, max_len=64))
+    outputs, records, summary = engine.run(requests)
 
-    t0 = time.perf_counter()
-    tokens_out = 0
-    while server.active.any() or queue:
-        done = server.step()
-        tokens_out += int(server.active.sum()) + len(done)
-        for s in done:
-            served += 1
-            print(f"request {served} done: {server.outputs[s][:8]}...")
-            server.outputs[s] = []
-            if queue:
-                server.add_request(s, queue.pop(0), args.new_tokens)
-    dt = time.perf_counter() - t0
-    print(f"served {served + len([1 for o in server.outputs if o])} requests,"
-          f" ~{tokens_out / dt:.1f} tokens/s (host CPU)")
+    for rec in records:
+        state = "rejected" if rec.rejected else \
+            f"user {rec.user_id:5d} -> {outputs[rec.rid][:8]}..."
+        print(f"request {rec.rid:3d} [{rec.slo_name:11s}] {state}")
+    print(format_report(summary, f"{cfg.name} x{args.slots} slots"))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,57 @@
+"""Version-compat shims for jax APIs that moved between 0.4.x and 0.6.x.
+
+The repo targets current jax, but hermetic CI containers may pin an older
+release; every call site goes through these helpers instead of sniffing
+versions locally.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """`jax.make_mesh` with Auto axis types where the kwarg exists.
+
+    jax < 0.5 has no `jax.sharding.AxisType` (all meshes behave as Auto),
+    so omitting the kwarg there is semantically identical.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                             axis_types=(axis_type.Auto,) * len(axis_names))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def abstract_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """`jax.sharding.AbstractMesh` across the 0.4.x -> 0.5.x signature
+    change ((name, size) pairs vs separate shape/name tuples)."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(axis_shapes),
+                                         tuple(axis_names))
+    except TypeError:
+        return jax.sharding.AbstractMesh(
+            tuple(zip(axis_names, axis_shapes)))
+
+
+def axis_size(name: str):
+    """Static named-axis size inside shard_map: `jax.lax.axis_size` where
+    available, else the classic `psum(1, axis)` idiom."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+def pallas_compiler_params():
+    """Pallas TPU compiler-params class: renamed TPUCompilerParams ->
+    CompilerParams in jax 0.5.x."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams",
+                  getattr(pltpu, "TPUCompilerParams", None))
+    if cls is None:
+        raise ImportError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams "
+            "nor TPUCompilerParams; unsupported jax version "
+            f"{jax.__version__}")
+    return cls

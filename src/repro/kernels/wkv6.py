@@ -18,6 +18,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
+_CompilerParams = compat.pallas_compiler_params()
+
 
 def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_scr, *, chunk: int,
             hs: int, n_chunks: int):
@@ -81,7 +85,7 @@ def wkv6_chunked(r, k, v, w, u, *, chunk: int = 32, interpret=False):
         out_specs=spec(),
         out_shape=jax.ShapeDtypeStruct((B, H, T, hs), r.dtype),
         scratch_shapes=[pltpu.VMEM((hs, hs), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, w, u)

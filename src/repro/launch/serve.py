@@ -1,36 +1,81 @@
-"""Serving launcher: batched decode benchmark for any --arch.
+"""Serving launcher: continuous-batching engine under simulated recsys load.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
-      --batch 8 --new-tokens 32
+Default mode drives :mod:`repro.serving` — a fixed-slot continuous-batching
+engine fed by the Poisson/bursty Zipfian traffic simulator — and reports
+throughput plus p50/p95/p99 TTFT / per-token latency against SLO tiers:
+
+  PYTHONPATH=src python -m repro.launch.serve --reduced
+  PYTHONPATH=src python -m repro.launch.serve --reduced --arch deepseek-7b \\
+      --slots 8 --requests 64 --rate 128 --process bursty --kv int8
+
+``--mode raw`` keeps the original fixed-batch decode-loop microbenchmark,
+which works for every architecture family (the engine requires the uniform
+decoder family):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \\
+      --mode raw --batch 8 --new-tokens 32
 """
 import argparse
 import dataclasses
+import json
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.config import get_arch, list_archs, reduced
 from repro.models import transformer as tf
 from repro.models.transformer import ModelCtx
+from repro.serving import (EngineConfig, ServingEngine, TrafficConfig,
+                           generate)
+from repro.serving.engine import make_backend
+from repro.serving.metrics import format_report
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="olmo-1b", choices=list_archs())
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--cache-len", type=int, default=128)
-    ap.add_argument("--new-tokens", type=int, default=32)
-    args = ap.parse_args(argv)
+def run_engine(args) -> int:
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = dataclasses.replace(reduced(cfg), dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
 
+    defaults = TrafficConfig()
+    tcfg = TrafficConfig(
+        n_requests=args.requests, rate=args.rate, process=args.process,
+        prompt_max=max(defaults.prompt_min, min(48, args.max_len // 2)),
+        new_tokens_max=max(defaults.new_tokens_min,
+                           min(24, args.max_len // 4)),
+        vocab_size=cfg.vocab_size, seed=args.seed)
+    requests = generate(tcfg)
+
+    ecfg = EngineConfig(n_slots=args.slots, max_len=args.max_len,
+                        queue_capacity=args.queue_capacity,
+                        refill=args.refill)
+    try:
+        backend = make_backend(cfg, params, kv=args.kv)
+    except NotImplementedError as e:
+        raise SystemExit(f"{e}\n(use --mode raw for non-uniform families)")
+    if not args.no_warmup:
+        # compile every prefill bucket + the decode step outside the
+        # measured run, as a resident production server would be
+        ServingEngine(backend, ecfg).run(requests)
+    outputs, records, summary = ServingEngine(backend, ecfg).run(requests)
+
+    title = (f"{cfg.name} kv={args.kv} refill={args.refill} "
+             f"slots={args.slots} {args.process}@{args.rate:g}req/s")
+    print(format_report(summary, title))
+    if args.json:
+        print(json.dumps(summary, indent=1))
+    return 0
+
+
+def run_raw(args) -> int:
+    """Legacy fixed-batch decode loop (any family, incl. ssm/enc-dec)."""
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = dataclasses.replace(reduced(cfg), dtype="float32")
     ctx = ModelCtx(attn_chunk=64, mamba_chunk=16, moe_group=64)
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
-    cache = tf.init_cache(cfg, args.batch, args.cache_len)
+    cache = tf.init_cache(cfg, args.batch, args.max_len)
     if cfg.encoder_layers:
         frames = jnp.zeros((args.batch, cfg.encoder_frames, cfg.d_model),
                            jnp.dtype(cfg.dtype))
@@ -56,6 +101,34 @@ def main(argv=None) -> int:
     print(f"{cfg.name}: {tps:.1f} tokens/s (host CPU), "
           f"{dt / args.new_tokens * 1e3:.1f} ms/step at batch {args.batch}")
     return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b", choices=list_archs())
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mode", default="engine", choices=("engine", "raw"))
+    # engine mode
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=64.0)
+    ap.add_argument("--process", default="poisson",
+                    choices=("poisson", "bursty"))
+    ap.add_argument("--kv", default="native", choices=("native", "int8"))
+    ap.add_argument("--refill", default="continuous",
+                    choices=("continuous", "static"))
+    ap.add_argument("--queue-capacity", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-warmup", action="store_true")
+    ap.add_argument("--json", action="store_true")
+    # raw mode
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args(argv)
+    if args.mode == "raw":
+        return run_raw(args)
+    return run_engine(args)
 
 
 if __name__ == "__main__":

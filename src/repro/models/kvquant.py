@@ -52,6 +52,75 @@ def cache_insert(cache_q, cache_s, pos, k_new):
     return cache_q, cache_s
 
 
+def init_model_quant_cache(cfg, batch: int, max_len: int) -> Dict:
+    """Quantized decode cache shaped for an ArchConfig (uniform family:
+    stacked per-layer K/V, the layout serving's Int8KVBackend scatters
+    into)."""
+    from repro.models import transformer as tf
+    if tf.family(cfg) != "uniform":
+        raise NotImplementedError(
+            f"int8 KV cache supports the uniform family, not {tf.family(cfg)}")
+    return init_quant_cache(batch, max_len, cfg.num_kv_heads, cfg.head_dim,
+                            cfg.num_layers)
+
+
+def quant_decode_step(cfg, params, cache: Dict, tokens, ctx=None):
+    """One decode step against the int8 cache — the quantized twin of
+    ``transformer.decode_step`` for the uniform family.
+
+    tokens (B, 1) -> (logits (B, 1, V), new_cache).  Per-layer K/V for the
+    incoming token are quantized on insert; attention runs via
+    :func:`decode_attention_quant` so the cache is never dequantized in
+    full."""
+    from repro.models import layers
+    from repro.models import transformer as tf
+    if tf.family(cfg) != "uniform":
+        raise NotImplementedError("quant_decode_step: uniform family only")
+    if ctx is None:
+        ctx = tf.ModelCtx()
+    B = tokens.shape[0]
+    pos = cache["len"]                              # (B,) per-row lengths
+    h = layers.embed_tokens(params["embed"], tokens)
+
+    def body(x, inp):
+        blk, k_q, k_s, v_q, v_s = inp
+        hn = layers.apply_norm(cfg, blk["attn"]["norm"], x)
+        q, k, v = tf._qkv(cfg, blk["attn"], hn, pos[:, None], ctx)
+        k_q, k_s = cache_insert(k_q, k_s, pos, k[:, 0])
+        v_q, v_s = cache_insert(v_q, v_s, pos, v[:, 0])
+        o = decode_attention_quant(q, k_q, k_s, v_q, v_s, pos + 1)
+        x = x + o.reshape(B, 1, cfg.q_dim) @ blk["attn"]["wo"]
+        f_out, _ = tf.ffn_apply(cfg, blk["ffn"], x, ctx)
+        x = x + f_out
+        return x, (k_q, k_s, v_q, v_s)
+
+    h, (kqs, kss, vqs, vss) = jax.lax.scan(
+        body, h, (params["blocks"], cache["k_q"], cache["k_s"],
+                  cache["v_q"], cache["v_s"]))
+    h = layers.apply_norm(cfg, params["final_norm"], h)
+    logits = layers.lm_logits(cfg, params, h)
+    return logits, {"k_q": kqs, "k_s": kss, "v_q": vqs, "v_s": vss,
+                    "len": cache["len"] + 1}
+
+
+def quant_prefill_kv(cfg, params, batch: Dict, ctx=None):
+    """Full-sequence prefill forward returning quantized per-layer K/V.
+
+    Returns (logits (B, S, V), (k_q, k_s, v_q, v_s)) with the K/V stacked
+    (L, B, S, Hk, D) / scales (L, B, S, Hk), ready to scatter into an
+    :func:`init_model_quant_cache` slot."""
+    from repro.models import transformer as tf
+    if tf.family(cfg) != "uniform":
+        raise NotImplementedError("quant prefill: uniform family only")
+    if ctx is None:
+        ctx = tf.ModelCtx()
+    logits, _, kvs = tf.forward(cfg, params, batch, ctx, collect_kv=True)
+    k, v = kvs
+    k_q, k_s = quantize_kv(k)
+    v_q, v_s = quantize_kv(v)
+    return logits, (k_q, k_s, v_q, v_s)
+
+
 def decode_attention_quant(q, k_q, k_s, v_q, v_s, lengths,
                            softmax_scale=None):
     """One-token decode against an int8 cache.

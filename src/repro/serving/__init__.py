@@ -1,0 +1,27 @@
+"""Online serving subsystem: continuous-batching engine, recsys traffic
+simulator, and SLO-aware latency metrics.
+
+The deployment half of the paper: once a recommendation LLM is trained with
+the hybrid-parallel stack, it must serve heavy interactive traffic.  This
+package promotes the `examples/serve_lm.py` toy into a first-class engine:
+
+* :mod:`repro.serving.engine`  — fixed-slot continuous batching (static
+  shapes, per-slot lengths, prefill-on-arrival, bounded admission queue),
+  with a native-dtype KV backend and an int8-quantized KV backend.
+* :mod:`repro.serving.traffic` — reproducible request workloads: Poisson or
+  bursty arrivals, Zipfian users and prompt lengths, per-request SLO tiers.
+* :mod:`repro.serving.metrics` — throughput, TTFT, per-output-token latency,
+  p50/p95/p99, and SLO attainment.
+"""
+from repro.serving.engine import (EngineConfig, Int8KVBackend, NativeBackend,
+                                  ServingEngine)
+from repro.serving.metrics import RequestRecord, percentile, summarize
+from repro.serving.traffic import (BATCH_TIER, INTERACTIVE_TIER, Clock,
+                                   Request, SLOTier, TrafficConfig, generate)
+
+__all__ = [
+    "EngineConfig", "ServingEngine", "NativeBackend", "Int8KVBackend",
+    "RequestRecord", "percentile", "summarize",
+    "Request", "SLOTier", "TrafficConfig", "generate", "Clock",
+    "INTERACTIVE_TIER", "BATCH_TIER",
+]

@@ -1,0 +1,284 @@
+"""Fixed-slot continuous-batching serving engine.
+
+The TPU-idiomatic version of vLLM-style batching: the decode batch has a
+*static* shape of ``n_slots`` cache rows, each slot holds one request, and
+per-slot lengths (``cache["len"]``) track where each row's KV frontier is.
+Arriving requests wait in a bounded admission queue; a free slot is filled
+by a batched prefill of the prompt scattered into that slot's cache row
+(prefill-on-arrival), after which every engine step decodes one token for
+all occupied slots.  Finished slots (max-new-tokens reached or early EOS)
+are refilled immediately (``refill="continuous"``) or only once the whole
+batch drains (``refill="static"`` — the classical static-batching baseline
+the benchmark compares against).
+
+Two KV-cache backends plug into the same scheduler:
+
+* :class:`NativeBackend` — model-dtype cache via ``transformer.init_cache``
+  / ``decode_step``.
+* :class:`Int8KVBackend` — int8-quantized cache via ``models.kvquant``
+  (half the cache bytes; the decode roofline's memory term).
+
+Time is kept on a :class:`~repro.serving.traffic.Clock`: each model call
+advances it by measured wall time (or a pinned per-call cost in tests), and
+idle waits jump straight to the next arrival, so simulated Poisson load
+plays out faithfully without real sleeping.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import kvquant
+from repro.models import transformer as tf
+from repro.serving import metrics as metrics_lib
+from repro.serving.traffic import Clock, Request
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_slots: int = 4
+    max_len: int = 128
+    queue_capacity: int = 64
+    refill: str = "continuous"          # continuous | static
+    prompt_quantum: int = 8             # prompts pad to multiples (bounds
+                                        # the number of prefill recompiles)
+    pad_id: int = 0
+
+
+def _bucket(n: int, quantum: int, cap: int) -> int:
+    return min(cap, ((n + quantum - 1) // quantum) * quantum)
+
+
+class _UniformFamilyBackend:
+    """Shared jit wiring for slot backends over the uniform decoder family.
+
+    Subclasses supply ``init_cache``, ``_prefill_impl`` (traced: scatter a
+    prompt's K/V into one slot, return that slot's last-position logits),
+    and ``_decode_impl`` (traced one-token decode for the whole batch)."""
+
+    def __init__(self, cfg, params, ctx: Optional[tf.ModelCtx] = None):
+        if tf.family(cfg) != "uniform":
+            raise NotImplementedError(
+                f"{type(self).__name__} supports the uniform decoder "
+                f"family; {cfg.name} is {tf.family(cfg)}")
+        self.cfg, self.params = cfg, params
+        self.ctx = ctx if ctx is not None else tf.ModelCtx(attn_chunk=8)
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill = jax.jit(self._prefill_impl)
+
+    def prefill(self, cache: Dict, tokens: np.ndarray, true_len: int,
+                slot: int):
+        """tokens (1, S_pad) -> (last-position logits (V,), cache)."""
+        return self._prefill(self.params, cache,
+                             jnp.asarray(tokens, jnp.int32),
+                             jnp.int32(true_len), jnp.int32(slot))
+
+    def decode(self, cache: Dict, tokens):
+        """tokens (n_slots, 1) -> (logits (n_slots, 1, V), cache)."""
+        return self._decode(self.params, cache, tokens)
+
+
+class NativeBackend(_UniformFamilyBackend):
+    """Model-dtype KV cache via transformer.init_cache/decode_step."""
+
+    def init_cache(self, n_slots: int, max_len: int) -> Dict:
+        return tf.init_cache(self.cfg, n_slots, max_len)
+
+    def _decode_impl(self, params, cache, tokens):
+        return tf.decode_step(self.cfg, params, cache, tokens, self.ctx)
+
+    def _prefill_impl(self, params, cache, tokens, true_len, slot):
+        logits, _, (k, v) = tf.forward(self.cfg, params, {"tokens": tokens},
+                                       self.ctx, collect_kv=True)
+        cache = dict(cache)
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0, 0))
+        cache["len"] = cache["len"].at[slot].set(true_len)
+        return logits[0, true_len - 1], cache
+
+
+class Int8KVBackend(_UniformFamilyBackend):
+    """Int8-quantized KV cache (kvquant): half the cache bytes per slot."""
+
+    def init_cache(self, n_slots: int, max_len: int) -> Dict:
+        return kvquant.init_model_quant_cache(self.cfg, n_slots, max_len)
+
+    def _decode_impl(self, params, cache, tokens):
+        return kvquant.quant_decode_step(self.cfg, params, cache, tokens,
+                                         self.ctx)
+
+    def _prefill_impl(self, params, cache, tokens, true_len, slot):
+        logits, (k_q, k_s, v_q, v_s) = kvquant.quant_prefill_kv(
+            self.cfg, params, {"tokens": tokens}, self.ctx)
+        cache = dict(cache)
+        for name, upd in (("k_q", k_q), ("k_s", k_s),
+                          ("v_q", v_q), ("v_s", v_s)):
+            start = (0, slot) + (0,) * (upd.ndim - 2)
+            cache[name] = jax.lax.dynamic_update_slice(
+                cache[name], upd.astype(cache[name].dtype), start)
+        cache["len"] = cache["len"].at[slot].set(true_len)
+        return logits[0, true_len - 1], cache
+
+
+def make_backend(cfg, params, ctx: Optional[tf.ModelCtx] = None,
+                 kv: str = "native"):
+    if kv == "native":
+        return NativeBackend(cfg, params, ctx)
+    if kv == "int8":
+        return Int8KVBackend(cfg, params, ctx)
+    raise ValueError(f"unknown kv backend {kv!r}")
+
+
+class ServingEngine:
+    """Slot scheduler over any backend exposing init_cache/prefill/decode."""
+
+    def __init__(self, backend, ecfg: EngineConfig = EngineConfig(),
+                 clock: Optional[Clock] = None):
+        self.backend, self.ecfg = backend, ecfg
+        self.clock = clock if clock is not None else Clock()
+        n = ecfg.n_slots
+        self.cache = backend.init_cache(n, ecfg.max_len)
+        self.queue: Deque[Tuple[Request, metrics_lib.RequestRecord]] = deque()
+        self.slot_req: List[Optional[Request]] = [None] * n
+        self.slot_rec: List[Optional[metrics_lib.RequestRecord]] = [None] * n
+        self.slot_remaining = np.zeros(n, np.int64)
+        self.slot_tokens = np.zeros((n, 1), np.int32)
+        self.outputs: Dict[int, List[int]] = {}
+        self.records: List[metrics_lib.RequestRecord] = []
+        self.decode_steps = 0
+        self.prefills = 0
+
+    # -- bookkeeping helpers -------------------------------------------------
+
+    @property
+    def n_active(self) -> int:
+        return sum(1 for r in self.slot_req if r is not None)
+
+    def _timed(self, fixed_s: Optional[float], fn):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        self.clock.advance(fixed_s if fixed_s is not None
+                           else time.perf_counter() - t0)
+        return out
+
+    # -- scheduler ops -------------------------------------------------------
+
+    def submit(self, req: Request) -> bool:
+        """Enqueue; False (and a rejected record) when the bounded admission
+        queue is full or the prompt cannot fit the serving window."""
+        rec = metrics_lib.RequestRecord(
+            rid=req.rid, user_id=req.user_id, prompt_len=len(req.prompt),
+            slo_name=req.slo.name, ttft_slo_s=req.slo.ttft_ms / 1e3,
+            tpot_slo_s=req.slo.tpot_ms / 1e3, arrival=req.arrival)
+        self.records.append(rec)
+        if (len(self.queue) >= self.ecfg.queue_capacity
+                or len(req.prompt) >= self.ecfg.max_len):
+            rec.rejected = True
+            return False
+        self.queue.append((req, rec))
+        return True
+
+    def _start(self, slot: int, req: Request,
+               rec: metrics_lib.RequestRecord) -> None:
+        """Prefill-on-arrival into one slot; the first generated token falls
+        out of the prefill logits."""
+        rec.admitted = self.clock.now
+        prompt = np.asarray(req.prompt, np.int32)
+        s_pad = _bucket(len(prompt), self.ecfg.prompt_quantum,
+                        self.ecfg.max_len)
+        padded = np.full((1, s_pad), self.ecfg.pad_id, np.int32)
+        padded[0, :len(prompt)] = prompt
+        logits_row, self.cache = self._timed(
+            self.clock.fixed_prefill_s,
+            lambda: self.backend.prefill(self.cache, padded,
+                                         len(prompt), slot))
+        self.prefills += 1
+        first = int(jnp.argmax(logits_row))
+        rec.first_token = self.clock.now
+        rec.tokens_out = 1
+        self.outputs[req.rid] = [first]
+        budget = min(req.max_new_tokens, self.ecfg.max_len - len(prompt))
+        if first == req.eos_id or budget <= 1:
+            rec.finished = self.clock.now       # slot never occupied
+            return
+        self.slot_req[slot] = req
+        self.slot_rec[slot] = rec
+        self.slot_remaining[slot] = budget - 1
+        self.slot_tokens[slot, 0] = first
+
+    def _refill(self) -> None:
+        free = [s for s in range(self.ecfg.n_slots)
+                if self.slot_req[s] is None]
+        if self.ecfg.refill == "static" and len(free) < self.ecfg.n_slots:
+            return                              # classical batch barrier
+        for s in free:
+            while self.queue and self.slot_req[s] is None:
+                req, rec = self.queue.popleft()
+                self._start(s, req, rec)        # may finish instantly (EOS)
+
+    def _decode_once(self) -> None:
+        logits, self.cache = self._timed(
+            self.clock.fixed_decode_s,
+            lambda: self.backend.decode(self.cache,
+                                        jnp.asarray(self.slot_tokens)))
+        self.decode_steps += 1
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
+        for s in range(self.ecfg.n_slots):
+            req, rec = self.slot_req[s], self.slot_rec[s]
+            if req is None:
+                continue
+            tok = int(nxt[s])
+            self.outputs[req.rid].append(tok)
+            rec.tokens_out += 1
+            self.slot_remaining[s] -= 1
+            self.slot_tokens[s, 0] = tok
+            if tok == req.eos_id or self.slot_remaining[s] <= 0:
+                rec.finished = self.clock.now
+                self.slot_req[s] = None
+                self.slot_rec[s] = None
+
+    # -- driver --------------------------------------------------------------
+
+    def run(self, requests: Sequence[Request]):
+        """Serve a workload to completion.
+
+        Returns (outputs {rid: [token, ...]}, records, summary-dict)."""
+        reqs = sorted(requests, key=lambda r: r.arrival)
+        i = 0
+        while True:
+            while i < len(reqs) and reqs[i].arrival <= self.clock.now:
+                self.submit(reqs[i])
+                i += 1
+            self._refill()
+            if self.n_active:
+                self._decode_once()
+                continue
+            if self.queue:
+                # every slot free + non-empty queue should have refilled
+                raise RuntimeError("scheduler stalled with queued work")
+            if i < len(reqs):
+                self.clock.advance(reqs[i].arrival - self.clock.now)
+                continue
+            break
+        summary = metrics_lib.summarize(self.records, self.clock.now)
+        summary["decode_steps"] = self.decode_steps
+        summary["prefills"] = self.prefills
+        return self.outputs, self.records, summary
+
+
+def serve(cfg, params, requests: Sequence[Request],
+          ecfg: EngineConfig = EngineConfig(),
+          ctx: Optional[tf.ModelCtx] = None, kv: str = "native",
+          clock: Optional[Clock] = None):
+    """One-call convenience wrapper: build backend + engine, run, report."""
+    engine = ServingEngine(make_backend(cfg, params, ctx, kv), ecfg, clock)
+    return engine.run(requests)

@@ -1,0 +1,92 @@
+"""Deterministic stand-in for `hypothesis` used when the real package is
+absent (hermetic containers without network access).
+
+`tests/conftest.py` installs this module as ``sys.modules["hypothesis"]``
+only when ``import hypothesis`` fails, so CI environments with the real
+dependency (see requirements.txt) get genuine property-based testing with
+shrinking, and dependency-less environments still run every property test
+over a fixed, seeded sample of the strategy space.
+
+Only the API surface this repo's tests use is provided:
+
+    from hypothesis import given, settings, strategies as st
+    st.integers / st.floats / st.sampled_from / st.lists
+
+Examples are drawn from a per-test ``random.Random`` seeded by the test's
+qualified name, so failures are reproducible run-to-run.
+"""
+from __future__ import annotations
+
+import inspect
+import os
+import random
+import zlib
+
+# Cap fallback examples below hypothesis' max_examples: without shrinking the
+# extra draws buy little, and the suite runs JAX under every draw.
+_MAX_EXAMPLES_CAP = int(os.environ.get("HYP_FALLBACK_MAX_EXAMPLES", "10"))
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    """A sampler: draw(rng) -> one example."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def given(*strategies: _Strategy):
+    """Run the test once per drawn example (no shrinking)."""
+
+    def decorate(fn):
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples", _DEFAULT_EXAMPLES)
+            # stable per-test seed: same examples every run
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for _ in range(min(n, _MAX_EXAMPLES_CAP)):
+                fn(*[s.draw(rng) for s in strategies])
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        # empty signature so pytest doesn't mistake generated args for fixtures
+        wrapper.__signature__ = inspect.Signature()
+        wrapper._fallback_given = True
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+    """Record max_examples on an already-``given``-wrapped test."""
+
+    def decorate(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return decorate

@@ -16,6 +16,8 @@ import numpy as np  # noqa: E402
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
 from jax.experimental.shard_map import shard_map  # noqa: E402
 
+from repro import compat  # noqa: E402
+
 RESULTS = {}
 
 
@@ -33,13 +35,11 @@ def check(name):
 
 
 def pod_mesh():
-    return jax.make_mesh((2, 4), ("pod", "data"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((2, 4), ("pod", "data"))
 
 
 def data_mesh():
-    return jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((8,), ("data",))
 
 
 # ---------------------------------------------------------------------------
@@ -134,8 +134,7 @@ def _():
 @check("gpipe_matches_serial")
 def _():
     from repro.core import pipeline
-    mesh = jax.make_mesh((8,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((8,), ("stage",))
     S, M, mb, d = 8, 16, 4, 32
     ks = jax.random.split(jax.random.PRNGKey(3), S)
     Ws = jnp.stack([jax.random.normal(k, (d, d)) * (d ** -0.5) for k in ks])
@@ -218,8 +217,7 @@ def _():
     from repro.models import transformer as tf, model_zoo
     from repro.optimizer import adamw
     from repro.runtime import trainer
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((4, 2), ("data", "model"))
     cfg = dataclasses.replace(reduced(get_arch("qwen3-moe-30b-a3b")),
                               dtype="float32", num_heads=2, num_kv_heads=2)
     plan = auto_plan(cfg, mesh, SHAPES["train_4k"], ParallelConfig())
@@ -264,8 +262,7 @@ def _():
     from repro.config import get_arch, reduced, SHAPES, ParallelConfig
     import repro.config as rc
     from repro.launch import dryrun_lib
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((4, 2), ("data", "model"))
     cfg = reduced(get_arch("olmo-1b"))
     shape = dataclasses.replace(SHAPES["decode_32k"], seq_len=64,
                                 global_batch=8)

@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 from numpy.testing import assert_allclose
 
+from repro import compat
 from repro.config import ParallelConfig, ShapeConfig, TrainConfig, \
     get_arch, reduced
 from repro.models import transformer as tf
@@ -65,8 +66,7 @@ def test_grad_accumulation_matches_monolithic():
     from repro.runtime import trainer
     cfg = dataclasses.replace(reduced(get_arch("olmo-1b")), num_layers=2,
                               dtype="float32")
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     shape = ShapeConfig("t", 16, 8, "train")
     tcfg = TrainConfig(steps=5, checkpoint_every=0, grad_clip=0.0)
     rng = np.random.default_rng(0)

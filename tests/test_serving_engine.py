@@ -1,0 +1,337 @@
+"""Serving subsystem: scheduler invariants, decode parity, metrics math,
+traffic-simulator properties."""
+import dataclasses
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import get_arch, reduced
+from repro.models import transformer as tf
+from repro.serving import engine as eng
+from repro.serving import metrics as sm
+from repro.serving import traffic
+
+
+# ---------------------------------------------------------------------------
+# metrics: percentile + summarize math
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0.0, 1000.0), min_size=1, max_size=40),
+       st.sampled_from([0, 25, 50, 75, 90, 95, 99, 100]))
+def test_percentile_matches_numpy(xs, q):
+    assert sm.percentile(xs, q) == pytest.approx(
+        float(np.percentile(np.asarray(xs), q)), rel=1e-9, abs=1e-9)
+
+
+def test_summarize_throughput_and_slo():
+    recs = []
+    for i in range(4):
+        r = sm.RequestRecord(rid=i, slo_name="interactive",
+                             ttft_slo_s=0.5, tpot_slo_s=0.1,
+                             arrival=0.0, admitted=0.1)
+        r.first_token = 0.1 * (i + 1)          # 0.1 .. 0.4 TTFT
+        r.finished = r.first_token + 0.05 * 4  # 5 tokens, tpot 0.05
+        r.tokens_out = 5
+        recs.append(r)
+    s = sm.summarize(recs, elapsed_s=2.0)
+    assert s["tokens_out"] == 20
+    assert s["throughput_tok_s"] == pytest.approx(10.0)
+    assert s["ttft_s"]["p50"] == pytest.approx(0.25)
+    # all meet tpot (0.05 <= 0.1); all meet ttft (<= 0.5)
+    assert s["slo"]["interactive"]["attainment"] == pytest.approx(1.0)
+    recs[3].first_token = 0.9                  # blow the TTFT SLO for one
+    recs[3].finished = 0.9 + 0.2
+    s = sm.summarize(recs, elapsed_s=2.0)
+    assert s["slo"]["interactive"]["attainment"] == pytest.approx(0.75)
+
+
+# ---------------------------------------------------------------------------
+# scheduler invariants on a deterministic toy backend (no jax model)
+# ---------------------------------------------------------------------------
+
+class CountingBackend:
+    """Next token = (last token + 1) % V; no real cache."""
+
+    V = 32
+
+    def init_cache(self, n_slots, max_len):
+        return {"len": np.zeros(n_slots, np.int64)}
+
+    def prefill(self, cache, tokens, true_len, slot):
+        logits = np.zeros(self.V, np.float32)
+        logits[(int(tokens[0, true_len - 1]) + 1) % self.V] = 1.0
+        return logits, cache
+
+    def decode(self, cache, tokens):
+        B = tokens.shape[0]
+        logits = np.zeros((B, 1, self.V), np.float32)
+        for b in range(B):
+            logits[b, 0, (int(tokens[b, 0]) + 1) % self.V] = 1.0
+        return logits, cache
+
+
+def _toy_workload(n=24, seed=0, eos_id=-1, arrival_rate=200.0):
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, n))
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(2, 10))
+        prompt = tuple(int(t) for t in
+                       rng.integers(0, CountingBackend.V, plen))
+        reqs.append(traffic.Request(
+            rid=i, user_id=i, prompt=prompt,
+            max_new_tokens=int(rng.integers(2, 9)),
+            arrival=float(arrivals[i]), eos_id=eos_id))
+    return reqs
+
+
+def _toy_engine(refill="continuous", n_slots=3, queue_capacity=64,
+                max_len=64):
+    clock = traffic.Clock(fixed_decode_s=0.01, fixed_prefill_s=0.02)
+    ecfg = eng.EngineConfig(n_slots=n_slots, max_len=max_len,
+                            queue_capacity=queue_capacity, refill=refill)
+    return eng.ServingEngine(CountingBackend(), ecfg, clock)
+
+
+def test_scheduler_serves_everything_without_slot_leaks():
+    reqs = _toy_workload()
+    engine = _toy_engine()
+    outputs, records, summary = engine.run(reqs)
+    # queue drained, no occupied slots left behind
+    assert not engine.queue
+    assert all(r is None for r in engine.slot_req)
+    assert summary["finished"] == len(reqs) and summary["rejected"] == 0
+    # each request served exactly once with its full token budget,
+    # and the counting model's tokens are exact (parity with "sequential")
+    for r in reqs:
+        want = [(r.prompt[-1] + 1 + i) % CountingBackend.V
+                for i in range(r.max_new_tokens)]
+        assert outputs[r.rid] == want
+    # lifecycle timestamps are ordered
+    for rec in records:
+        assert rec.arrival <= rec.admitted <= rec.first_token <= rec.finished
+
+
+def test_bounded_queue_rejects_overflow():
+    reqs = [dataclasses.replace(r, arrival=0.0) for r in _toy_workload(n=12)]
+    engine = _toy_engine(n_slots=1, queue_capacity=3)
+    outputs, records, summary = engine.run(reqs)
+    # the whole burst arrives before any slot frees, so only the bounded
+    # queue's capacity is admitted; the rest are rejected
+    assert summary["rejected"] == 12 - 3
+    assert summary["finished"] == 3
+    rejected = {r.rid for r in records if r.rejected}
+    assert all(rid not in outputs for rid in rejected)
+
+
+def test_oversized_prompt_rejected_not_crashed():
+    ok = _toy_workload(n=2)[0]
+    too_long = traffic.Request(rid=99, user_id=0,
+                               prompt=tuple(range(70)), max_new_tokens=4,
+                               arrival=0.0)
+    engine = _toy_engine(max_len=64)
+    outputs, records, summary = engine.run([ok, too_long])
+    assert summary["rejected"] == 1
+    assert ok.rid in outputs and 99 not in outputs
+
+
+def test_early_eos_truncates_generation():
+    prompt = (5, 6, 7)
+    # counting model emits 8, 9, 10, ... -> eos at the 3rd token
+    req = traffic.Request(rid=0, user_id=0, prompt=prompt,
+                          max_new_tokens=10, arrival=0.0, eos_id=10)
+    outputs, records, _ = _toy_engine().run([req])
+    assert outputs[0] == [8, 9, 10]
+    assert records[0].tokens_out == 3
+
+
+def test_eos_on_first_token_frees_slot_immediately():
+    req = traffic.Request(rid=0, user_id=0, prompt=(3,),
+                          max_new_tokens=10, arrival=0.0, eos_id=4)
+    engine = _toy_engine()
+    outputs, records, summary = engine.run([req])
+    assert outputs[0] == [4]
+    assert summary["decode_steps"] == 0
+    assert all(r is None for r in engine.slot_req)
+
+
+def test_continuous_refill_beats_static_on_steps_and_throughput():
+    reqs = _toy_workload(n=30, seed=3)
+    sums = {}
+    for refill in ("static", "continuous"):
+        engine = _toy_engine(refill=refill)
+        _, _, sums[refill] = engine.run(reqs)
+        assert sums[refill]["finished"] == len(reqs)
+    # static idles finished slots until the whole batch drains; with mixed
+    # max_new_tokens continuous needs strictly fewer decode steps and
+    # delivers more tokens/s at the same slot count
+    assert (sums["continuous"]["decode_steps"]
+            < sums["static"]["decode_steps"])
+    assert (sums["continuous"]["throughput_tok_s"]
+            > sums["static"]["throughput_tok_s"])
+
+
+def test_static_refill_waits_for_full_drain():
+    reqs = [dataclasses.replace(r, arrival=0.0)
+            for r in _toy_workload(n=6, seed=1)]
+    engine = _toy_engine(refill="static", n_slots=3)
+
+    started_at = {}
+    orig = engine._start
+
+    def spy(slot, req, rec):
+        started_at[req.rid] = engine.clock.now
+        return orig(slot, req, rec)
+
+    engine._start = spy
+    engine.run(reqs)
+    assert len(started_at) == 6
+    # 6 requests on 3 slots = two admission waves of 3: the barrier means
+    # the 4th start happens only after every wave-1 request finished
+    by_start = sorted(started_at, key=started_at.get)
+    first_wave, second_wave_start = by_start[:3], started_at[by_start[3]]
+    finish = {rec.rid: rec.finished for rec in engine.records}
+    assert all(finish[r] <= second_wave_start + 1e-9 for r in first_wave)
+
+
+# ---------------------------------------------------------------------------
+# real-model parity: continuous batch decode == sequential decode
+# ---------------------------------------------------------------------------
+
+def _real_requests(cfg, n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(4, 12))
+        reqs.append(traffic.Request(
+            rid=i, user_id=i,
+            prompt=tuple(int(t) for t in
+                         rng.integers(3, cfg.vocab_size, plen)),
+            max_new_tokens=int(rng.integers(3, 8)), arrival=0.0))
+    return reqs
+
+
+def _sequential_greedy(cfg, params, req, max_len=64):
+    ctx = tf.ModelCtx(attn_chunk=8)
+    cache = tf.init_cache(cfg, 1, max_len)
+    batch = {"tokens": jnp.asarray([req.prompt], jnp.int32)}
+    logits, cache = tf.prefill_into_cache(cfg, params, batch, cache, ctx)
+    toks = [int(jnp.argmax(logits[0]))]
+    while len(toks) < req.max_new_tokens:
+        lg, cache = tf.decode_step(cfg, params, cache,
+                                   jnp.asarray([[toks[-1]]], jnp.int32), ctx)
+        toks.append(int(jnp.argmax(lg[0, 0])))
+    return toks
+
+
+def test_continuous_batching_matches_sequential_decode():
+    cfg = dataclasses.replace(reduced(get_arch("olmo-1b")), dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = _real_requests(cfg)
+    ecfg = eng.EngineConfig(n_slots=2, max_len=64)
+    outputs, _, summary = eng.serve(cfg, params, reqs, ecfg)
+    assert summary["finished"] == len(reqs)
+    for req in reqs:
+        assert outputs[req.rid] == _sequential_greedy(cfg, params, req), \
+            f"request {req.rid} diverged from sequential decode"
+
+
+def test_int8_kv_backend_tracks_native_logits():
+    cfg = dataclasses.replace(reduced(get_arch("olmo-1b")), dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    native = eng.NativeBackend(cfg, params)
+    quant = eng.Int8KVBackend(cfg, params)
+    cache_n = native.init_cache(2, 64)
+    cache_q = quant.init_cache(2, 64)
+    rng = np.random.default_rng(1)
+    for slot in range(2):
+        plen = int(rng.integers(6, 12))
+        padded = np.zeros((1, 16), np.int32)
+        padded[0, :plen] = rng.integers(3, cfg.vocab_size, plen)
+        ln, cache_n = native.prefill(cache_n, padded, plen, slot)
+        lq, cache_q = quant.prefill(cache_q, padded, plen, slot)
+        # prefill runs the unquantized forward in both backends
+        np.testing.assert_allclose(np.asarray(ln), np.asarray(lq),
+                                   atol=1e-5, rtol=1e-5)
+    # decode against the quantized cache: logits stay within a small
+    # fraction of the native logit spread, greedy argmax identical
+    toks = jnp.asarray([[5], [9]], jnp.int32)
+    for _ in range(4):
+        lg_n, cache_n = native.decode(cache_n, toks)
+        lg_q, cache_q = quant.decode(cache_q, toks)
+        spread = float(jnp.max(lg_n) - jnp.min(lg_n))
+        err = float(jnp.max(jnp.abs(lg_n - lg_q)))
+        assert err <= 0.05 * spread, f"int8 logit error {err} vs {spread}"
+        assert (jnp.argmax(lg_n[:, 0], -1)
+                == jnp.argmax(lg_q[:, 0], -1)).all()
+        toks = jnp.argmax(lg_n[:, -1:], -1).astype(jnp.int32)
+
+
+def test_engine_rejects_unsupported_family():
+    cfg = dataclasses.replace(reduced(get_arch("rwkv6-1.6b")),
+                              dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(NotImplementedError):
+        eng.NativeBackend(cfg, params)
+    with pytest.raises(NotImplementedError):
+        eng.Int8KVBackend(cfg, params)
+
+
+# ---------------------------------------------------------------------------
+# traffic simulator properties
+# ---------------------------------------------------------------------------
+
+def test_traffic_is_deterministic_and_sorted():
+    cfg = traffic.TrafficConfig(n_requests=50, seed=7)
+    a, b = traffic.generate(cfg), traffic.generate(cfg)
+    assert a == b
+    assert all(x.arrival <= y.arrival for x, y in zip(a, a[1:]))
+    for r in a:
+        assert cfg.prompt_min <= len(r.prompt) <= cfg.prompt_max
+        assert cfg.new_tokens_min <= r.max_new_tokens <= cfg.new_tokens_max
+        assert all(3 <= t < cfg.vocab_size for t in r.prompt)
+
+
+def test_traffic_user_popularity_is_zipfian():
+    reqs = traffic.generate(traffic.TrafficConfig(n_requests=200, seed=0))
+    top = Counter(r.user_id for r in reqs).most_common(1)[0][1]
+    # uniform over 10k users would make repeats vanishingly rare
+    assert top >= 10
+
+
+def test_traffic_same_user_shares_history_prefix():
+    reqs = traffic.generate(traffic.TrafficConfig(n_requests=200, seed=0))
+    by_user = {}
+    for r in reqs:
+        by_user.setdefault(r.user_id, []).append(r.prompt)
+    multi = [ps for ps in by_user.values() if len(ps) >= 2]
+    assert multi, "zipf workload should revisit users"
+    for ps in multi[:5]:
+        a, b = ps[0], ps[1]
+        n = min(len(a), len(b)) // 2
+        assert n == 0 or a[:n] == b[:n]
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 1000))
+def test_bursty_arrivals_are_burstier_than_poisson(seed):
+    kw = dict(n_requests=150, rate=50.0, seed=seed)
+    gaps = {}
+    for proc in ("poisson", "bursty"):
+        arr = [r.arrival for r in traffic.generate(
+            traffic.TrafficConfig(process=proc, **kw))]
+        g = np.diff(np.concatenate([[0.0], arr]))
+        gaps[proc] = g.std() / g.mean()        # coefficient of variation
+    assert gaps["bursty"] > gaps["poisson"]
+
+
+def test_slo_tiers_assigned_by_fraction():
+    reqs = traffic.generate(traffic.TrafficConfig(
+        n_requests=300, interactive_fraction=0.75, seed=0))
+    frac = sum(r.slo.name == "interactive" for r in reqs) / len(reqs)
+    assert 0.6 < frac < 0.9
