@@ -17,8 +17,8 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 RESULTS_DIR = os.path.join(ROOT, "experiments", "bench")
 
 
-def _run_payload(**kw):
-    cmd = [sys.executable, "-m", "benchmarks._dist_payload"]
+def _run_payload(_module="benchmarks._dist_payload", **kw):
+    cmd = [sys.executable, "-m", _module]
     for k, v in kw.items():
         cmd += [f"--{k.replace('_', '-')}", str(v)]
     env = dict(os.environ)
@@ -216,6 +216,42 @@ def kernels(rows):
 
 
 # ---------------------------------------------------------------------------
+# Embedding sharding plans: replicated-dense vs row / col / 2D, plus the
+# sparse rows-touched gradient sync — exchanged bytes, per-device table
+# memory, host step time, roofline-modeled TPU collective term
+# ---------------------------------------------------------------------------
+
+def embed(rows):
+    cases = (
+        # key               plan        mesh(d,m)  grad-sync
+        ("replicated",       "replicated", "8,1", "dense"),
+        ("replicated_sparse", "replicated", "8,1", "sparse"),
+        ("row",              "row",        "2,4", "dense"),
+        ("row_sparse",       "row",        "2,4", "sparse"),
+        ("col",              "col",        "8,1", "dense"),
+        ("row_col",          "row_col",    "2,4", "dense"),
+    )
+    out = {}
+    for key, plan, mesh, sync in cases:
+        r = _run_payload(_module="benchmarks._embed_payload", plan=plan,
+                         mesh=mesh, grad_sync=sync, steps=4)
+        out[key] = r
+        _emit(rows, f"embed.{key}.host_step", r["host_step_ms"] * 1e3,
+              "measured")
+        _emit(rows, f"embed.{key}.coll_mb_per_step",
+              r["coll_bytes_per_dev"] / 1e6, "derived")
+        _emit(rows, f"embed.{key}.table_mb_per_dev",
+              r["table_bytes_per_dev"] / 1e6, "derived")
+        _emit(rows, f"embed.{key}.t_collective_us",
+              r["t_collective_ms"] * 1e3, "derived")
+    base = out["replicated"]["coll_bytes_per_dev"]
+    for key in ("replicated_sparse", "row", "row_sparse", "col", "row_col"):
+        _emit(rows, f"embed.{key}.bytes_vs_replicated",
+              out[key]["coll_bytes_per_dev"] / base, "derived")
+    _save("embed", out)
+
+
+# ---------------------------------------------------------------------------
 # Serving: static vs continuous batching vs int8-KV continuous, equal slots
 # ---------------------------------------------------------------------------
 
@@ -258,7 +294,7 @@ def serve(rows):
 
 ALL = {"table2": table2, "table3": table3, "fig4": fig4, "fig5": fig5,
        "compression": compression, "async": async_staleness,
-       "kernels": kernels, "serve": serve}
+       "kernels": kernels, "serve": serve, "embed": embed}
 
 
 def main() -> None:

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import embeddings
 from repro.config import TrainConfig, get_arch, reduced
 from repro.models.transformer import ModelCtx
 from repro.optimizer import adamw, schedule
@@ -33,6 +34,12 @@ def main():
                     help="use the full recllm-base (~160M params)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_recsys_ckpt")
     ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--embed-plan", default="replicated",
+                    choices=embeddings.PLANS,
+                    help="CF-table sharding plan to cost (placement summary"
+                         " printed before training)")
+    ap.add_argument("--embed-mesh", default="8,4",
+                    help="data,model mesh extents for the placement summary")
     args = ap.parse_args()
 
     ds = dataset.generate(scale=args.scale, seed=0)
@@ -53,6 +60,25 @@ def main():
     n = sum(x.size for x in jax.tree.leaves(params))
     print(f"RecLLM params: {n/1e6:.1f}M  (backbone {cfg.num_layers}L "
           f"d={cfg.d_model})")
+
+    # embedding placement: what each sharding plan would cost at scale
+    dp, mp = (int(x) for x in args.embed_mesh.split(","))
+    mesh_shape = {"data": dp, "model": mp}
+    plan = embeddings.make_plan(args.embed_plan)
+    batch_per_dev = max(1, args.batch // dp)
+    for spec in recmodel.embed_specs(cfg, ds.n_users).values():
+        try:
+            s = embeddings.plan_summary(spec, plan, mesh_shape,
+                                        batch_per_dev)
+        except ValueError as e:                  # dims don't divide the mesh
+            print(f"embed[{spec.name}] plan {plan.kind}: skipped ({e})")
+            continue
+        print(f"embed[{spec.name}] plan {plan.kind} on mesh {mesh_shape}: "
+              f"shard ({s['shard_rows']},{s['shard_cols']}) = "
+              f"{s['table_bytes_per_dev']/1e6:.2f} MB/dev, "
+              f"exchange {s['modeled_exchange_bytes']['total']/1e6:.3f} "
+              f"MB/step (sparse DP sync "
+              f"{s['modeled_sparse_sync_bytes']/1e6:.3f} MB)")
     opt = adamw.init_opt_state(params)
 
     def loss_fn(p, b):

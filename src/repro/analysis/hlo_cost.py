@@ -34,7 +34,11 @@ COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                   "collective-permute")
 
 _SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([\d,]*)\]")
+# computation headers: the signature form ``%name (args) -> type {`` (jax
+# >= 0.5 dump style) and the bare form ``name {`` / ``ENTRY name {`` that
+# older XLA pass dumps emit
 _COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->")
+_COMP_HEADER_BARE_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\{\s*$")
 _WHILE_RE = re.compile(
     r"\bwhile\(.*?condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
@@ -219,8 +223,9 @@ def parse_computations(hlo: str) -> Tuple[Dict[str, List[str]], Optional[str]]:
     cur: Optional[str] = None
     for line in hlo.splitlines():
         if cur is None:
-            m = _COMP_HEADER_RE.match(line)
-            if m and line.rstrip().endswith("{"):
+            m = _COMP_HEADER_RE.match(line) or _COMP_HEADER_BARE_RE.match(line)
+            if m and line.rstrip().endswith("{") \
+                    and not line.startswith("HloModule"):
                 cur = m.group(2)
                 comps[cur] = []
                 if m.group(1):

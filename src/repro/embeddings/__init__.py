@@ -1,0 +1,19 @@
+"""Sharded sparse-embedding subsystem.
+
+* :mod:`repro.embeddings.table`  — placement: EmbedSpec/EmbedPlan, shard
+  shapes/bytes, PartitionSpecs, the modeled exchange-cost summary.
+* :mod:`repro.embeddings.lookup` — dedup lookup (unique -> gather ->
+  inverse) and the shard_map lookups for each sharding plan.
+* :mod:`repro.embeddings.update` — rows-touched sparse-gradient DP sync
+  and segment-sum gradients, with optional payload compression.
+"""
+from repro.embeddings.table import (  # noqa: F401
+    PLANS, EmbedPlan, EmbedSpec, exchange_bytes, init_table, make_plan,
+    named_sharding, plan_summary, pspec, shard_bytes, shard_shape,
+    sparse_exchange_bytes)
+from repro.embeddings.lookup import (  # noqa: F401
+    dedup_ids, dedup_lookup, make_sharded_lookup, replicated_lookup,
+    sharded_lookup_body)
+from repro.embeddings.update import (  # noqa: F401
+    gather_grad_rows, make_row_compressor, rows_touched, scatter_rows,
+    sparse_grad_from_lookup, sparse_row_sync)

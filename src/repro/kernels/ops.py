@@ -12,6 +12,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import embedding_ops as _embed
 from repro.kernels import fused_adamw as _adamw
 from repro.kernels import wkv6 as _wkv6
 from repro.kernels import flash_attention as _flash
@@ -97,6 +98,24 @@ def topk_sparsify(g: jnp.ndarray, k: int, block: int = 2048, impl="kernel"):
     else:
         kept, resid = _topk.topk_sparsify(x2d, k, interpret=_interpret())
     return kept.reshape(N), resid.reshape(N)
+
+
+# -- embedding gather / scatter-add ---------------------------------------------
+
+@partial(jax.jit, static_argnames=("impl",))
+def embedding_gather(table, ids, impl="kernel"):
+    """table (V, D), ids (n,) -> (n, D) = table[ids] (fused DMA gather)."""
+    if impl == "ref":
+        return ref.gather_rows(table, ids)
+    return _embed.gather_rows(table, ids, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("n_rows", "impl"))
+def embedding_scatter_add(x, idx, n_rows: int, impl="kernel"):
+    """x (n, D), idx (n,) -> (n_rows, D) segment-sum (exact duplicates)."""
+    if impl == "ref":
+        return ref.scatter_add_rows(x, idx, n_rows)
+    return _embed.scatter_add_rows(x, idx, n_rows, interpret=_interpret())
 
 
 # -- fused AdamW -----------------------------------------------------------------

@@ -102,6 +102,20 @@ def topk_sparsify(x2d, k: int):
 
 
 # ---------------------------------------------------------------------------
+# embedding gather / segment-sum scatter-add (the dedup-lookup pair)
+# ---------------------------------------------------------------------------
+
+def gather_rows(table, ids):
+    """table (V, D), ids (n,) -> (n, D) = table[ids]."""
+    return table[ids]
+
+
+def scatter_add_rows(x, idx, n_rows: int):
+    """x (n, D), idx (n,) -> (n_rows, D) with out[idx[i]] += x[i]."""
+    return jnp.zeros((n_rows, x.shape[-1]), x.dtype).at[idx].add(x)
+
+
+# ---------------------------------------------------------------------------
 # fused AdamW update
 # ---------------------------------------------------------------------------
 

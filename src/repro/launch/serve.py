@@ -44,12 +44,13 @@ def run_engine(args) -> int:
         prompt_max=max(defaults.prompt_min, min(48, args.max_len // 2)),
         new_tokens_max=max(defaults.new_tokens_min,
                            min(24, args.max_len // 4)),
-        vocab_size=cfg.vocab_size, seed=args.seed)
+        vocab_size=cfg.vocab_size, seed=args.seed,
+        temperature=args.temperature, top_k=args.top_k)
     requests = generate(tcfg)
 
     ecfg = EngineConfig(n_slots=args.slots, max_len=args.max_len,
                         queue_capacity=args.queue_capacity,
-                        refill=args.refill)
+                        refill=args.refill, sample_seed=args.seed)
     try:
         backend = make_backend(cfg, params, kv=args.kv)
     except NotImplementedError as e:
@@ -119,6 +120,10 @@ def main(argv=None) -> int:
     ap.add_argument("--refill", default="continuous",
                     choices=("continuous", "static"))
     ap.add_argument("--queue-capacity", type=int, default=64)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="restrict sampling to the k best logits (0 = off)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-warmup", action="store_true")
     ap.add_argument("--json", action="store_true")

@@ -4,28 +4,51 @@ A decoder-only LM over item-token sequences produces next-item logits; a CF
 (matrix-factorization) head over user/item embeddings provides collaborative
 signals; a learned fusion gate combines the two — the cross-modal
 collaborative fusion of Fig. 1.  Trained end-to-end with next-item CE.
+
+The CF factor tables are ``repro.embeddings`` tables: inits come from
+:func:`embeddings.init_table`, the user lookup goes through the dedup path
+(unique -> gather -> inverse — recsys batches revisit users heavily), and
+:func:`embed_specs`/:func:`embed_id_fns` expose the placement/sparse-sync
+hooks the trainer and benchmarks consume.  ``cf_item`` participates as a
+dense factor product (every item is scored every step), so only ``cf_user``
+— and the LM's item-token ``embed`` table — have sparse row gradients.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import ArchConfig
+from repro.embeddings import EmbedSpec, dedup_lookup, init_table
 from repro.models import layers, transformer as tf
 from repro.models.transformer import ModelCtx
+
+
+def embed_specs(cfg: ArchConfig, n_users: int, cf_dim: int = 64
+                ) -> Dict[str, EmbedSpec]:
+    """The model's embedding tables, as subsystem specs (placement/cost)."""
+    return {
+        "cf_user": EmbedSpec("cf_user", rows=n_users, dim=cf_dim),
+        "cf_item": EmbedSpec("cf_item", rows=cfg.padded_vocab, dim=cf_dim),
+    }
+
+
+def embed_id_fns() -> Dict[str, Callable[[Dict], jnp.ndarray]]:
+    """batch -> touched-row ids per sparse-synced table, for the trainer's
+    rows-touched DP gradient exchange (``cf_item`` is dense — excluded)."""
+    return {"cf_user": lambda batch: batch["user"]}
 
 
 def init_recllm(key, cfg: ArchConfig, n_users: int, cf_dim: int = 64
                 ) -> Dict:
     k1, k2, k3 = jax.random.split(key, 3)
+    specs = embed_specs(cfg, n_users, cf_dim)
     return {
         "lm": tf.init_params(k1, cfg),
-        "cf_user": (jax.random.normal(k2, (n_users, cf_dim), jnp.float32)
-                    * 0.02),
-        "cf_item": (jax.random.normal(k3, (cfg.padded_vocab, cf_dim),
-                                      jnp.float32) * 0.02),
+        "cf_user": init_table(k2, specs["cf_user"]),
+        "cf_item": init_table(k3, specs["cf_item"]),
         "fusion_gate": jnp.zeros((), jnp.float32),      # sigmoid-gated alpha
     }
 
@@ -34,7 +57,7 @@ def rec_logits(cfg: ArchConfig, params: Dict, batch: Dict,
                ctx: ModelCtx = ModelCtx()):
     """LM logits fused with CF scores.  batch: tokens (B,S), user (B,)."""
     lm_logits, aux, _ = tf.forward(cfg, params["lm"], batch, ctx)
-    u = params["cf_user"][batch["user"]]                 # (B, dc)
+    u = dedup_lookup(params["cf_user"], batch["user"])   # (B, dc)
     cf = u @ params["cf_item"].T                         # (B, V)
     alpha = jax.nn.sigmoid(params["fusion_gate"])
     fused = lm_logits.astype(jnp.float32) + alpha * cf[:, None, :]
@@ -51,8 +74,14 @@ def recllm_loss(cfg: ArchConfig, params: Dict, batch: Dict,
 
 def score_users(cfg: ArchConfig, params: Dict, tokens, users, lens,
                 ctx: ModelCtx = ModelCtx()):
-    """Scores for ranking: logits at each user's last history position."""
+    """Scores for ranking: logits at each user's last history position.
+
+    ``lens`` is clamped to the final sequence position: a full-window
+    history (``lens == S``) must read the last token's logits, not one past
+    them (jax gather clamps silently; numpy-backed callers would crash).
+    """
     batch = {"tokens": tokens, "user": users}
     logits, _ = rec_logits(cfg, params, batch, ctx)
-    B = tokens.shape[0]
-    return logits[jnp.arange(B), lens]                   # (B, V)
+    B, S = tokens.shape
+    pos = jnp.minimum(lens, S - 1)
+    return logits[jnp.arange(B), pos]                    # (B, V)

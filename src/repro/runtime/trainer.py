@@ -28,6 +28,7 @@ from repro.checkpoint import manager as ckpt
 from repro.config import ArchConfig, ParallelConfig, TrainConfig
 from repro.core import compression, hierarchical
 from repro.core.hybrid import Plan
+from repro.embeddings import update as embed_update
 from repro.models import transformer as tf
 from repro.models.transformer import ModelCtx
 from repro.optimizer import adamw, schedule
@@ -130,18 +131,58 @@ class DPSyncConfig:
     use_kernel: bool = True
 
 
-def residual_size(params, scfg: DPSyncConfig) -> int:
+@dataclasses.dataclass(frozen=True)
+class EmbedSyncConfig:
+    """Rows-touched sparse sync for embedding-table gradients.
+
+    ``id_fns`` maps top-level param keys (the embedding tables) to
+    ``batch -> ids`` extractors; those tables' gradients skip the dense
+    all-reduce (and the compressed flatten path) and are exchanged as
+    (unique ids, gradient rows) all-gathers instead — wire bytes scale
+    with the batch, not the vocab.  ``compress="topk"`` additionally
+    sparsifies each exchanged row via the Pallas top-k kernel.
+    """
+
+    id_fns: Dict[str, Callable[[Dict], jnp.ndarray]]
+    # unique-id cap (default: len(ids)).  Must be >= the max unique ids a
+    # rank's batch can touch: an undersized cap silently truncates the
+    # exchanged row set and the dropped rows get ZERO gradient.
+    cap: Optional[int] = None
+    compress: Optional[str] = None  # None | "topk"
+    k: int = 8
+    use_kernel: bool = True
+
+    @property
+    def exclude(self) -> Tuple[str, ...]:
+        """Param keys outside the dense/compressed sync path — pass to
+        ``residual_size(params, scfg, exclude=...)`` when compressing."""
+        return tuple(self.id_fns)
+
+
+def residual_size(params, scfg: DPSyncConfig,
+                  exclude: Tuple[str, ...] = ()) -> int:
+    """Flat padded size of the compression error-feedback state.  Params
+    under top-level keys in ``exclude`` (sparse-synced embedding tables)
+    carry no residual — their sync is outside the compressed path."""
+    if exclude:
+        params = {k: v for k, v in params.items() if k not in exclude}
     n = sum(l.size for l in jax.tree.leaves(params))
     mult = 8 * scfg.block if scfg.mode == "onebit" else scfg.topk_block
     return n + ((-n) % mult)
 
 
 def make_dp_train_step(loss_fn: Callable, mesh: Mesh, tcfg: TrainConfig,
-                       scfg: DPSyncConfig = DPSyncConfig()):
+                       scfg: DPSyncConfig = DPSyncConfig(),
+                       embed_sync: Optional[EmbedSyncConfig] = None):
     """step(params, opt, residual, batch) -> (params, opt, residual, loss).
 
     params/opt replicated over dp axes; batch sharded on dim 0; residual is
-    per-rank error-feedback state (leading device dim, dp-sharded).
+    per-rank error-feedback state (leading device dim, dp-sharded).  With
+    ``embed_sync``, params must be a dict and the named tables' gradients
+    are synced sparsely (rows touched only) instead of densely; when also
+    compressing (mode onebit/topk), size the residual with
+    ``residual_size(params, scfg, exclude=embed_sync.exclude)`` — the
+    embedding tables never enter the flattened compressed payload.
     """
     axes = (scfg.intra_axis,) + ((scfg.inter_axis,) if scfg.inter_axis
                                  else ())
@@ -154,10 +195,27 @@ def make_dp_train_step(loss_fn: Callable, mesh: Mesh, tcfg: TrainConfig,
     else:
         gsync = hierarchical.make_sync_fn(scfg.mode, scfg.intra_axis,
                                           scfg.inter_axis)
+    row_compress = None
+    if embed_sync is not None and embed_sync.compress:
+        row_compress = embed_update.make_row_compressor(
+            embed_sync.compress, embed_sync.k, embed_sync.use_kernel)
+
+    def sync_embed_grads(grads, batch):
+        """Pop embedding-table grads; sync rows-touched over all dp axes."""
+        emb = {}
+        for key, id_fn in embed_sync.id_fns.items():
+            emb[key] = embed_update.sparse_row_sync(
+                grads[key], id_fn(batch), axes, cap=embed_sync.cap,
+                compress=row_compress)
+        rest = {k: v for k, v in grads.items()
+                if k not in embed_sync.id_fns}
+        return emb, rest
 
     def inner(params, opt, residual, batch):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
         loss = jax.lax.pmean(loss, axes)
+        if embed_sync is not None:
+            emb_grads, grads = sync_embed_grads(grads, batch)
         if compressed:
             grads, new_res = csync(grads, residual[0])
             if scfg.inter_axis:                     # hierarchy: pods too
@@ -167,6 +225,8 @@ def make_dp_train_step(loss_fn: Callable, mesh: Mesh, tcfg: TrainConfig,
         else:
             grads = gsync(grads)
             new_res = residual
+        if embed_sync is not None:
+            grads = {**grads, **emb_grads}
         lr = schedule.warmup_cosine(opt["step"], tcfg.learning_rate,
                                     tcfg.warmup_steps, tcfg.steps)
         new_params, new_opt = adamw.adamw_apply(params, grads, opt, lr, tcfg)

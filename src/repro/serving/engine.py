@@ -11,6 +11,15 @@ are refilled immediately (``refill="continuous"``) or only once the whole
 batch drains (``refill="static"`` — the classical static-batching baseline
 the benchmark compares against).
 
+Admission is SLO-aware: the bounded queue is a two-level priority queue
+(``interactive`` before ``batch``), and at saturation an interactive
+arrival sheds the newest batch-tier entry rather than being dropped.
+Decoding honors per-request sampling params (``temperature`` / ``top_k``
+on :class:`~repro.serving.traffic.Request`): each slot carries a
+per-request RNG key folded with the token index, so sampled streams are
+reproducible regardless of slot placement or batch composition
+(temperature 0 = greedy, the default).
+
 Two KV-cache backends plug into the same scheduler:
 
 * :class:`NativeBackend` — model-dtype cache via ``transformer.init_cache``
@@ -28,7 +37,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -49,10 +58,56 @@ class EngineConfig:
     prompt_quantum: int = 8             # prompts pad to multiples (bounds
                                         # the number of prefill recompiles)
     pad_id: int = 0
+    sample_seed: int = 0                # base of the per-request RNG keys
 
 
 def _bucket(n: int, quantum: int, cap: int) -> int:
     return min(cap, ((n + quantum - 1) // quantum) * quantum)
+
+
+def sample_token(logits_row, temperature: float, top_k: int, key) -> int:
+    """One token from a (V,) logits row: greedy when ``temperature <= 0``,
+    else softmax(logits/T) restricted to the top-k logits (0 = no cap)."""
+    if temperature <= 0.0:
+        return int(jnp.argmax(logits_row))
+    lg = jnp.asarray(logits_row, jnp.float32)
+    if top_k > 0:
+        kth = jax.lax.top_k(lg, min(top_k, lg.shape[-1]))[0][-1]
+        lg = jnp.where(lg >= kth, lg, -jnp.inf)
+    return int(jax.random.categorical(key, lg / temperature))
+
+
+class AdmissionQueue:
+    """Two-level SLO-priority admission queue (interactive > batch).
+
+    FIFO within a tier; ``popleft`` serves the interactive tier first, and
+    ``shed_batch`` evicts the *newest* batch-tier entry to make room for an
+    interactive arrival when the bounded queue saturates (shedding the
+    request that would have waited longest anyway).
+    """
+
+    def __init__(self):
+        self._tiers: Dict[bool, Deque] = {True: deque(), False: deque()}
+
+    @staticmethod
+    def _interactive(req: Request) -> bool:
+        return req.slo.name == "interactive"
+
+    def __len__(self) -> int:
+        return len(self._tiers[True]) + len(self._tiers[False])
+
+    def append(self, item) -> None:
+        self._tiers[self._interactive(item[0])].append(item)
+
+    def popleft(self):
+        for tier in (True, False):
+            if self._tiers[tier]:
+                return self._tiers[tier].popleft()
+        raise IndexError("pop from an empty AdmissionQueue")
+
+    def shed_batch(self):
+        """Evict and return the newest batch-tier entry (None if none)."""
+        return self._tiers[False].pop() if self._tiers[False] else None
 
 
 class _UniformFamilyBackend:
@@ -146,11 +201,12 @@ class ServingEngine:
         self.clock = clock if clock is not None else Clock()
         n = ecfg.n_slots
         self.cache = backend.init_cache(n, ecfg.max_len)
-        self.queue: Deque[Tuple[Request, metrics_lib.RequestRecord]] = deque()
+        self.queue = AdmissionQueue()
         self.slot_req: List[Optional[Request]] = [None] * n
         self.slot_rec: List[Optional[metrics_lib.RequestRecord]] = [None] * n
         self.slot_remaining = np.zeros(n, np.int64)
         self.slot_tokens = np.zeros((n, 1), np.int32)
+        self.slot_key: List = [None] * n    # per-slot sampling RNG keys
         self.outputs: Dict[int, List[int]] = {}
         self.records: List[metrics_lib.RequestRecord] = []
         self.decode_steps = 0
@@ -174,18 +230,31 @@ class ServingEngine:
 
     def submit(self, req: Request) -> bool:
         """Enqueue; False (and a rejected record) when the bounded admission
-        queue is full or the prompt cannot fit the serving window."""
+        queue is full or the prompt cannot fit the serving window.  At
+        saturation an interactive arrival sheds the newest batch-tier entry
+        instead of being dropped (SLO-aware admission)."""
         rec = metrics_lib.RequestRecord(
             rid=req.rid, user_id=req.user_id, prompt_len=len(req.prompt),
             slo_name=req.slo.name, ttft_slo_s=req.slo.ttft_ms / 1e3,
             tpot_slo_s=req.slo.tpot_ms / 1e3, arrival=req.arrival)
         self.records.append(rec)
-        if (len(self.queue) >= self.ecfg.queue_capacity
-                or len(req.prompt) >= self.ecfg.max_len):
+        if len(req.prompt) >= self.ecfg.max_len:
             rec.rejected = True
             return False
+        if len(self.queue) >= self.ecfg.queue_capacity:
+            shed = (self.queue.shed_batch()
+                    if req.slo.name == "interactive" else None)
+            if shed is None:
+                rec.rejected = True
+                return False
+            shed[1].rejected = True         # the batch-tier request it evicts
         self.queue.append((req, rec))
         return True
+
+    def _request_key(self, req: Request):
+        """Per-request sampling key: reproducible across runs/slots."""
+        return jax.random.fold_in(
+            jax.random.PRNGKey(self.ecfg.sample_seed), req.rid)
 
     def _start(self, slot: int, req: Request,
                rec: metrics_lib.RequestRecord) -> None:
@@ -202,7 +271,9 @@ class ServingEngine:
             lambda: self.backend.prefill(self.cache, padded,
                                          len(prompt), slot))
         self.prefills += 1
-        first = int(jnp.argmax(logits_row))
+        key = self._request_key(req)
+        first = sample_token(logits_row, req.temperature, req.top_k,
+                             jax.random.fold_in(key, 0))
         rec.first_token = self.clock.now
         rec.tokens_out = 1
         self.outputs[req.rid] = [first]
@@ -214,6 +285,7 @@ class ServingEngine:
         self.slot_rec[slot] = rec
         self.slot_remaining[slot] = budget - 1
         self.slot_tokens[slot, 0] = first
+        self.slot_key[slot] = key
 
     def _refill(self) -> None:
         free = [s for s in range(self.ecfg.n_slots)
@@ -231,12 +303,23 @@ class ServingEngine:
             lambda: self.backend.decode(self.cache,
                                         jnp.asarray(self.slot_tokens)))
         self.decode_steps += 1
-        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
+        any_greedy = any(r is not None and r.temperature <= 0.0
+                         for r in self.slot_req)
+        nxt = (np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
+               if any_greedy else None)
         for s in range(self.ecfg.n_slots):
             req, rec = self.slot_req[s], self.slot_rec[s]
             if req is None:
                 continue
-            tok = int(nxt[s])
+            if req.temperature > 0.0:
+                # per-slot RNG key folded with the token index: slot
+                # placement and batch composition never change the stream
+                tok = sample_token(logits[s, 0, :], req.temperature,
+                                   req.top_k,
+                                   jax.random.fold_in(self.slot_key[s],
+                                                      rec.tokens_out))
+            else:
+                tok = int(nxt[s])
             self.outputs[req.rid].append(tok)
             rec.tokens_out += 1
             self.slot_remaining[s] -= 1
@@ -245,6 +328,7 @@ class ServingEngine:
                 rec.finished = self.clock.now
                 self.slot_req[s] = None
                 self.slot_rec[s] = None
+                self.slot_key[s] = None
 
     # -- driver --------------------------------------------------------------
 

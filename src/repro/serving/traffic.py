@@ -45,6 +45,8 @@ class Request:
     arrival: float                      # seconds since sim start
     slo: SLOTier = BATCH_TIER
     eos_id: int = -1                    # -1: never stop early
+    temperature: float = 0.0            # <= 0: greedy decode
+    top_k: int = 0                      # 0: no top-k filtering
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +66,8 @@ class TrafficConfig:
     interactive_fraction: float = 0.75
     vocab_size: int = 256
     eos_id: int = -1
+    temperature: float = 0.0            # per-request sampling (0 = greedy)
+    top_k: int = 0
     seed: int = 0
 
 
@@ -132,6 +136,8 @@ def generate(cfg: TrafficConfig) -> List[Request]:
             arrival=float(arrivals[i]),
             slo=INTERACTIVE_TIER if interactive[i] else BATCH_TIER,
             eos_id=cfg.eos_id,
+            temperature=cfg.temperature,
+            top_k=cfg.top_k,
         ))
     return reqs
 

@@ -40,6 +40,9 @@ CHECKS = [
     "dp_train_step_hier_and_compressed_converge",
     "hybrid_gspmd_train_step_runs",
     "elastic_reshard_roundtrip",
+    "embed_sharded_lookup_matches_replicated",
+    "embed_sparse_row_sync_matches_dense_pmean",
+    "dp_train_step_sparse_embed_matches_dense",
     "dryrun_cell_on_host_mesh",
 ]
 

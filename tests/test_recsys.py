@@ -56,6 +56,30 @@ def test_history_exclusion():
     assert m[:, :3].all()            # specials always excluded
 
 
+def test_score_users_clamps_full_window_lens():
+    """Regression: ``lens == S`` (a full history window) must read the
+    last position's logits, not index one past the sequence."""
+    ds = dataset.generate(scale=0.005, seed=0)
+    cfg = dataclasses.replace(
+        reduced(get_arch("recllm-base")), vocab_size=ds.n_items + 3,
+        vocab_pad_to=32, dtype="float32")
+    ctx = ModelCtx(attn_chunk=8)
+    params = recmodel.init_recllm(jax.random.PRNGKey(0), cfg, ds.n_users)
+    S = 16
+    toks = jnp.asarray(np.random.default_rng(0).integers(3, ds.n_items + 3,
+                                                         (4, S)), jnp.int32)
+    users = jnp.zeros((4,), jnp.int32)
+    at_cap = recmodel.score_users(cfg, params, toks, users,
+                                  jnp.full((4,), S, jnp.int32), ctx)
+    at_last = recmodel.score_users(cfg, params, toks, users,
+                                   jnp.full((4,), S - 1, jnp.int32), ctx)
+    np.testing.assert_array_equal(np.asarray(at_cap), np.asarray(at_last))
+    # in-range lens are untouched by the clamp
+    mid = recmodel.score_users(cfg, params, toks, users,
+                               jnp.full((4,), 3, jnp.int32), ctx)
+    assert not np.array_equal(np.asarray(mid), np.asarray(at_last))
+
+
 @pytest.mark.slow
 def test_recllm_training_beats_random():
     ds = dataset.generate(scale=0.005, seed=0)

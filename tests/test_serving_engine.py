@@ -200,6 +200,123 @@ def test_static_refill_waits_for_full_drain():
 
 
 # ---------------------------------------------------------------------------
+# per-request sampling (temperature / top-k, per-slot RNG keys)
+# ---------------------------------------------------------------------------
+
+def _sampled_workload(n=12, temperature=0.0, top_k=0, seed=0):
+    return [dataclasses.replace(r, temperature=temperature, top_k=top_k)
+            for r in _toy_workload(n=n, seed=seed)]
+
+
+def test_temperature_zero_is_greedy():
+    reqs = _sampled_workload(temperature=0.0)
+    outputs, _, _ = _toy_engine().run(reqs)
+    for r in reqs:
+        want = [(r.prompt[-1] + 1 + i) % CountingBackend.V
+                for i in range(r.max_new_tokens)]
+        assert outputs[r.rid] == want
+
+
+def test_top_k_one_is_greedy_at_any_temperature():
+    reqs = _sampled_workload(temperature=3.0, top_k=1)
+    outputs, _, _ = _toy_engine().run(reqs)
+    for r in reqs:
+        want = [(r.prompt[-1] + 1 + i) % CountingBackend.V
+                for i in range(r.max_new_tokens)]
+        assert outputs[r.rid] == want
+
+
+def test_sampling_deviates_from_greedy_and_is_reproducible():
+    # CountingBackend logits are one-hot 0/1: at T=5 the argmax carries
+    # almost no extra mass, so sampled streams diverge from greedy
+    reqs = _sampled_workload(n=16, temperature=5.0)
+    greedy = {r.rid: [(r.prompt[-1] + 1 + i) % CountingBackend.V
+                      for i in range(r.max_new_tokens)] for r in reqs}
+    out1, _, _ = _toy_engine().run(reqs)
+    out2, _, _ = _toy_engine().run(reqs)
+    assert out1 == out2, "same seed must reproduce the same streams"
+    assert any(out1[r.rid] != greedy[r.rid] for r in reqs)
+    # a different engine sampling seed gives a different workload
+    ecfg = eng.EngineConfig(n_slots=3, max_len=64, sample_seed=99)
+    clock = traffic.Clock(fixed_decode_s=0.01, fixed_prefill_s=0.02)
+    out3, _, _ = eng.ServingEngine(CountingBackend(), ecfg, clock).run(reqs)
+    assert out3 != out1
+
+
+def test_sampled_stream_independent_of_slot_count():
+    """The RNG key is (seed, rid, token-index): batch composition and slot
+    placement cannot change a request's sampled tokens."""
+    reqs = _sampled_workload(n=10, temperature=2.0, top_k=8)
+    outs = []
+    for n_slots in (1, 3):
+        outputs, _, _ = _toy_engine(n_slots=n_slots).run(reqs)
+        outs.append(outputs)
+    assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware admission: shed batch tier before interactive
+# ---------------------------------------------------------------------------
+
+def _tiered_burst(n_interactive, n_batch):
+    reqs = []
+    for i in range(n_interactive + n_batch):
+        tier = (traffic.INTERACTIVE_TIER if i < n_interactive
+                else traffic.BATCH_TIER)
+        reqs.append(traffic.Request(
+            rid=i, user_id=i, prompt=(3, 4, 5), max_new_tokens=4,
+            arrival=0.0, slo=tier))
+    return reqs
+
+
+def test_interactive_arrival_sheds_newest_batch_request():
+    # 1 slot, queue of 2; the whole burst arrives before any slot frees:
+    # batch rids 0,1 queue, rid 2 finds the queue full (batch cannot shed),
+    # then interactive rids 3,4 each displace the newest queued batch entry
+    reqs = _tiered_burst(0, 3) + _tiered_burst(2, 0)
+    for i, r in enumerate(reqs):
+        reqs[i] = dataclasses.replace(r, rid=i, user_id=i)
+    engine = _toy_engine(n_slots=1, queue_capacity=2)
+    outputs, records, summary = engine.run(reqs)
+    by_rid = {r.rid: r for r in records}
+    assert summary["rejected"] == 3
+    assert all(by_rid[r].rejected for r in (0, 1, 2))
+    assert not by_rid[3].rejected and not by_rid[4].rejected
+    assert 3 in outputs and 4 in outputs and summary["finished"] == 2
+
+
+def test_batch_arrival_never_sheds_interactive():
+    reqs = _tiered_burst(2, 0) + _tiered_burst(0, 2)
+    for i, r in enumerate(reqs):
+        reqs[i] = dataclasses.replace(r, rid=i, user_id=i)
+    engine = _toy_engine(n_slots=1, queue_capacity=2)
+    _, records, summary = engine.run(reqs)
+    by_rid = {r.rid: r for r in records}
+    # interactive 0,1 fill the queue; batch 2,3 find it full and cannot
+    # evict interactive entries
+    assert by_rid[2].rejected and by_rid[3].rejected
+    assert not by_rid[0].rejected and not by_rid[1].rejected
+    assert summary["finished"] == 2
+
+
+def test_interactive_tier_pops_before_batch():
+    # one slot; a batch request and an interactive request both queued:
+    # the interactive one must start first even though it arrived later
+    reqs = [
+        traffic.Request(rid=0, user_id=0, prompt=(3,), max_new_tokens=6,
+                        arrival=0.0, slo=traffic.BATCH_TIER),
+        traffic.Request(rid=1, user_id=1, prompt=(4,), max_new_tokens=2,
+                        arrival=0.0, slo=traffic.BATCH_TIER),
+        traffic.Request(rid=2, user_id=2, prompt=(5,), max_new_tokens=2,
+                        arrival=0.001, slo=traffic.INTERACTIVE_TIER),
+    ]
+    engine = _toy_engine(n_slots=1)
+    _, records, _ = engine.run(reqs)
+    by_rid = {r.rid: r for r in records}
+    assert by_rid[2].admitted < by_rid[1].admitted
+
+
+# ---------------------------------------------------------------------------
 # real-model parity: continuous batch decode == sequential decode
 # ---------------------------------------------------------------------------
 
