@@ -5,7 +5,9 @@ The fixed-slot `SlotServer` toy that used to live here grew into
 bounded admission queue, static/continuous refill policies, an optional
 int8 KV cache, and SLO-aware latency metrics.  This example drives it over
 a small simulated recsys workload and prints both the generations and the
-latency report.
+latency report.  Every architecture family serves through the engine's
+family-backend registry — try ``--arch rwkv6-1.6b`` or ``--arch
+whisper-medium`` as readily as a uniform decoder.
 
   PYTHONPATH=src python examples/serve_lm.py --arch olmo-1b --requests 12
 """
@@ -32,15 +34,13 @@ def main():
     args = ap.parse_args()
 
     cfg = dataclasses.replace(reduced(get_arch(args.arch)), dtype="float32")
-    if tf.family(cfg) != "uniform":
-        raise SystemExit("serve_lm targets uniform text-decoder archs; "
-                         "use `python -m repro.launch.serve --mode raw` "
-                         "for ssm/hybrid/enc-dec families")
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
 
     requests = generate(TrafficConfig(
         n_requests=args.requests, rate=args.rate, prompt_max=24,
-        new_tokens_max=16, vocab_size=cfg.vocab_size))
+        new_tokens_max=16, vocab_size=cfg.vocab_size,
+        encoder_frames=cfg.encoder_frames,
+        frame_dim=cfg.d_model if cfg.encoder_layers else 0))
     engine = ServingEngine(make_backend(cfg, params, kv=args.kv),
                            EngineConfig(n_slots=args.slots, max_len=64))
     outputs, records, summary = engine.run(requests)

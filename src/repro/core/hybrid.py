@@ -90,7 +90,11 @@ class Plan:
 
 
 def auto_plan(cfg: ArchConfig, mesh: Mesh, shape: ShapeConfig,
-              pcfg: ParallelConfig = ParallelConfig()) -> Plan:
+              pcfg: ParallelConfig = ParallelConfig(),
+              embed_plans=None) -> Plan:
+    """``embed_plans``: optional {top-level param key: EmbedPlan} routing
+    embedding tables (the recsys CF factors) through the sparse-embedding
+    subsystem's placement instead of the LM rules."""
     notes: List[str] = []
     training = shape.kind == "train"
 
@@ -129,7 +133,11 @@ def auto_plan(cfg: ArchConfig, mesh: Mesh, shape: ShapeConfig,
                 f"dp_heavy plan (est coll {dp_heavy_coll/1e9:.0f}GB vs "
                 f"megatron {megatron_coll/1e9:.0f}GB)")
 
-    sharding = make_plan(mesh, pcfg, seq_shard=seq_shard, dp_heavy=dp_heavy)
+    sharding = make_plan(mesh, pcfg, seq_shard=seq_shard, dp_heavy=dp_heavy,
+                         embed_plans=embed_plans)
+    if embed_plans:
+        notes.append("embed tables via EmbedPlan: " + ", ".join(
+            f"{k}={p.kind}" for k, p in sorted(embed_plans.items())))
 
     # --- gradient sync mode -------------------------------------------------
     grad_sync = pcfg.grad_sync

@@ -9,6 +9,13 @@ Every sharded dim is divisibility-guarded: if a dim does not divide evenly
 over its assigned axes the spec falls back to replication for that dim (this
 is what makes gemma3-1b's 4-head attention or batch=1 long-context decode
 lower cleanly — see DESIGN.md §4).
+
+Embedding tables route through the sparse-embedding subsystem: top-level
+param keys named in ``embed_plans`` (e.g. the recsys CF factor tables) take
+their placement from an :class:`repro.embeddings.EmbedPlan` — row/col/2D
+sharding under the same hybrid mesh — instead of the LM rules, so the
+GSPMD train step places them exactly where the shard_map DP path and the
+``embed`` benchmark cost them.
 """
 from __future__ import annotations
 
@@ -21,6 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config import ArchConfig, ParallelConfig, ShapeConfig
+from repro.embeddings.table import EmbedPlan, pspec as embed_pspec
 
 
 def _axis_size(mesh: Mesh, axes) -> int:
@@ -42,6 +50,9 @@ class ShardingPlan:
     # (model included); weights stay model-sharded for storage and are
     # all-gathered at use (FSDP) — activations never reshard.
     dp_heavy: bool = False
+    # top-level param keys placed by the embeddings subsystem (EmbedPlan)
+    # rather than the LM rules — the recsys CF tables under the hybrid mesh
+    embed_plans: Optional[Dict[str, EmbedPlan]] = None
 
     # -- helpers -----------------------------------------------------------
 
@@ -101,6 +112,10 @@ class ShardingPlan:
             names = [str(n) for n in names]
             last = names[-1]
             shape = leaf.shape
+            if self.embed_plans and names[0] in self.embed_plans \
+                    and len(shape) == 2:
+                plan = self.embed_plans[names[0]]
+                return self.guard(tuple(embed_pspec(plan)), shape)
             base: Tuple = ()
             if "moe" in names:
                 dp = self.dp_axes if len(self.dp_axes) > 1 \
@@ -296,7 +311,9 @@ class ShardingPlan:
 
 def make_plan(mesh: Mesh, pcfg: ParallelConfig,
               seq_shard: Optional[bool] = None,
-              dp_heavy: bool = False) -> ShardingPlan:
+              dp_heavy: bool = False,
+              embed_plans: Optional[Dict[str, EmbedPlan]] = None
+              ) -> ShardingPlan:
     axes = set(mesh.axis_names)
     dp_axes = tuple(a for a in ("pod", "data") if a in axes)
     tp_axis = "model" if "model" in axes and mesh.shape["model"] > 1 else \
@@ -308,4 +325,5 @@ def make_plan(mesh: Mesh, pcfg: ParallelConfig,
         seq_shard=pcfg.seq_shard_activations if seq_shard is None else seq_shard,
         zero1=True,
         dp_heavy=dp_heavy,
+        embed_plans=embed_plans,
     )

@@ -2,15 +2,20 @@
 
 Default mode drives :mod:`repro.serving` — a fixed-slot continuous-batching
 engine fed by the Poisson/bursty Zipfian traffic simulator — and reports
-throughput plus p50/p95/p99 TTFT / per-token latency against SLO tiers:
+throughput plus p50/p95/p99 TTFT / per-token latency against SLO tiers.
+The engine serves **every architecture family** through its family-backend
+registry (uniform decoders, gemma ring buffers, jamba/rwkv6 recurrent
+state, whisper cross-KV), and ``--kv int8`` composes with any KV-bearing
+family:
 
   PYTHONPATH=src python -m repro.launch.serve --reduced
   PYTHONPATH=src python -m repro.launch.serve --reduced --arch deepseek-7b \\
       --slots 8 --requests 64 --rate 128 --process bursty --kv int8
+  PYTHONPATH=src python -m repro.launch.serve --reduced --arch rwkv6-1.6b
+  PYTHONPATH=src python -m repro.launch.serve --reduced --arch gemma3-1b \\
+      --kv int8
 
-``--mode raw`` keeps the original fixed-batch decode-loop microbenchmark,
-which works for every architecture family (the engine requires the uniform
-decoder family):
+``--mode raw`` keeps the original fixed-batch decode-loop microbenchmark:
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \\
       --mode raw --batch 8 --new-tokens 32
@@ -45,7 +50,10 @@ def run_engine(args) -> int:
         new_tokens_max=max(defaults.new_tokens_min,
                            min(24, args.max_len // 4)),
         vocab_size=cfg.vocab_size, seed=args.seed,
-        temperature=args.temperature, top_k=args.top_k)
+        temperature=args.temperature, top_k=args.top_k,
+        # enc-dec families: per-request encoder frames -> per-slot cross-KV
+        encoder_frames=cfg.encoder_frames,
+        frame_dim=cfg.d_model if cfg.encoder_layers else 0)
     requests = generate(tcfg)
 
     ecfg = EngineConfig(n_slots=args.slots, max_len=args.max_len,
@@ -53,8 +61,8 @@ def run_engine(args) -> int:
                         refill=args.refill, sample_seed=args.seed)
     try:
         backend = make_backend(cfg, params, kv=args.kv)
-    except NotImplementedError as e:
-        raise SystemExit(f"{e}\n(use --mode raw for non-uniform families)")
+    except ValueError as e:
+        raise SystemExit(str(e))
     if not args.no_warmup:
         # compile every prefill bucket + the decode step outside the
         # measured run, as a resident production server would be

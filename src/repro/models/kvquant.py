@@ -31,6 +31,28 @@ def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray,
     return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
 
 
+def quantize_kv_tree(tree):
+    """Quantize every leaf of a KV pytree (e.g. gemma's per-layer ring
+    buffers, whisper's cross-KV): returns (int8-values tree, scales tree)
+    with the input treedef.  Requantizing a dequantized leaf is exact —
+    the max-|x| element of each (…, D) row always lands on ±127, pinning
+    the scale — so round-tripping untouched cache rows every decode step
+    does not drift (the property the serving int8 composition relies on)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    qs, ss = [], []
+    for leaf in leaves:
+        q, s = quantize_kv(leaf)
+        qs.append(q)
+        ss.append(s)
+    return treedef.unflatten(qs), treedef.unflatten(ss)
+
+
+def dequantize_kv_tree(q_tree, s_tree, dtype=jnp.bfloat16):
+    """Inverse of :func:`quantize_kv_tree`."""
+    return jax.tree.map(lambda q, s: dequantize_kv(q, s, dtype),
+                        q_tree, s_tree)
+
+
 def init_quant_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
                      layers: int) -> Dict:
     """Stacked per-layer quantized K/V cache."""

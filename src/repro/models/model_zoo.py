@@ -1,6 +1,8 @@
-"""Model zoo: arch-indexed bundle of init / loss / prefill / decode plus the
-``input_specs`` used by the multi-pod dry-run (ShapeDtypeStruct stand-ins,
-weak-type-correct, no device allocation).
+"""Model zoo: arch-indexed bundle of init / loss / prefill / decode — plus
+the per-slot serving protocol (``init_slots`` / ``prefill_into_slot``),
+which every family implements — and the ``input_specs`` used by the
+multi-pod dry-run (ShapeDtypeStruct stand-ins, weak-type-correct, no device
+allocation).
 """
 from __future__ import annotations
 
@@ -38,6 +40,16 @@ class ModelBundle:
     def decode(self, params, cache, tokens, positions=None):
         return tf.decode_step(self.cfg, params, cache, tokens, self.ctx,
                               positions=positions)
+
+    # -- per-slot serving protocol (family-polymorphic DecodeState) ---------
+
+    def init_slots(self, n_slots: int, max_len: int):
+        return tf.init_slots(self.cfg, n_slots, max_len)
+
+    def prefill_into_slot(self, params, cache, tokens, true_len, slot,
+                          frames=None):
+        return tf.prefill_into_slot(self.cfg, params, cache, tokens,
+                                    true_len, slot, self.ctx, frames=frames)
 
 
 def build(cfg: ArchConfig, ctx: ModelCtx = ModelCtx()) -> ModelBundle:

@@ -70,8 +70,14 @@ def _capacity(group: int, k: int, E: int, factor: float) -> int:
 
 def moe_ffn(cfg: ArchConfig, params: Dict, x: jnp.ndarray,
             *, capacity_factor: float = 1.25, group_size: int = 1024,
-            use_kernel: bool = False, constrain=None):
-    """x: (B, S, d) -> (out, aux) where aux has losses + expert loads."""
+            use_kernel: bool = False, constrain=None, live=None):
+    """x: (B, S, d) -> (out, aux) where aux has losses + expert loads.
+
+    ``live`` (optional (B, S) 0/1 mask — serving prefill): masked-out
+    positions are dropped from routing entirely — they occupy no expert
+    capacity (pad garbage can never evict a real token from its expert),
+    contribute nothing to dispatch/combine or ``expert_load``, and get
+    zero FFN output."""
     B, S, d = x.shape
     E, k = cfg.num_experts, cfg.experts_per_token
     G = min(group_size, S)
@@ -89,6 +95,11 @@ def moe_ffn(cfg: ArchConfig, params: Dict, x: jnp.ndarray,
     logits = xg.astype(jnp.float32) @ params["router"]           # (g, G, E)
     gates, idx, probs = router_topk(logits, k, use_kernel)       # (g, G, .)
     onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)           # (g,G,k,E)
+    if live is not None:
+        # dead (pad) tokens leave the expert queues before positions are
+        # assigned: real tokens' capacity slots are pad-independent
+        onehot = onehot * live.reshape(g, G).astype(jnp.float32)[..., None,
+                                                                 None]
     # position of each (token, slot) within its expert queue, per group
     flat = onehot.transpose(0, 2, 1, 3).reshape(g, k * G, E)     # slot-major
     pos = jnp.cumsum(flat, axis=1) - flat                        # (g,kG,E)

@@ -11,6 +11,14 @@ Both are written TPU-natively:
 
 Decode paths are single-step state updates (O(1) per token) — this is what
 makes ``long_500k`` runnable for these families.
+
+Serving hooks: the forward passes accept ``true_len`` so a right-padded
+prompt (static-shape prefill buckets) yields *exactly* the recurrent state
+after ``true_len`` real tokens — pad steps are neutralized inside the scan
+(mamba: ``dt = 0`` makes the transition the identity; rwkv6: ``w = 1`` and
+``k = 0`` freeze the WKV state) and shift/conv states are sliced at the
+true prompt end.  :func:`scatter_slot_state` writes one request's states
+into a slot row of the engine's slot-indexed cache.
 """
 from __future__ import annotations
 
@@ -46,14 +54,23 @@ def init_mamba(key, cfg: ArchConfig) -> Dict:
     }
 
 
-def _causal_conv(x, w, state=None):
-    """x: (B, T, C); w: (K, C). Returns (y, new_state) with state (B, K-1, C)."""
+def _causal_conv(x, w, state=None, true_len=None):
+    """x: (B, T, C); w: (K, C). Returns (y, new_state) with state (B, K-1, C).
+
+    With ``true_len`` the state is the K-1 inputs *ending at the true prompt
+    end* (xp row i holds input position i-(K-1), so rows [true_len,
+    true_len+K-1) are positions [true_len-K+1, true_len)) — trailing pad
+    inputs never enter the resumed conv window."""
     K = w.shape[0]
     if state is None:
         state = jnp.zeros(x.shape[:1] + (K - 1,) + x.shape[2:], x.dtype)
     xp = jnp.concatenate([state, x], axis=1)              # (B, T+K-1, C)
     y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
-    return y, xp[:, -(K - 1):]
+    if true_len is None:
+        new_state = xp[:, -(K - 1):] if K > 1 else xp[:, :0]
+    else:
+        new_state = jax.lax.dynamic_slice_in_dim(xp, true_len, K - 1, axis=1)
+    return y, new_state
 
 
 def _ssm_scan_chunked(A, xi, dt, Bc, Cc, h0, chunk: int):
@@ -97,20 +114,28 @@ def _ssm_scan_chunked(A, xi, dt, Bc, Cc, h0, chunk: int):
 
 
 def mamba_forward(cfg: ArchConfig, p: Dict, x: jnp.ndarray,
-                  state: Dict = None, chunk: int = 512
-                  ) -> Tuple[jnp.ndarray, Dict]:
-    """x: (B, T, d). state: {'conv': (B,K-1,d_in), 'ssm': (B,d_in,N)} or None."""
+                  state: Dict = None, chunk: int = 512,
+                  true_len=None) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B, T, d). state: {'conv': (B,K-1,d_in), 'ssm': (B,d_in,N)} or None.
+
+    ``true_len`` (serving prefill): positions >= true_len are padding — their
+    ``dt`` is forced to 0, making the selective-scan step the identity
+    (dA = exp(0) = 1, dBx = 0), so the returned ``ssm``/``conv`` states are
+    exactly the states after ``true_len`` real tokens."""
     B, T, d = x.shape
     N = cfg.ssm_d_state
     xz = x @ p["in_proj"]
     xi, z = jnp.split(xz, 2, axis=-1)                     # (B,T,d_in) each
     conv_state = None if state is None else state["conv"]
-    xi, new_conv = _causal_conv(xi, p["conv_w"], conv_state)
+    xi, new_conv = _causal_conv(xi, p["conv_w"], conv_state,
+                                true_len=true_len)
     xi = jax.nn.silu(xi)
     bcd = xi @ p["x_proj"]                                # (B,T,2N+1)
     Bc, Cc, dt = bcd[..., :N], bcd[..., N:2 * N], bcd[..., 2 * N]
     # per-channel dt = softplus(scalar head + channel bias)  (dt_rank=1 variant)
     dt = jax.nn.softplus(dt[..., None].astype(jnp.float32) + p["dt_bias"])  # (B,T,d_in)
+    if true_len is not None:
+        dt = dt * (jnp.arange(T) < true_len)[None, :, None]
     A = -jnp.exp(p["A_log"])                              # (d_in, N)
     h0 = (jnp.zeros((B, cfg.ssm_expand * d, N), jnp.float32)
           if state is None else state["ssm"])
@@ -243,9 +268,14 @@ def _wkv6_chunked(r, k, v, w, u, S0=None, chunk: int = 32):
 
 
 def rwkv6_forward(cfg: ArchConfig, p: Dict, x: jnp.ndarray,
-                  state: Dict = None, wkv_chunk: int = 32
-                  ) -> Tuple[jnp.ndarray, Dict]:
-    """Time-mix block. x: (B,T,d). state: {'last': (B,d), 'wkv': (B,H,hs,hs)}."""
+                  state: Dict = None, wkv_chunk: int = 32,
+                  true_len=None) -> Tuple[jnp.ndarray, Dict]:
+    """Time-mix block. x: (B,T,d). state: {'last': (B,d), 'wkv': (B,H,hs,hs)}.
+
+    ``true_len`` (serving prefill): pad positions get ``w = 1`` (log-decay 0)
+    and ``k = 0``, so the WKV recurrence is frozen past the true prompt end
+    and the returned state/``last`` are exactly those after ``true_len``
+    tokens."""
     B, T, d = x.shape
     hs = cfg.rwkv_head_size
     H = d // hs
@@ -266,6 +296,10 @@ def rwkv6_forward(cfg: ArchConfig, p: Dict, x: jnp.ndarray,
     w_delta = jnp.tanh(wx @ p["w_lora_a"]) @ p["w_lora_b"]
     w = jnp.exp(-jnp.exp(p["w_base"] + w_delta.astype(jnp.float32)))  # (B,T,d)
     w = w.reshape(B, T, H, hs)
+    if true_len is not None:
+        live = (jnp.arange(T) < true_len)[None, :, None, None]
+        w = jnp.where(live, w, 1.0)
+        k = k * live
 
     S0 = None if state is None else state["wkv"]
     if T == 1:
@@ -288,7 +322,9 @@ def rwkv6_forward(cfg: ArchConfig, p: Dict, x: jnp.ndarray,
     out = layers.apply_norm(
         type("c", (), {"norm_type": "layernorm"}), p["ln_x"], out)
     out = (out * g) @ p["Wo"]
-    return out, {"last": x[:, -1], "wkv": S_f}
+    last = x[:, -1] if true_len is None else \
+        jax.lax.dynamic_slice_in_dim(x, true_len - 1, 1, axis=1)[:, 0]
+    return out, {"last": last, "wkv": S_f}
 
 
 def init_rwkv6_state(cfg: ArchConfig, batch: int) -> Dict:
@@ -310,7 +346,8 @@ def init_rwkv_cmix(key, cfg: ArchConfig) -> Dict:
 
 
 def rwkv_cmix_forward(cfg: ArchConfig, p: Dict, x: jnp.ndarray,
-                      state=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                      state=None, true_len=None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     B, T, d = x.shape
     last = jnp.zeros((B, 1, d), x.dtype) if state is None else state[:, None]
     x_prev = jnp.concatenate([last, x[:, :-1]], axis=1)
@@ -319,4 +356,24 @@ def rwkv_cmix_forward(cfg: ArchConfig, p: Dict, x: jnp.ndarray,
     xr = (xf * p["mix"][1] + pf * (1 - p["mix"][1])).astype(x.dtype)
     k = jnp.square(jax.nn.relu(xk @ p["Wk"]))
     out = jax.nn.sigmoid(xr @ p["Wr"]) * (k @ p["Wv"])
-    return out, x[:, -1]
+    shift = x[:, -1] if true_len is None else \
+        jax.lax.dynamic_slice_in_dim(x, true_len - 1, 1, axis=1)[:, 0]
+    return out, shift
+
+
+# ---------------------------------------------------------------------------
+# Slot-indexed state helpers (serving): the engine's caches carry recurrent
+# states with a slot (batch) axis; one request's prefilled states scatter
+# into its slot row.
+# ---------------------------------------------------------------------------
+
+def scatter_slot_state(states, update, slot, batch_axis: int):
+    """Write one request's state rows into slot ``slot`` of a slot-indexed
+    state pytree.  ``update`` leaves match ``states`` leaves except for a
+    size-1 dim at ``batch_axis`` (the single prefilled request)."""
+    def one(dst, src):
+        start = [0] * dst.ndim
+        start[batch_axis] = slot
+        return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype),
+                                            tuple(start))
+    return jax.tree.map(one, states, update)

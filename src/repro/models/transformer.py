@@ -153,13 +153,16 @@ def init_ffn(key, cfg: ArchConfig, is_moe: bool) -> Dict:
     return p
 
 
-def ffn_apply(cfg: ArchConfig, p: Dict, x, ctx: ModelCtx):
+def ffn_apply(cfg: ArchConfig, p: Dict, x, ctx: ModelCtx, live=None):
+    """``live`` (optional (B, S) mask, serving prefill): positions masked
+    out are excluded from MoE routing/capacity — see :func:`moe.moe_ffn`.
+    Dense MLPs are per-token, so the mask is irrelevant there."""
     h = layers.apply_norm(cfg, p["norm"], x)
     if "moe" in p:
         out, aux = moe.moe_ffn(cfg, p["moe"], h, group_size=ctx.moe_group,
                                capacity_factor=ctx.moe_capacity_factor,
                                use_kernel=ctx.use_kernels,
-                               constrain=ctx.constrain)
+                               constrain=ctx.constrain, live=live)
     else:
         out, aux = layers.apply_mlp(cfg, p["mlp"], h), None
     return ctx.constrain(out, "residual"), aux
@@ -281,13 +284,14 @@ def _maybe_remat(fn, ctx: ModelCtx):
 
 # --- uniform forward --------------------------------------------------------
 
-def _uniform_forward(cfg, params, h, positions, ctx, collect_kv: bool):
+def _uniform_forward(cfg, params, h, positions, ctx, collect_kv: bool,
+                     live=None):
     def body(carry, blk):
         x, aux = carry
         a_out, kv = attn_apply(cfg, blk["attn"], x, positions, ctx,
                                return_kv=collect_kv)
         x = x + a_out
-        f_out, f_aux = ffn_apply(cfg, blk["ffn"], x, ctx)
+        f_out, f_aux = ffn_apply(cfg, blk["ffn"], x, ctx, live=live)
         x = x + f_out
         return (x, _sum_aux(aux, _aux_of(f_aux, cfg))), kv
 
@@ -356,7 +360,8 @@ def _jamba_ffn_idx(j: int) -> Tuple[str, int]:
     return ("ffn_moe", j // 2) if j % 2 == 1 else ("ffn_dense", j // 2)
 
 
-def _jamba_forward(cfg, params, h, positions, ctx, collect_kv: bool):
+def _jamba_forward(cfg, params, h, positions, ctx, collect_kv: bool,
+                   live=None):
     per = cfg.attn_period
 
     # nested remat: each sublayer is its own checkpoint so the period
@@ -374,7 +379,7 @@ def _jamba_forward(cfg, params, h, positions, ctx, collect_kv: bool):
         return x + ctx.constrain(m_out, "residual")
 
     def ffn_sub(fblk, x):
-        f_out, f_aux = ffn_apply(cfg, fblk, x, ctx)
+        f_out, f_aux = ffn_apply(cfg, fblk, x, ctx, live=live)
         return x + f_out, _aux_of(f_aux, cfg)
 
     if ctx.remat:
@@ -434,7 +439,8 @@ def _jamba_decode(cfg, params, h, position, ctx, cache):
 
 # --- gemma forward (unrolled heterogeneous local/global) ---------------------
 
-def _gemma_forward(cfg, params, h, positions, ctx, collect_kv: bool):
+def _gemma_forward(cfg, params, h, positions, ctx, collect_kv: bool,
+                   live=None):
     kinds = cfg.layer_kinds()
     kvs = []
     aux = zero_aux(cfg)
@@ -443,7 +449,7 @@ def _gemma_forward(cfg, params, h, positions, ctx, collect_kv: bool):
         a_out, kv = attn_apply(cfg, blk["attn"], x, positions, ctx,
                                window=window, return_kv=collect_kv)
         x = x + a_out
-        f_out, f_aux = ffn_apply(cfg, blk["ffn"], x, ctx)
+        f_out, f_aux = ffn_apply(cfg, blk["ffn"], x, ctx, live=live)
         return x + f_out, kv, f_aux
 
     for blk, kind in zip(params["blocks"], kinds):
@@ -573,19 +579,32 @@ def _positions(cfg, batch):
 
 
 def forward_hidden(cfg: ArchConfig, params: Dict, batch: Dict,
-                   ctx: ModelCtx = ModelCtx(), collect_kv: bool = False):
-    """Full-sequence forward up to the final norm: (hidden, aux, kvs)."""
+                   ctx: ModelCtx = ModelCtx(), collect_kv: bool = False,
+                   true_len=None):
+    """Full-sequence forward up to the final norm: (hidden, aux, kvs).
+
+    ``true_len`` (serving prefill): positions >= true_len are right-padding
+    — they are masked out of MoE routing so pad garbage never consumes
+    expert capacity (every other sublayer is causal or per-token, so pads
+    cannot touch real positions there)."""
     fam = family(cfg)
     h = _embed_inputs(cfg, params, batch, ctx)
     positions = _positions(cfg, batch)
+    live = None
+    if true_len is not None:
+        B, S = batch["tokens"].shape
+        live = jnp.broadcast_to((jnp.arange(S) < true_len)[None], (B, S))
     if fam == "uniform":
-        h, aux, kvs = _uniform_forward(cfg, params, h, positions, ctx, collect_kv)
+        h, aux, kvs = _uniform_forward(cfg, params, h, positions, ctx,
+                                       collect_kv, live)
     elif fam == "rwkv6":
         h, aux, kvs = _rwkv_forward(cfg, params, h, ctx), zero_aux(cfg), None
     elif fam == "jamba":
-        h, aux, kvs = _jamba_forward(cfg, params, h, positions, ctx, collect_kv)
+        h, aux, kvs = _jamba_forward(cfg, params, h, positions, ctx,
+                                     collect_kv, live)
     elif fam == "gemma":
-        h, aux, kvs = _gemma_forward(cfg, params, h, positions, ctx, collect_kv)
+        h, aux, kvs = _gemma_forward(cfg, params, h, positions, ctx,
+                                     collect_kv, live)
     elif fam == "whisper":
         enc_out = whisper_encode(cfg, params, batch["frames"], ctx)
         h, aux, kvs = _whisper_dec_forward(cfg, params, h, positions, enc_out,
@@ -596,9 +615,11 @@ def forward_hidden(cfg: ArchConfig, params: Dict, batch: Dict,
 
 
 def forward(cfg: ArchConfig, params: Dict, batch: Dict,
-            ctx: ModelCtx = ModelCtx(), collect_kv: bool = False):
+            ctx: ModelCtx = ModelCtx(), collect_kv: bool = False,
+            true_len=None):
     """Full-sequence forward.  Returns (logits, aux, kvs)."""
-    h, aux, kvs = forward_hidden(cfg, params, batch, ctx, collect_kv)
+    h, aux, kvs = forward_hidden(cfg, params, batch, ctx, collect_kv,
+                                 true_len=true_len)
     logits = ctx.constrain(layers.lm_logits(cfg, params, h), "logits")
     return logits, aux, kvs
 
@@ -697,13 +718,13 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Dict:
 
 def prefill_into_cache(cfg: ArchConfig, params: Dict, batch: Dict,
                        cache: Dict, ctx: ModelCtx = ModelCtx()):
-    """Batched prefill: one full-sequence forward whose per-layer K/V land
-    in the decode cache (serving path: prefill once, then decode_step).
+    """Batched all-rows prefill: one full-sequence forward whose per-layer
+    K/V land in the decode cache (every row shares one prompt length).
 
     Supported for the uniform and whisper families (stacked (L,B,S,Hk,D)
-    caches); SSM/hybrid families prefill via their recurrent states and
-    gemma via per-layer ring buffers — those use teacher-forced decode or
-    family-specific prefill (see DESIGN.md §5).
+    caches).  The serving engine uses the family-polymorphic
+    :func:`prefill_into_slot` instead, which covers every family — ring
+    buffers, recurrent states, cross-KV — one slot row at a time.
     Returns (last_logits (B, V), cache)."""
     fam = family(cfg)
     if fam not in ("uniform", "whisper"):
@@ -720,6 +741,206 @@ def prefill_into_cache(cfg: ArchConfig, params: Dict, batch: Dict,
         cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
     cache["len"] = jnp.full((B,), S_p, jnp.int32)
     return logits[:, -1], cache
+
+
+# --- per-slot serving state (the family-polymorphic DecodeState protocol) ---
+#
+# Every family exposes the same three operations to the serving engine:
+#   init_slots(cfg, n_slots, max_len)            -> slot-indexed state
+#   prefill_into_slot(cfg, params, state, ...)   -> scatter one request
+#   decode_step(cfg, params, state, tokens)      -> one token for all slots
+# The state layout is family-owned (stacked KV rows, ring buffers, mamba /
+# wkv recurrent rows, whisper cross-KV); the engine never looks inside it.
+
+
+def init_slots(cfg: ArchConfig, n_slots: int, max_len: int) -> Dict:
+    """Slot-indexed decode state for ``n_slots`` concurrent requests (the
+    serving alias of :func:`init_cache`: one cache row == one slot)."""
+    return init_cache(cfg, n_slots, max_len)
+
+
+def _ring_rows(x, true_len, window: int):
+    """Gather a prompt's K or V rows (x: (S, Hk, D), absolute positions)
+    into ring-buffer layout: row ``r`` holds the *latest* position
+    ``p < true_len`` with ``p % window == r`` — the layout decode's
+    ``slot = len % window`` insertion continues from, wraparound-correct
+    for prompts longer than the window.  Rows with no valid position
+    (true_len < window) hold clamped garbage; decode masks them via the
+    per-slot length."""
+    S = x.shape[0]
+    r = jnp.arange(window)
+    p = true_len - 1 - jnp.mod(true_len - 1 - r, window)
+    return x[jnp.clip(p, 0, S - 1)]
+
+
+def _scatter_kv(cache: Dict, name: str, rows, slot):
+    """Scatter (L, 1, S, Hk, D) prompt K/V into slot ``slot`` of a stacked
+    (L, n_slots, max_len, Hk, D) cache entry."""
+    return jax.lax.dynamic_update_slice(
+        cache[name], rows.astype(cache[name].dtype), (0, slot, 0, 0, 0))
+
+
+def _uniform_prefill_slot(cfg, params, cache, tokens, true_len, slot, ctx):
+    logits, _, (k, v) = forward(cfg, params, {"tokens": tokens}, ctx,
+                                collect_kv=True, true_len=true_len)
+    cache = dict(cache)
+    cache["k"] = _scatter_kv(cache, "k", k, slot)
+    cache["v"] = _scatter_kv(cache, "v", v, slot)
+    cache["len"] = cache["len"].at[slot].set(true_len)
+    return logits[0, true_len - 1], cache
+
+
+def _gemma_prefill_slot(cfg, params, cache, tokens, true_len, slot, ctx):
+    logits, _, kvs = forward(cfg, params, {"tokens": tokens}, ctx,
+                             collect_kv=True, true_len=true_len)
+    cache = dict(cache)
+    new_k, new_v = [], []
+    for (k, v), kind, kc, vc in zip(kvs, cfg.layer_kinds(),
+                                    cache["k"], cache["v"]):
+        if kind == "local_attn":                 # ring-buffer rows
+            k_row = _ring_rows(k[0], true_len, cfg.sliding_window)
+            v_row = _ring_rows(v[0], true_len, cfg.sliding_window)
+        else:                                    # full rows from position 0
+            k_row, v_row = k[0], v[0]
+        new_k.append(jax.lax.dynamic_update_slice(
+            kc, k_row[None].astype(kc.dtype), (slot, 0, 0, 0)))
+        new_v.append(jax.lax.dynamic_update_slice(
+            vc, v_row[None].astype(vc.dtype), (slot, 0, 0, 0)))
+    cache["k"], cache["v"] = tuple(new_k), tuple(new_v)
+    cache["len"] = cache["len"].at[slot].set(true_len)
+    return logits[0, true_len - 1], cache
+
+
+def _jamba_prefill_slot(cfg, params, cache, tokens, true_len, slot, ctx):
+    per = cfg.attn_period
+    batch = {"tokens": tokens}
+    h = _embed_inputs(cfg, params, batch, ctx)
+    positions = _positions(cfg, batch)
+    B, S = tokens.shape
+    live = jnp.broadcast_to((jnp.arange(S) < true_len)[None], (B, S))
+
+    def body(x, blk):
+        kv, new_m = None, []
+        for j in range(per):
+            if j == 0:
+                a_out, kv = attn_apply(cfg, blk["attn"], x, positions, ctx,
+                                       return_kv=True)
+                x = x + a_out
+            else:
+                mblk = jax.tree.map(lambda a: a[j - 1], blk["mamba"])
+                m_out, mst = ssm.mamba_forward(
+                    cfg, mblk["m"], layers.apply_norm(cfg, mblk["norm"], x),
+                    chunk=ctx.mamba_chunk, true_len=true_len)
+                new_m.append(mst)
+                x = x + m_out
+            name, idx = _jamba_ffn_idx(j)
+            fblk = jax.tree.map(lambda a: a[idx], blk[name])
+            f_out, _ = ffn_apply(cfg, fblk, x, ctx, live=live)
+            x = x + f_out
+        new_m = jax.tree.map(lambda *xs: jnp.stack(xs), *new_m)
+        return x, (kv, new_m)
+
+    h, (kvs, ms) = jax.lax.scan(body, h, params["blocks"])
+    h = layers.apply_norm(cfg, params["final_norm"], h)
+    logits = layers.lm_logits(cfg, params, h)
+    cache = dict(cache)
+    k, v = kvs                                   # (n_per, 1, S, Hk, D)
+    cache["k"] = _scatter_kv(cache, "k", k, slot)
+    cache["v"] = _scatter_kv(cache, "v", v, slot)
+    # mamba rows: (n_per, per-1, B, ...) — batch axis 2
+    cache["mamba"] = ssm.scatter_slot_state(cache["mamba"], ms, slot,
+                                            batch_axis=2)
+    cache["len"] = cache["len"].at[slot].set(true_len)
+    return logits[0, true_len - 1], cache
+
+
+def _rwkv_prefill_slot(cfg, params, cache, tokens, true_len, slot, ctx):
+    h = _embed_inputs(cfg, params, {"tokens": tokens}, ctx)
+
+    def body(x, blk):
+        xn = layers.apply_norm(cfg, blk["norm1"], x)
+        t_out, tstate = ssm.rwkv6_forward(cfg, blk["tmix"], xn,
+                                          true_len=true_len)
+        x = x + t_out
+        xn2 = layers.apply_norm(cfg, blk["norm2"], x)
+        c_out, clast = ssm.rwkv_cmix_forward(cfg, blk["cmix"], xn2,
+                                             true_len=true_len)
+        x = x + c_out
+        st = {"tmix_last": tstate["last"], "wkv": tstate["wkv"],
+              "cmix_last": clast}
+        return x, st
+
+    h, states = jax.lax.scan(body, h, params["blocks"])
+    h = layers.apply_norm(cfg, params["final_norm"], h)
+    logits = layers.lm_logits(cfg, params, h)
+    cache = dict(cache)
+    cache["states"] = ssm.scatter_slot_state(cache["states"], states, slot,
+                                             batch_axis=1)
+    cache["len"] = cache["len"].at[slot].set(true_len)
+    return logits[0, true_len - 1], cache
+
+
+def _whisper_prefill_slot(cfg, params, cache, tokens, true_len, slot, ctx,
+                          frames):
+    logits, _, (kvs, ekvs) = forward(
+        cfg, params, {"tokens": tokens, "frames": frames}, ctx,
+        collect_kv=True, true_len=true_len)
+    cache = dict(cache)
+    cache["k"] = _scatter_kv(cache, "k", kvs[0], slot)
+    cache["v"] = _scatter_kv(cache, "v", kvs[1], slot)
+    cache["cross_k"] = _scatter_kv(cache, "cross_k", ekvs[0], slot)
+    cache["cross_v"] = _scatter_kv(cache, "cross_v", ekvs[1], slot)
+    cache["len"] = cache["len"].at[slot].set(true_len)
+    return logits[0, true_len - 1], cache
+
+
+def prefill_into_slot(cfg: ArchConfig, params: Dict, cache: Dict, tokens,
+                      true_len, slot, ctx: ModelCtx = ModelCtx(),
+                      frames=None):
+    """Scatter one request's prompt state into slot ``slot`` of a decode
+    state built by :func:`init_slots`; returns (last-position logits (V,),
+    new state).  This is the family-polymorphic half of the serving
+    DecodeState protocol — every architecture family implements it over
+    its own state layout:
+
+    * ``uniform``  — per-layer K/V rows scattered at positions [0, true_len).
+    * ``gemma``    — global layers as uniform; local layers land in
+      sliding-window **ring-buffer** rows (``position % window``),
+      wraparound-correct for prompts longer than the window.
+    * ``jamba``    — per-period K/V rows + mamba conv/ssm recurrent rows.
+    * ``rwkv6``    — wkv ``S``-state plus time-mix/channel-mix shift states.
+    * ``whisper``  — decoder self-KV plus per-slot cross-KV computed once
+      here from the request's encoder ``frames`` (1, F, d_model).
+
+    ``tokens`` (1, S_pad) may be right-padded to a static prefill bucket;
+    ``true_len`` marks the real prompt end.  KV families mask padding via
+    the per-slot length; recurrent families neutralize pad steps inside
+    the scan (identity transitions — see :mod:`repro.models.ssm`); MoE
+    layers drop pad positions from routing so they never consume expert
+    capacity.  The scattered state is the state after ``true_len`` tokens
+    — exactly, except that a capacity-dropping MoE evaluates its group
+    capacity at the bucket length (streams stay a pure function of the
+    request + bucket, never of pad contents)."""
+    fam = family(cfg)
+    if fam == "uniform":
+        return _uniform_prefill_slot(cfg, params, cache, tokens, true_len,
+                                     slot, ctx)
+    if fam == "gemma":
+        return _gemma_prefill_slot(cfg, params, cache, tokens, true_len,
+                                   slot, ctx)
+    if fam == "jamba":
+        return _jamba_prefill_slot(cfg, params, cache, tokens, true_len,
+                                   slot, ctx)
+    if fam == "rwkv6":
+        return _rwkv_prefill_slot(cfg, params, cache, tokens, true_len,
+                                  slot, ctx)
+    if fam == "whisper":
+        if frames is None:
+            raise ValueError("whisper prefill_into_slot needs the request's "
+                             "encoder frames (1, F, d_model)")
+        return _whisper_prefill_slot(cfg, params, cache, tokens, true_len,
+                                     slot, ctx, frames)
+    raise ValueError(fam)
 
 
 def decode_step(cfg: ArchConfig, params: Dict, cache: Dict, tokens,

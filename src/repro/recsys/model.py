@@ -41,6 +41,19 @@ def embed_id_fns() -> Dict[str, Callable[[Dict], jnp.ndarray]]:
     return {"cf_user": lambda batch: batch["user"]}
 
 
+def embed_plans(kind: str = "row", row_axis: str = "model",
+                col_axis: str = "data"):
+    """Default :class:`~repro.embeddings.EmbedPlan` placement for the CF
+    tables under the hybrid GSPMD mesh — pass to ``auto_plan(...,
+    embed_plans=...)`` / ``ShardingPlan.embed_plans`` so the train step
+    places the tables where the embeddings subsystem costs them (row-
+    sharded vocab by default; any non-dividing table falls back to
+    replication via the plan guard)."""
+    from repro.embeddings import make_plan
+    plan = make_plan(kind, row_axis=row_axis, col_axis=col_axis)
+    return {"cf_user": plan, "cf_item": plan}
+
+
 def init_recllm(key, cfg: ArchConfig, n_users: int, cf_dim: int = 64
                 ) -> Dict:
     k1, k2, k3 = jax.random.split(key, 3)

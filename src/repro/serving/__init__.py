@@ -6,22 +6,32 @@ the hybrid-parallel stack, it must serve heavy interactive traffic.  This
 package promotes the `examples/serve_lm.py` toy into a first-class engine:
 
 * :mod:`repro.serving.engine`  — fixed-slot continuous batching (static
-  shapes, per-slot lengths, prefill-on-arrival, bounded admission queue),
-  with a native-dtype KV backend and an int8-quantized KV backend.
+  shapes, per-slot lengths, prefill-on-arrival, bounded admission queue)
+  over a **family registry** of slot backends: every architecture family
+  (uniform decoders, gemma ring buffers, jamba/rwkv6 recurrent rows,
+  whisper cross-KV) plugs into the same scheduler, with int8-KV as an
+  orthogonal composition for any KV-bearing family.
 * :mod:`repro.serving.traffic` — reproducible request workloads: Poisson or
-  bursty arrivals, Zipfian users and prompt lengths, per-request SLO tiers.
+  bursty arrivals, Zipfian users and prompt lengths, per-request SLO tiers,
+  encoder frames for enc-dec families.
 * :mod:`repro.serving.metrics` — throughput, TTFT, per-output-token latency,
   p50/p95/p99, and SLO attainment.
+* :mod:`repro.serving.roofline` — modeled TPU-scale decode roofline terms
+  (compute vs resident-state memory) for the full architectures.
 """
-from repro.serving.engine import (EngineConfig, Int8KVBackend, NativeBackend,
-                                  ServingEngine)
+from repro.serving.engine import (EngineConfig, Int8KVBackend, Int8KVSlots,
+                                  NativeBackend, ServingEngine, SlotBackend,
+                                  make_backend)
 from repro.serving.metrics import RequestRecord, percentile, summarize
+from repro.serving.roofline import decode_state_bytes, modeled_decode_step
 from repro.serving.traffic import (BATCH_TIER, INTERACTIVE_TIER, Clock,
                                    Request, SLOTier, TrafficConfig, generate)
 
 __all__ = [
-    "EngineConfig", "ServingEngine", "NativeBackend", "Int8KVBackend",
+    "EngineConfig", "ServingEngine", "SlotBackend", "NativeBackend",
+    "Int8KVBackend", "Int8KVSlots", "make_backend",
     "RequestRecord", "percentile", "summarize",
+    "decode_state_bytes", "modeled_decode_step",
     "Request", "SLOTier", "TrafficConfig", "generate", "Clock",
     "INTERACTIVE_TIER", "BATCH_TIER",
 ]

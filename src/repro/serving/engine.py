@@ -20,12 +20,23 @@ per-request RNG key folded with the token index, so sampled streams are
 reproducible regardless of slot placement or batch composition
 (temperature 0 = greedy, the default).
 
-Two KV-cache backends plug into the same scheduler:
+The scheduler is **state-layout agnostic**: it only ever calls a backend's
+``init_slots`` / ``prefill`` / ``decode`` and treats the slot state as an
+opaque pytree.  Backends come from a *family registry*
+(:func:`make_backend` dispatches on ``transformer.family(cfg)``), built on
+the family-polymorphic DecodeState protocol in
+:mod:`repro.models.transformer` — so every architecture family serves
+through the same engine: uniform decoders (stacked KV rows), gemma
+(sliding-window ring-buffer rows), jamba (per-period KV + mamba recurrent
+rows), rwkv6 (wkv state rows), whisper (self-KV + per-slot cross-KV from
+each request's encoder frames).
 
-* :class:`NativeBackend` — model-dtype cache via ``transformer.init_cache``
-  / ``decode_step``.
-* :class:`Int8KVBackend` — int8-quantized cache via ``models.kvquant``
-  (half the cache bytes; the decode roofline's memory term).
+KV precision composes orthogonally: ``kv="int8"`` uses the fused
+int8-attention path for the uniform family (:class:`Int8KVBackend`, via
+``models.kvquant``) and the generic :class:`Int8KVSlots` composition —
+int8 values + per-(position, head) scales around any KV-bearing family's
+state — everywhere else (half the cache bytes; the decode roofline's
+memory term).
 
 Time is kept on a :class:`~repro.serving.traffic.Clock`: each model call
 advances it by measured wall time (or a pinned per-call cost in tests), and
@@ -77,6 +88,38 @@ def sample_token(logits_row, temperature: float, top_k: int, key) -> int:
     return int(jax.random.categorical(key, lg / temperature))
 
 
+def sample_tokens(logits, temperatures, top_ks, keys):
+    """Batched :func:`sample_token`: one token per (V,) row of ``logits``
+    in a single traced computation — per-row temperature / top-k / RNG key,
+    greedy rows (``temperature <= 0``) take the argmax.  Bit-identical to
+    calling ``sample_token`` row by row (the kth-largest cut value equals
+    ``lax.top_k``'s, and vmapping ``categorical`` over keys preserves each
+    key's stream)."""
+    V = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1)
+    lg = logits.astype(jnp.float32)
+    kth = jnp.take_along_axis(
+        -jnp.sort(-lg, axis=-1),
+        (jnp.clip(top_ks, 1, V) - 1).astype(jnp.int32)[:, None], axis=-1)
+    lg = jnp.where((top_ks[:, None] > 0) & (lg < kth), -jnp.inf, lg)
+    safe_t = jnp.where(temperatures > 0.0, temperatures, 1.0)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, lg / safe_t)
+    return jnp.where(temperatures > 0.0, sampled, greedy)
+
+
+# module-level jits: every ServingEngine instance (the bench builds dozens)
+# shares one compile per (n_slots, V) shape
+@jax.jit
+def _greedy_tokens(logits):
+    return jnp.argmax(logits, axis=-1)
+
+
+@jax.jit
+def _fold_and_sample(logits, temperatures, top_ks, keys, counts):
+    keys = jax.vmap(jax.random.fold_in)(keys, counts)
+    return sample_tokens(logits, temperatures, top_ks, keys)
+
+
 class AdmissionQueue:
     """Two-level SLO-priority admission queue (interactive > batch).
 
@@ -110,67 +153,119 @@ class AdmissionQueue:
         return self._tiers[False].pop() if self._tiers[False] else None
 
 
-class _UniformFamilyBackend:
-    """Shared jit wiring for slot backends over the uniform decoder family.
+# Which slot-state entries hold scatterable KV rows, per family (the int8
+# composition quantizes exactly these; rwkv6 carries no KV at all).
+KV_KEYS: Dict[str, tuple] = {
+    "uniform": ("k", "v"),
+    "gemma": ("k", "v"),
+    "jamba": ("k", "v"),
+    "whisper": ("k", "v", "cross_k", "cross_v"),
+    "rwkv6": (),
+}
 
-    Subclasses supply ``init_cache``, ``_prefill_impl`` (traced: scatter a
-    prompt's K/V into one slot, return that slot's last-position logits),
-    and ``_decode_impl`` (traced one-token decode for the whole batch)."""
+# family -> backend class; filled by @register_family below.
+FAMILY_BACKENDS: Dict[str, type] = {}
+
+
+def register_family(*families):
+    """Class decorator: register a SlotBackend for the given families."""
+    def deco(cls):
+        for fam in families:
+            FAMILY_BACKENDS[fam] = cls
+        cls.families = families
+        return cls
+    return deco
+
+
+class SlotBackend:
+    """Jit wiring over the family-polymorphic DecodeState protocol.
+
+    Subclasses supply ``init_slots`` (slot-indexed state pytree),
+    ``_prefill_impl`` (traced: scatter one request's prompt state into one
+    slot row, return that slot's last-position logits), and
+    ``_decode_impl`` (traced one-token decode for every slot)."""
+
+    families = None                     # set by @register_family (None: any)
 
     def __init__(self, cfg, params, ctx: Optional[tf.ModelCtx] = None):
-        if tf.family(cfg) != "uniform":
+        fam = tf.family(cfg)
+        if self.families is not None and fam not in self.families:
             raise NotImplementedError(
-                f"{type(self).__name__} supports the uniform decoder "
-                f"family; {cfg.name} is {tf.family(cfg)}")
-        self.cfg, self.params = cfg, params
+                f"{type(self).__name__} supports families {self.families}; "
+                f"{cfg.name} is {fam}")
+        self.cfg, self.params, self.family = cfg, params, fam
         self.ctx = ctx if ctx is not None else tf.ModelCtx(attn_chunk=8)
         self._decode = jax.jit(self._decode_impl)
         self._prefill = jax.jit(self._prefill_impl)
 
+    def kv_keys(self) -> tuple:
+        return KV_KEYS[self.family]
+
+    def init_slots(self, n_slots: int, max_len: int) -> Dict:
+        raise NotImplementedError
+
+    # back-compat alias (PR 1/2 name)
+    def init_cache(self, n_slots: int, max_len: int) -> Dict:
+        return self.init_slots(n_slots, max_len)
+
     def prefill(self, cache: Dict, tokens: np.ndarray, true_len: int,
-                slot: int):
-        """tokens (1, S_pad) -> (last-position logits (V,), cache)."""
+                slot: int, frames=None):
+        """tokens (1, S_pad) -> (last-position logits (V,), cache).
+        ``frames`` (F, d) or (1, F, d): encoder input for enc-dec families
+        (zeros when omitted — every slot then shares one silent context)."""
+        if self.cfg.encoder_layers:
+            if frames is None:
+                frames = np.zeros(
+                    (1, self.cfg.encoder_frames, self.cfg.d_model),
+                    np.float32)
+            frames = jnp.asarray(frames, jnp.dtype(self.cfg.dtype))
+            if frames.ndim == 2:
+                frames = frames[None]
+        else:
+            frames = None
         return self._prefill(self.params, cache,
                              jnp.asarray(tokens, jnp.int32),
-                             jnp.int32(true_len), jnp.int32(slot))
+                             jnp.int32(true_len), jnp.int32(slot), frames)
 
     def decode(self, cache: Dict, tokens):
         """tokens (n_slots, 1) -> (logits (n_slots, 1, V), cache)."""
         return self._decode(self.params, cache, tokens)
 
 
-class NativeBackend(_UniformFamilyBackend):
-    """Model-dtype KV cache via transformer.init_cache/decode_step."""
+@register_family("uniform", "gemma", "jamba", "rwkv6", "whisper")
+class NativeBackend(SlotBackend):
+    """Model-dtype slot state via the transformer DecodeState protocol
+    (``init_slots`` / ``prefill_into_slot`` / ``decode_step``)."""
 
-    def init_cache(self, n_slots: int, max_len: int) -> Dict:
-        return tf.init_cache(self.cfg, n_slots, max_len)
+    def init_slots(self, n_slots: int, max_len: int) -> Dict:
+        return tf.init_slots(self.cfg, n_slots, max_len)
 
     def _decode_impl(self, params, cache, tokens):
         return tf.decode_step(self.cfg, params, cache, tokens, self.ctx)
 
-    def _prefill_impl(self, params, cache, tokens, true_len, slot):
-        logits, _, (k, v) = tf.forward(self.cfg, params, {"tokens": tokens},
-                                       self.ctx, collect_kv=True)
-        cache = dict(cache)
-        cache["k"] = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0, 0))
-        cache["v"] = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0, 0))
-        cache["len"] = cache["len"].at[slot].set(true_len)
-        return logits[0, true_len - 1], cache
+    def _prefill_impl(self, params, cache, tokens, true_len, slot,
+                      frames=None):
+        return tf.prefill_into_slot(self.cfg, params, cache, tokens,
+                                    true_len, slot, self.ctx, frames=frames)
 
 
-class Int8KVBackend(_UniformFamilyBackend):
-    """Int8-quantized KV cache (kvquant): half the cache bytes per slot."""
+class Int8KVBackend(SlotBackend):
+    """Fused int8-KV path for the uniform family (kvquant): the cache is
+    int8 values + per-(position, head) scales and the decode score matmul
+    runs against the int8 values directly — half the cache bytes per slot
+    AND no dequantized copy is ever materialized."""
 
-    def init_cache(self, n_slots: int, max_len: int) -> Dict:
+    families = ("uniform",)
+
+    def init_slots(self, n_slots: int, max_len: int) -> Dict:
         return kvquant.init_model_quant_cache(self.cfg, n_slots, max_len)
 
     def _decode_impl(self, params, cache, tokens):
         return kvquant.quant_decode_step(self.cfg, params, cache, tokens,
                                          self.ctx)
 
-    def _prefill_impl(self, params, cache, tokens, true_len, slot):
+    def _prefill_impl(self, params, cache, tokens, true_len, slot,
+                      frames=None):
         logits, (k_q, k_s, v_q, v_s) = kvquant.quant_prefill_kv(
             self.cfg, params, {"tokens": tokens}, self.ctx)
         cache = dict(cache)
@@ -183,24 +278,91 @@ class Int8KVBackend(_UniformFamilyBackend):
         return logits[0, true_len - 1], cache
 
 
+class Int8KVSlots(SlotBackend):
+    """Generic int8-KV composition over any KV-bearing family backend.
+
+    The inner family's slot state keeps its layout, but every KV entry
+    (``KV_KEYS`` — stacked rows, gemma ring buffers, whisper cross-KV) is
+    *stored* as int8 values + per-(position, head) f32 scales; recurrent
+    states (mamba rows, wkv) stay full precision (they are O(1) per slot).
+    Each step dequantizes for the family's native decode and requantizes
+    the updated state.  Requantizing untouched rows is exact (see
+    :func:`repro.models.kvquant.quantize_kv_tree`), so only the newly
+    written position actually changes — repeated steps do not drift.  On
+    a real accelerator the dequantized working copy is a per-step
+    activation; the *resident* per-slot state is the halved int8 form that
+    the decode roofline's memory term prices."""
+
+    def __init__(self, inner: SlotBackend):
+        self.inner = inner
+        super().__init__(inner.cfg, inner.params, inner.ctx)
+
+    def kv_keys(self) -> tuple:
+        return self.inner.kv_keys()
+
+    def _quant(self, cache: Dict) -> Dict:
+        keys = self.inner.kv_keys()
+        q, s = kvquant.quantize_kv_tree({k: cache[k] for k in keys})
+        rest = {k: v for k, v in cache.items() if k not in keys}
+        return {"kv_q": q, "kv_s": s, "rest": rest}
+
+    def _dequant(self, qcache: Dict) -> Dict:
+        kv = kvquant.dequantize_kv_tree(qcache["kv_q"], qcache["kv_s"],
+                                        jnp.dtype(self.cfg.dtype))
+        return {**qcache["rest"], **kv}
+
+    def init_slots(self, n_slots: int, max_len: int) -> Dict:
+        return self._quant(self.inner.init_slots(n_slots, max_len))
+
+    def _decode_impl(self, params, qcache, tokens):
+        logits, cache = self.inner._decode_impl(params,
+                                                self._dequant(qcache), tokens)
+        return logits, self._quant(cache)
+
+    def _prefill_impl(self, params, qcache, tokens, true_len, slot,
+                      frames=None):
+        logits, cache = self.inner._prefill_impl(
+            params, self._dequant(qcache), tokens, true_len, slot, frames)
+        return logits, self._quant(cache)
+
+
 def make_backend(cfg, params, ctx: Optional[tf.ModelCtx] = None,
                  kv: str = "native"):
+    """Family-registry dispatch: the backend for ``tf.family(cfg)``, with
+    the int8-KV composition applied on request (fused path for uniform,
+    :class:`Int8KVSlots` for any other KV-bearing family)."""
+    fam = tf.family(cfg)
+    if fam not in FAMILY_BACKENDS:
+        raise NotImplementedError(
+            f"no serving backend registered for family {fam!r} "
+            f"(have {sorted(FAMILY_BACKENDS)})")
     if kv == "native":
-        return NativeBackend(cfg, params, ctx)
+        return FAMILY_BACKENDS[fam](cfg, params, ctx)
     if kv == "int8":
-        return Int8KVBackend(cfg, params, ctx)
+        if fam == "uniform":
+            return Int8KVBackend(cfg, params, ctx)
+        if not KV_KEYS[fam]:
+            raise ValueError(
+                f"family {fam!r} carries no KV cache; kv='int8' does not "
+                f"apply (its recurrent state is O(1) per slot already)")
+        return Int8KVSlots(FAMILY_BACKENDS[fam](cfg, params, ctx))
     raise ValueError(f"unknown kv backend {kv!r}")
 
 
 class ServingEngine:
-    """Slot scheduler over any backend exposing init_cache/prefill/decode."""
+    """Slot scheduler over any backend exposing init_slots/prefill/decode.
+
+    The scheduler never looks inside the slot state — family layout
+    (stacked KV, ring buffers, recurrent rows, cross-KV) is entirely the
+    backend's business."""
 
     def __init__(self, backend, ecfg: EngineConfig = EngineConfig(),
                  clock: Optional[Clock] = None):
         self.backend, self.ecfg = backend, ecfg
         self.clock = clock if clock is not None else Clock()
         n = ecfg.n_slots
-        self.cache = backend.init_cache(n, ecfg.max_len)
+        init = getattr(backend, "init_slots", None) or backend.init_cache
+        self.cache = init(n, ecfg.max_len)
         self.queue = AdmissionQueue()
         self.slot_req: List[Optional[Request]] = [None] * n
         self.slot_rec: List[Optional[metrics_lib.RequestRecord]] = [None] * n
@@ -266,10 +428,13 @@ class ServingEngine:
                         self.ecfg.max_len)
         padded = np.full((1, s_pad), self.ecfg.pad_id, np.int32)
         padded[0, :len(prompt)] = prompt
+        kwargs = {}
+        if req.frames is not None:       # enc-dec: cross-KV at admission
+            kwargs["frames"] = np.asarray(req.frames, np.float32)
         logits_row, self.cache = self._timed(
             self.clock.fixed_prefill_s,
             lambda: self.backend.prefill(self.cache, padded,
-                                         len(prompt), slot))
+                                         len(prompt), slot, **kwargs))
         self.prefills += 1
         key = self._request_key(req)
         first = sample_token(logits_row, req.temperature, req.top_k,
@@ -285,7 +450,7 @@ class ServingEngine:
         self.slot_rec[slot] = rec
         self.slot_remaining[slot] = budget - 1
         self.slot_tokens[slot, 0] = first
-        self.slot_key[slot] = key
+        self.slot_key[slot] = np.asarray(key)    # host copy: stacked later
 
     def _refill(self) -> None:
         free = [s for s in range(self.ecfg.n_slots)
@@ -303,23 +468,35 @@ class ServingEngine:
             lambda: self.backend.decode(self.cache,
                                         jnp.asarray(self.slot_tokens)))
         self.decode_steps += 1
-        any_greedy = any(r is not None and r.temperature <= 0.0
-                         for r in self.slot_req)
-        nxt = (np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
-               if any_greedy else None)
-        for s in range(self.ecfg.n_slots):
+        n = self.ecfg.n_slots
+        any_sampled = any(r is not None and r.temperature > 0.0
+                          for r in self.slot_req)
+        if not any_sampled:
+            nxt = np.asarray(_greedy_tokens(logits[:, 0, :]), np.int32)
+        else:
+            # batched temperature/top-k/categorical over all slots: one
+            # device call, one host sync.  Per-slot keys fold with the
+            # token index inside the jit, so slot placement and batch
+            # composition never change a request's sampled stream (the
+            # semantics the scalar sample_token path established).
+            temps = np.zeros(n, np.float32)
+            topks = np.zeros(n, np.int32)
+            counts = np.zeros(n, np.int32)
+            keys = np.zeros((n, 2), np.uint32)
+            for s in range(n):
+                if self.slot_req[s] is None:
+                    continue
+                temps[s] = self.slot_req[s].temperature
+                topks[s] = self.slot_req[s].top_k
+                counts[s] = self.slot_rec[s].tokens_out
+                keys[s] = self.slot_key[s]
+            nxt = np.asarray(_fold_and_sample(logits[:, 0, :], temps, topks,
+                                              keys, counts), np.int32)
+        for s in range(n):
             req, rec = self.slot_req[s], self.slot_rec[s]
             if req is None:
                 continue
-            if req.temperature > 0.0:
-                # per-slot RNG key folded with the token index: slot
-                # placement and batch composition never change the stream
-                tok = sample_token(logits[s, 0, :], req.temperature,
-                                   req.top_k,
-                                   jax.random.fold_in(self.slot_key[s],
-                                                      rec.tokens_out))
-            else:
-                tok = int(nxt[s])
+            tok = int(nxt[s])
             self.outputs[req.rid].append(tok)
             rec.tokens_out += 1
             self.slot_remaining[s] -= 1

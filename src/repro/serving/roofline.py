@@ -1,0 +1,82 @@
+"""Modeled TPU-scale serving roofline (the serve artifact's derived terms).
+
+The host-CPU ``serve`` benchmark measures reduced-arch wall times; this
+module models what the *full* architecture's decode step costs on the
+TPU-v5e hardware model in :mod:`repro.config` — the serving twin of the
+training artifacts' modeled collective terms.  Per engine step:
+
+* compute term — :func:`repro.core.hybrid.decode_model_flops`: active-param
+  matmuls plus attention over each slot's live cache positions;
+* memory term — the bytes a decode step must stream from HBM: the active
+  parameters plus every slot's **resident decode state**, which is exactly
+  what the family-polymorphic state layouts size (full KV rows for uniform
+  decoders, window-bounded ring rows for gemma's local layers, O(1)
+  recurrent rows for mamba/rwkv6, self-KV + encoder-frame cross-KV for
+  whisper).
+
+``kv_bits=8`` prices the int8 composition: one byte per element plus a f32
+scale per (position, head) — the knob that halves the memory term for
+KV-dominated families and does nothing for rwkv6 (no KV to quantize).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.config import ArchConfig, HBM_BW, PEAK_FLOPS_BF16
+
+
+def _kv_pos_bytes(head_dim: int, n_kv: int, kv_bits: int) -> float:
+    """Bytes per cached (position, k+v) across the kv heads."""
+    if kv_bits == 8:
+        per_head = head_dim + 4          # int8 values + one f32 scale
+    elif kv_bits == 16:
+        per_head = 2 * head_dim
+    else:
+        raise ValueError(f"kv_bits must be 8 or 16, got {kv_bits}")
+    return 2 * n_kv * per_head           # k and v
+
+
+def decode_state_bytes(cfg: ArchConfig, cache_len: int,
+                       kv_bits: int = 16) -> float:
+    """Resident decode-state bytes for ONE slot at ``cache_len`` positions."""
+    dt = 2                               # model dtype (bf16) itemsize
+    kv_pos = _kv_pos_bytes(cfg.head_dim, cfg.num_kv_heads, kv_bits)
+    total = 0.0
+    for kind in cfg.layer_kinds():
+        if kind == "attn":
+            total += cache_len * kv_pos
+        elif kind == "local_attn":
+            total += min(cache_len, cfg.sliding_window or cache_len) * kv_pos
+        elif kind == "mamba":
+            d_in = cfg.ssm_expand * cfg.d_model
+            total += (cfg.ssm_d_conv - 1) * d_in * dt       # conv window
+            total += d_in * cfg.ssm_d_state * 4             # f32 ssm state
+        elif kind == "rwkv6":
+            hs = cfg.rwkv_head_size
+            total += (cfg.d_model // hs) * hs * hs * 4      # f32 wkv state
+            total += 2 * cfg.d_model * dt                   # shift states
+        else:
+            raise ValueError(kind)
+    if cfg.encoder_layers:               # per-decoder-layer cross-KV rows
+        total += cfg.num_layers * cfg.encoder_frames * kv_pos
+    return total
+
+
+def modeled_decode_step(cfg: ArchConfig, n_slots: int, cache_len: int,
+                        kv_bits: int = 16) -> Dict[str, object]:
+    """Roofline terms for one engine decode step on the full arch."""
+    from repro.core.hybrid import decode_model_flops
+    flops = decode_model_flops(cfg, cache_len, n_slots)
+    state = n_slots * decode_state_bytes(cfg, cache_len, kv_bits)
+    params = 2.0 * cfg.active_params()
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = (params + state) / HBM_BW
+    step_s = max(t_compute, t_memory)
+    return {
+        "t_compute_ms": t_compute * 1e3,
+        "t_memory_ms": t_memory * 1e3,
+        "state_bytes_per_slot": state / n_slots,
+        "param_bytes": params,
+        "bound": "memory" if t_memory >= t_compute else "compute",
+        "modeled_tok_s": n_slots / step_s,
+    }

@@ -47,6 +47,10 @@ class Request:
     eos_id: int = -1                    # -1: never stop early
     temperature: float = 0.0            # <= 0: greedy decode
     top_k: int = 0                      # 0: no top-k filtering
+    # encoder-decoder families (whisper): per-request encoder frames
+    # (F, d_model) as nested tuples so Request stays hashable/comparable;
+    # the engine computes the slot's cross-KV from these at admission.
+    frames: Optional[Tuple[Tuple[float, ...], ...]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +72,9 @@ class TrafficConfig:
     eos_id: int = -1
     temperature: float = 0.0            # per-request sampling (0 = greedy)
     top_k: int = 0
+    encoder_frames: int = 0             # >0: attach (F, frame_dim) frames
+    frame_dim: int = 0                  # (enc-dec families, e.g. whisper)
+    frame_scale: float = 0.02
     seed: int = 0
 
 
@@ -128,6 +135,11 @@ def generate(cfg: TrafficConfig) -> List[Request]:
 
     reqs = []
     for i in range(cfg.n_requests):
+        frames = None
+        if cfg.encoder_frames and cfg.frame_dim:
+            f = rng.normal(0.0, cfg.frame_scale,
+                           (cfg.encoder_frames, cfg.frame_dim))
+            frames = tuple(tuple(float(x) for x in row) for row in f)
         reqs.append(Request(
             rid=i,
             user_id=int(users[i]),
@@ -138,6 +150,7 @@ def generate(cfg: TrafficConfig) -> List[Request]:
             eos_id=cfg.eos_id,
             temperature=cfg.temperature,
             top_k=cfg.top_k,
+            frames=frames,
         ))
     return reqs
 

@@ -360,6 +360,64 @@ def _():
 
 
 # ---------------------------------------------------------------------------
+@check("hybrid_recllm_embed_plan_matches_replicated")
+def _():
+    """The hybrid GSPMD train step with the recsys CF tables routed through
+    EmbedPlan placement (row-sharded over ``model``) places the tables
+    sharded AND follows the replicated-placement loss trajectory exactly
+    (placement must not change the math)."""
+    import dataclasses
+    from repro.config import get_arch, reduced, TrainConfig, ParallelConfig, \
+        SHAPES
+    from repro.core.hybrid import auto_plan
+    from repro.models import transformer as tf
+    from repro.optimizer import adamw
+    from repro.recsys import model as recsys_model
+    from repro.runtime import trainer
+    mesh = compat.make_mesh((4, 2), ("data", "model"))
+    cfg = dataclasses.replace(reduced(get_arch("recllm-base")),
+                              dtype="float32")
+    n_users = 64
+    tcfg = TrainConfig(steps=4, checkpoint_every=0)
+    ctx = tf.ModelCtx(attn_chunk=8)
+    loss_fn = lambda p, b: recsys_model.recllm_loss(cfg, p, b, ctx)  # noqa: E731
+    rng = np.random.default_rng(3)
+    batch = {"tokens": jnp.asarray(rng.integers(3, 200, (8, 16)), jnp.int32),
+             "targets": jnp.asarray(rng.integers(3, 200, (8, 16)),
+                                    jnp.int32),
+             "user": jnp.asarray(rng.integers(0, n_users, (8,)), jnp.int32)}
+    trajs = {}
+    for name, eplans in (("replicated", None),
+                         ("embed_plan", recsys_model.embed_plans("row"))):
+        plan = auto_plan(cfg, mesh, SHAPES["train_4k"], ParallelConfig(),
+                         embed_plans=eplans)
+        step, jitted, shardings_for = trainer.make_hybrid_train_step(
+            cfg, plan, tcfg, loss_fn=loss_fn)
+        params = recsys_model.init_recllm(jax.random.PRNGKey(0), cfg,
+                                          n_users)
+        pspecs = plan.sharding.param_specs(
+            cfg, jax.eval_shape(lambda: params))
+        want = P("model", None) if eplans else P(None, None)
+        assert pspecs["cf_user"] == want, pspecs["cf_user"]
+        assert pspecs["cf_item"] == want, pspecs["cf_item"]
+        opt = adamw.init_opt_state(params)
+        fn = jitted(jax.eval_shape(lambda: params), batch)
+        losses = []
+        for _ in range(4):
+            params, opt, metrics = fn(params, opt, batch)
+            losses.append(float(metrics["loss"]))
+        if eplans:
+            # the table shards actually land row-sharded over `model`
+            assert params["cf_user"].sharding.spec == P("model", None), \
+                params["cf_user"].sharding
+        assert np.isfinite(losses).all()
+        trajs[name] = losses
+    np.testing.assert_allclose(trajs["embed_plan"], trajs["replicated"],
+                               rtol=1e-4, atol=1e-6)
+    RESULTS.setdefault("recllm_embed_losses", trajs)
+
+
+# ---------------------------------------------------------------------------
 @check("dryrun_cell_on_host_mesh")
 def _():
     """A miniature dry-run: the full build_cell path on an 8-device mesh."""

@@ -43,6 +43,7 @@ CHECKS = [
     "embed_sharded_lookup_matches_replicated",
     "embed_sparse_row_sync_matches_dense_pmean",
     "dp_train_step_sparse_embed_matches_dense",
+    "hybrid_recllm_embed_plan_matches_replicated",
     "dryrun_cell_on_host_mesh",
 ]
 

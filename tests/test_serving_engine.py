@@ -389,14 +389,255 @@ def test_int8_kv_backend_tracks_native_logits():
         toks = jnp.argmax(lg_n[:, -1:], -1).astype(jnp.int32)
 
 
-def test_engine_rejects_unsupported_family():
+def test_family_registry_and_int8_gating():
+    """Every family resolves a backend; the fused int8 path stays pinned to
+    the uniform family; int8 on a KV-free family is a clear error."""
+    assert set(eng.FAMILY_BACKENDS) == {"uniform", "gemma", "jamba",
+                                        "rwkv6", "whisper"}
     cfg = dataclasses.replace(reduced(get_arch("rwkv6-1.6b")),
                               dtype="float32")
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    assert isinstance(eng.make_backend(cfg, params), eng.NativeBackend)
     with pytest.raises(NotImplementedError):
-        eng.NativeBackend(cfg, params)
-    with pytest.raises(NotImplementedError):
-        eng.Int8KVBackend(cfg, params)
+        eng.Int8KVBackend(cfg, params)       # fused path is uniform-only
+    with pytest.raises(ValueError):
+        eng.make_backend(cfg, params, kv="int8")   # rwkv6 has no KV
+    cfg_g = dataclasses.replace(reduced(get_arch("gemma3-1b")),
+                                dtype="float32")
+    params_g = tf.init_params(jax.random.PRNGKey(0), cfg_g)
+    assert isinstance(eng.make_backend(cfg_g, params_g, kv="int8"),
+                      eng.Int8KVSlots)
+
+
+# ---------------------------------------------------------------------------
+# family-polymorphic DecodeState: every family through the same engine
+# ---------------------------------------------------------------------------
+
+FAMILY_ARCHS = {"uniform": "olmo-1b", "gemma": "gemma3-1b",
+                "jamba": "jamba-v0.1-52b", "rwkv6": "rwkv6-1.6b",
+                "whisper": "whisper-medium"}
+
+
+def _family_setup(fam, seed=0):
+    cfg = dataclasses.replace(reduced(get_arch(FAMILY_ARCHS[fam])),
+                              dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(4):
+        plen = int(rng.integers(4, 12))
+        frames = None
+        if cfg.encoder_layers:
+            f = rng.normal(0, 0.02, (cfg.encoder_frames, cfg.d_model))
+            frames = tuple(tuple(float(x) for x in row) for row in f)
+        reqs.append(traffic.Request(
+            rid=i, user_id=i,
+            prompt=tuple(int(t) for t in
+                         rng.integers(3, cfg.vocab_size, plen)),
+            max_new_tokens=int(rng.integers(3, 8)), arrival=0.0,
+            frames=frames))
+    return cfg, params, reqs
+
+
+@pytest.mark.parametrize("fam", sorted(FAMILY_ARCHS))
+def test_continuous_batching_matches_sequential_per_family(fam):
+    """Slot composition must never change a request's greedy stream: the
+    continuous engine over mixed slots produces the same tokens as serving
+    each request alone in a 1-slot engine (same prefill buckets)."""
+    cfg, params, reqs = _family_setup(fam)
+    backend = eng.make_backend(cfg, params)      # shared jit cache
+    outputs, _, summary = eng.ServingEngine(
+        backend, eng.EngineConfig(n_slots=3, max_len=64)).run(reqs)
+    assert summary["finished"] == len(reqs)
+    assert summary["tokens_out"] > 0
+    for req in reqs:
+        solo, _, _ = eng.ServingEngine(
+            backend, eng.EngineConfig(n_slots=1, max_len=64)).run([req])
+        assert outputs[req.rid] == solo[req.rid], \
+            f"{fam} request {req.rid} diverged from sequential decode"
+
+
+@pytest.mark.parametrize("fam", sorted(FAMILY_ARCHS))
+def test_prefill_into_slot_matches_full_forward(fam):
+    """Per-slot prefill + cached decode tracks a from-scratch full forward
+    over the growing sequence — the state scattered into a slot (ring rows,
+    recurrent states, cross-KV) is exactly the prompt's state.  MoE capacity
+    is uncapped so padded and exact-length runs route identically."""
+    ctx = tf.ModelCtx(attn_chunk=8, moe_capacity_factor=8.0)
+    cfg = dataclasses.replace(reduced(get_arch(FAMILY_ARCHS[fam])),
+                              dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    plen, s_pad = 12, 16                 # > gemma window 8: ring wraps
+    prompt = rng.integers(3, cfg.vocab_size, plen)
+    padded = np.zeros((1, s_pad), np.int32)
+    padded[0, :plen] = prompt
+    frames = None
+    if cfg.encoder_layers:
+        frames = jnp.asarray(rng.normal(0, 0.02,
+                                        (1, cfg.encoder_frames, cfg.d_model)),
+                             jnp.float32)
+
+    def ref_logits(all_tokens):
+        b = {"tokens": jnp.asarray([all_tokens], jnp.int32)}
+        if frames is not None:
+            b["frames"] = frames
+        return tf.forward(cfg, params, b, ctx)[0][0, -1]
+
+    cache = tf.init_slots(cfg, 2, 32)
+    lg, cache = tf.prefill_into_slot(cfg, params, cache, jnp.asarray(padded),
+                                     jnp.int32(plen), jnp.int32(1), ctx,
+                                     frames=frames)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(ref_logits(
+        list(prompt))), atol=2e-3, rtol=2e-3)
+    toks = [int(jnp.argmax(lg))]
+    for _ in range(6):
+        t2 = np.zeros((2, 1), np.int32)
+        t2[1, 0] = toks[-1]
+        lg2, cache = tf.decode_step(cfg, params, cache, jnp.asarray(t2), ctx)
+        rl = ref_logits(list(prompt) + toks)
+        np.testing.assert_allclose(np.asarray(lg2[1, 0]), np.asarray(rl),
+                                   atol=2e-3, rtol=2e-3)
+        toks.append(int(jnp.argmax(lg2[1, 0])))
+
+
+@pytest.mark.parametrize("arch", ["jamba-v0.1-52b", "qwen3-moe-30b-a3b"])
+def test_moe_prefill_independent_of_pad_contents(arch):
+    """Pad positions are masked out of MoE routing: garbage in the pad
+    region can never evict a real token from its expert, so prefill logits
+    and the scattered state are bit-identical whatever the padding holds.
+    Capacity is deliberately tight (0.5) and the pad region wide — without
+    the routing mask, pad tokens' expert slots queue ahead of real tokens'
+    k=1 slots and this test diverges."""
+    cfg = dataclasses.replace(reduced(get_arch(arch)), dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    ctx = tf.ModelCtx(attn_chunk=8, moe_capacity_factor=0.5)
+    rng = np.random.default_rng(3)
+    plen, s_pad = 9, 32
+    prompt = rng.integers(3, cfg.vocab_size, plen)
+    outs = []
+    for fill in (0, 1):                      # pad with zeros vs garbage
+        padded = np.full((1, s_pad), 0, np.int32)
+        if fill:
+            padded[0] = rng.integers(3, cfg.vocab_size, s_pad)
+        padded[0, :plen] = prompt
+        cache = tf.init_slots(cfg, 1, 32)
+        lg, cache = tf.prefill_into_slot(
+            cfg, params, cache, jnp.asarray(padded), jnp.int32(plen),
+            jnp.int32(0), ctx)
+        toks = [int(jnp.argmax(lg))]
+        for _ in range(3):
+            lg2, cache = tf.decode_step(
+                cfg, params, cache, jnp.asarray([[toks[-1]]], jnp.int32),
+                ctx)
+            toks.append(int(jnp.argmax(lg2[0, 0])))
+        outs.append((np.asarray(lg), toks))
+    np.testing.assert_array_equal(outs[0][0], outs[1][0])
+    assert outs[0][1] == outs[1][1]
+
+
+def test_gemma_ring_buffer_wraparound():
+    """Regression: prompt + generated tokens exceed the sliding window, so
+    local-layer ring rows wrap during BOTH prefill scatter and decode; the
+    cached stream must still match full re-forward sliding-window attention
+    token for token."""
+    cfg = dataclasses.replace(reduced(get_arch("gemma3-1b")),
+                              dtype="float32")
+    assert cfg.sliding_window == 8
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(2)
+    plen = 13                            # prompt alone already wraps
+    prompt = rng.integers(3, cfg.vocab_size, plen)
+    padded = np.zeros((1, 16), np.int32)
+    padded[0, :plen] = prompt
+    ctx = tf.ModelCtx(attn_chunk=8)
+    cache = tf.init_slots(cfg, 1, 32)
+    lg, cache = tf.prefill_into_slot(cfg, params, cache, jnp.asarray(padded),
+                                     jnp.int32(plen), jnp.int32(0), ctx)
+    toks = [int(jnp.argmax(lg))]
+    for _ in range(10):                  # 13 + 10 = 23 >> window 8
+        lg, cache = tf.decode_step(cfg, params, cache,
+                                   jnp.asarray([[toks[-1]]], jnp.int32), ctx)
+        toks.append(int(jnp.argmax(lg[0, 0])))
+    want = []
+    seq = list(prompt)
+    for _ in range(11):
+        full = tf.forward(cfg, params, {"tokens": jnp.asarray([seq])},
+                          ctx)[0][0, -1]
+        want.append(int(jnp.argmax(full)))
+        seq.append(want[-1])
+    assert toks == want
+
+
+def test_int8_slots_composition_tracks_native():
+    """The generic int8-KV composition (gemma ring buffers + whisper
+    cross-KV) stays close to native logits and preserves greedy argmax —
+    and repeated requantization of untouched rows does not drift."""
+    for fam in ("gemma", "whisper"):
+        cfg, params, reqs = _family_setup(fam, seed=3)
+        native = eng.make_backend(cfg, params)
+        quant = eng.make_backend(cfg, params, kv="int8")
+        frames = (np.asarray(reqs[0].frames, np.float32)
+                  if reqs[0].frames is not None else None)
+        cache_n = native.init_slots(2, 64)
+        cache_q = quant.init_slots(2, 64)
+        rng = np.random.default_rng(4)
+        for slot in range(2):
+            plen = int(rng.integers(6, 12))
+            padded = np.zeros((1, 16), np.int32)
+            padded[0, :plen] = rng.integers(3, cfg.vocab_size, plen)
+            ln, cache_n = native.prefill(cache_n, padded, plen, slot,
+                                         frames=frames)
+            lq, cache_q = quant.prefill(cache_q, padded, plen, slot,
+                                        frames=frames)
+        toks = jnp.asarray([[5], [9]], jnp.int32)
+        for _ in range(6):
+            lg_n, cache_n = native.decode(cache_n, toks)
+            lg_q, cache_q = quant.decode(cache_q, toks)
+            spread = float(jnp.max(lg_n) - jnp.min(lg_n))
+            err = float(jnp.max(jnp.abs(lg_n - lg_q)))
+            assert err <= 0.05 * spread, \
+                f"{fam}: int8 logit error {err} vs spread {spread}"
+            assert (jnp.argmax(lg_n[:, 0], -1)
+                    == jnp.argmax(lg_q[:, 0], -1)).all(), fam
+            toks = jnp.argmax(lg_n[:, -1:], -1).astype(jnp.int32)
+
+
+def test_whisper_cross_kv_is_per_slot():
+    """Different encoder frames in different slots must produce different
+    streams — the cross-KV really is computed per request at admission."""
+    cfg, params, reqs = _family_setup("whisper", seed=5)
+    backend = eng.make_backend(cfg, params)
+    base = reqs[0]
+    rng = np.random.default_rng(6)
+    other = tuple(tuple(float(x) for x in row) for row in
+                  rng.normal(0, 0.5, (cfg.encoder_frames, cfg.d_model)))
+    variant = dataclasses.replace(base, rid=99, frames=other)
+    ecfg = eng.EngineConfig(n_slots=2, max_len=64)
+    out, _, _ = eng.ServingEngine(backend, ecfg).run([base, variant])
+    assert out[base.rid] != out[variant.rid]
+
+
+def test_sample_tokens_bit_identical_to_scalar():
+    """The batched sampler (one device call per decode step) must be
+    bit-identical to the per-slot sample_token path it replaced."""
+    rng = np.random.default_rng(0)
+    n, V = 6, 48
+    keys = np.stack([np.asarray(jax.random.fold_in(jax.random.PRNGKey(7), i))
+                     for i in range(n)])
+    fn = jax.jit(lambda lg, t, k, ks, c: eng.sample_tokens(
+        lg, t, k, jax.vmap(jax.random.fold_in)(ks, c)))
+    for trial in range(10):
+        logits = jnp.asarray(rng.normal(0, 2, (n, V)), jnp.float32)
+        temps = (rng.uniform(0, 4, n) * (rng.random(n) > 0.3)
+                 ).astype(np.float32)
+        topks = rng.integers(0, V + 1, n).astype(np.int32)
+        counts = rng.integers(0, 50, n).astype(np.int32)
+        scalar = [eng.sample_token(
+            logits[i], float(temps[i]), int(topks[i]),
+            jax.random.fold_in(keys[i], int(counts[i]))) for i in range(n)]
+        batched = list(np.asarray(fn(logits, temps, topks, keys, counts)))
+        assert scalar == batched, (trial, scalar, batched)
 
 
 # ---------------------------------------------------------------------------

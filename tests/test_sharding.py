@@ -39,6 +39,34 @@ def test_dense_param_rules(plan):
     assert blk["ffn"]["mlp"]["wo"] == P(None, "model", None)
 
 
+def test_embed_plan_routes_cf_tables():
+    """Top-level table keys named in ``embed_plans`` take their placement
+    from the embeddings subsystem (row/col/2D) instead of the LM rules;
+    non-dividing tables fall back to replication via the plan guard."""
+    from repro.recsys import model as recsys_model
+    am = compat.abstract_mesh((4, 4), ("data", "model"))
+    shapes = {"cf_user": jax.ShapeDtypeStruct((64, 8), jnp.float32),
+              "cf_item": jax.ShapeDtypeStruct((256, 8), jnp.float32),
+              "odd": jax.ShapeDtypeStruct((63, 8), jnp.float32)}
+    cfg = get_arch("recllm-base")
+    plans = recsys_model.embed_plans("row")
+    from repro.embeddings import make_plan as embed_make_plan
+    plans["odd"] = embed_make_plan("row")
+    sp = ShardingPlan(mesh=am, dp_axes=("data",), tp_axis="model",
+                      embed_plans=plans)
+    specs = sp.param_specs(cfg, shapes)
+    assert specs["cf_user"] == P("model", None)
+    assert specs["cf_item"] == P("model", None)
+    assert specs["odd"] == P(None, None)        # 63 rows: guard replicates
+    # 2D (row x col) placement flows through too
+    sp2 = ShardingPlan(mesh=am, dp_axes=("data",), tp_axis="model",
+                       embed_plans={"cf_user": embed_make_plan("row_col")})
+    assert sp2.param_specs(cfg, shapes)["cf_user"] == P("model", "data")
+    # without plans, the tables fall back to replicated LM rules
+    sp3 = ShardingPlan(mesh=am, dp_axes=("data",), tp_axis="model")
+    assert sp3.param_specs(cfg, shapes)["cf_user"] == P(None, None)
+
+
 def test_gqa_kv_replication_rule():
     """Production-mesh rules via AbstractMesh (no devices needed)."""
     import dataclasses
