@@ -116,6 +116,53 @@ def fig5(rows):
 
 
 # ---------------------------------------------------------------------------
+# Training parallelism: DP-only vs TP-only vs PP-only vs hybrid DP x TP x PP
+# through the unified pipelined train step — measured host step times on the
+# simulated 8-device mesh, plus the modeled production point (internlm2-20b
+# on 32 chips) and the GPipe-vs-1F1B bubble column
+# ---------------------------------------------------------------------------
+
+def train_parallel(rows):
+    from repro.config import SHAPES, get_arch
+    from repro.core.hybrid import modeled_parallel_step
+    from repro.core.pipeline import schedule_cost
+
+    out = {"measured": {}, "modeled": {}, "bubble": {}}
+    for scheme in ("dp", "tp", "pp", "hybrid"):
+        r = _run_payload(_module="benchmarks._train_payload", scheme=scheme,
+                         steps=4)
+        out["measured"][scheme] = r
+        _emit(rows, f"train_parallel.{scheme}.host_step",
+              r["host_step_ms"] * 1e3, "measured")
+
+    # modeled TPU-scale rows: a dense 20B at train_4k on 32 chips — the
+    # configuration where the paper's Table-2 ordering (hybrid > any
+    # single mode; pure DP cannot even hold its optimizer state) emerges
+    cfg = get_arch("internlm2-20b")
+    shape = SHAPES["train_4k"]
+    cases = {"dp_only": dict(dp=32), "tp_only": dict(tp=32),
+             "pp_only": dict(pp=32), "hybrid": dict(dp=2, tp=4, pp=4)}
+    for name, kw in cases.items():
+        m = modeled_parallel_step(cfg, shape, n_micro=8, schedule="1f1b",
+                                  **kw)
+        out["modeled"][name] = m
+        _emit(rows, f"train_parallel.{name}.modeled_tput",
+              m["modeled_throughput"], "derived")
+        _emit(rows, f"train_parallel.{name}.state_gb_per_dev",
+              m["state_gb_per_dev"], "derived")
+        _emit(rows, f"train_parallel.{name}.bubble_pct",
+              m["bubble_frac"] * 100, "derived")
+    for sched in ("gpipe", "1f1b"):
+        c = schedule_cost(sched, 4, 8)
+        out["bubble"][sched] = c
+        _emit(rows, f"train_parallel.bubble.{sched}",
+              c["bubble_frac"] * 100, "derived")
+        _emit(rows, f"train_parallel.stash.{sched}", c["stash_micros"],
+              "derived")
+    _save("train_parallel", out)
+
+
+# ---------------------------------------------------------------------------
 # Compression ablation: none / 1-bit / top-k on real DP training (+HR@10)
 # ---------------------------------------------------------------------------
 
@@ -345,7 +392,8 @@ def serve(rows):
 
 ALL = {"table2": table2, "table3": table3, "fig4": fig4, "fig5": fig5,
        "compression": compression, "async": async_staleness,
-       "kernels": kernels, "serve": serve, "embed": embed}
+       "kernels": kernels, "serve": serve, "embed": embed,
+       "train-parallel": train_parallel}
 
 
 def main() -> None:

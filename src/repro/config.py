@@ -201,6 +201,7 @@ class ParallelConfig:
     tp: int = 1
     pp: int = 1                       # pipeline stages (separate mesh when > 1)
     microbatches: int = 1             # pipeline micro-batches
+    pp_schedule: str = "1f1b"         # 1f1b | gpipe (core.pipeline.SCHEDULES)
     multi_pod: bool = False
     # activation sharding
     seq_shard_activations: bool = True   # Megatron-SP residual stream (beyond-paper)

@@ -2,14 +2,20 @@
 
 A real parameter server cannot live inside one XLA program, so this is a
 faithful *simulation* (DESIGN.md §3): P virtual workers push gradients
-computed against stale parameter snapshots; the server applies
+computed against stale parameter snapshots; the server applies the
+trainer's real update rule with a delay-compensated learning rate
 
-    theta_{t+1} = theta_t - eta * g_p / (1 + tau_p)          (Eq. 12)
+    theta_{t+1} = update(theta_t, g_p, eta / (1 + tau_p))     (Eq. 12)
 
-where tau_p is the staleness of worker p's snapshot.  The staleness process
-is configurable (fixed, random, or straggler-heavy) so the convergence /
-throughput trade-off the paper discusses is measurable, and delay
-compensation can be switched off to reproduce the naive-async degradation.
+where tau_p is the staleness of worker p's snapshot.  The optimizer is the
+SAME plumbing ``runtime.trainer`` uses for the synchronous steps
+(:func:`repro.runtime.trainer.make_update_rule` — AdamW + warmup-cosine),
+not a hand-rolled SGD, so staleness comparisons against the sync baseline
+isolate staleness rather than optimizer differences.  The staleness
+process is configurable (fixed, random, or straggler-heavy) so the
+convergence / throughput trade-off the paper discusses is measurable, and
+delay compensation can be switched off to reproduce the naive-async
+degradation.
 """
 from __future__ import annotations
 
@@ -29,6 +35,7 @@ class AsyncConfig:
     compensate: bool = True           # Eq. 12 down-weighting
     lr: float = 0.1
     staleness: str = "random"         # fixed | random | straggler
+    warmup_steps: int = 1             # shared update rule's LR warmup
 
 
 def _staleness_schedule(cfg: AsyncConfig, steps: int, rng: np.random.Generator
@@ -48,6 +55,18 @@ def _staleness_schedule(cfg: AsyncConfig, steps: int, rng: np.random.Generator
     return tau.astype(np.int32)
 
 
+def _update_plumbing(lr: float, steps: int, warmup_steps: int):
+    """The trainer's shared optimizer (AdamW + warmup-cosine), configured
+    for a bare convergence study: no weight decay, no clipping."""
+    from repro.config import TrainConfig
+    from repro.runtime import trainer
+
+    tcfg = TrainConfig(steps=steps, learning_rate=lr,
+                       warmup_steps=max(warmup_steps, 1), weight_decay=0.0,
+                       grad_clip=0.0, checkpoint_every=0)
+    return trainer.make_update_rule(tcfg)
+
+
 def simulate_async_sgd(loss_fn: Callable, params0, data_stream,
                        cfg: AsyncConfig, seed: int = 0
                        ) -> Tuple[object, List[float]]:
@@ -55,7 +74,8 @@ def simulate_async_sgd(loss_fn: Callable, params0, data_stream,
 
     loss_fn(params, batch) -> scalar; data_stream: iterable of batches.
     Keeps a ring buffer of the last ``max_staleness+1`` parameter snapshots;
-    each arriving gradient is computed at snapshot (t - tau_t).
+    each arriving gradient is computed at snapshot (t - tau_t) and applied
+    through the trainer's shared update rule with the Eq.-12 LR scale.
     """
     rng = np.random.default_rng(seed)
     batches = list(data_stream)
@@ -63,39 +83,40 @@ def simulate_async_sgd(loss_fn: Callable, params0, data_stream,
     tau_sched = _staleness_schedule(cfg, steps, rng)
 
     grad_fn = jax.jit(jax.grad(loss_fn))
-
-    @jax.jit
-    def apply_update(params, grads, tau):
-        scale = cfg.lr / (1.0 + tau) if cfg.compensate else cfg.lr
-        return jax.tree.map(lambda p, g: p - scale * g, params, grads)
+    init, apply = _update_plumbing(cfg.lr, steps, cfg.warmup_steps)
+    apply_jit = jax.jit(apply)
 
     history = [params0] * (cfg.max_staleness + 1)   # ring of snapshots
     params = params0
+    opt = init(params0)
     losses = []
     loss_jit = jax.jit(loss_fn)
     for t in range(steps):
         tau = int(min(tau_sched[t], t))             # cannot be staler than t
         stale_params = history[(t - tau) % len(history)]
         g = grad_fn(stale_params, batches[t])
-        params = apply_update(params, g, jnp.float32(tau))
+        scale = 1.0 / (1.0 + tau) if cfg.compensate else 1.0
+        params, opt = apply_jit(params, opt, g, jnp.float32(scale))
         history[t % len(history)] = params
         losses.append(float(loss_jit(params, batches[t])))
     return params, losses
 
 
-def simulate_sync_sgd(loss_fn: Callable, params0, data_stream, lr: float
-                      ) -> Tuple[object, List[float]]:
-    """Synchronous baseline on the same stream (Eq. 8/9)."""
+def simulate_sync_sgd(loss_fn: Callable, params0, data_stream, lr: float,
+                      warmup_steps: int = 1) -> Tuple[object, List[float]]:
+    """Synchronous baseline on the same stream (Eq. 8/9), through the same
+    shared update rule as the async simulator."""
+    batches = list(data_stream)
     grad_fn = jax.jit(jax.grad(loss_fn))
     loss_jit = jax.jit(loss_fn)
-
-    @jax.jit
-    def upd(params, g):
-        return jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+    init, apply = _update_plumbing(lr, len(batches), warmup_steps)
+    apply_jit = jax.jit(apply)
 
     params = params0
+    opt = init(params0)
     losses = []
-    for batch in data_stream:
-        params = upd(params, grad_fn(params, batch))
+    for batch in batches:
+        params, opt = apply_jit(params, opt, grad_fn(params, batch),
+                                jnp.float32(1.0))
         losses.append(float(loss_jit(params, batch)))
     return params, losses

@@ -15,7 +15,8 @@ from typing import Dict, List, Optional, Tuple
 from jax.sharding import Mesh
 
 from repro.config import (ArchConfig, ParallelConfig, ShapeConfig,
-                          HBM_BYTES_PER_CHIP)
+                          HBM_BYTES_PER_CHIP, ICI_BW_PER_LINK,
+                          PEAK_FLOPS_BF16)
 from repro.core import load_balance
 from repro.core.sharding import ShardingPlan, make_plan
 
@@ -88,6 +89,14 @@ class Plan:
     stage_bounds: Optional[Tuple[int, ...]] = None
     notes: Tuple[str, ...] = ()
 
+    @property
+    def pp_schedule(self) -> str:
+        return self.pcfg.pp_schedule
+
+    @property
+    def n_micro(self) -> int:
+        return max(self.pcfg.microbatches, 1)
+
 
 def auto_plan(cfg: ArchConfig, mesh: Mesh, shape: ShapeConfig,
               pcfg: ParallelConfig = ParallelConfig(),
@@ -152,7 +161,81 @@ def auto_plan(cfg: ArchConfig, mesh: Mesh, shape: ShapeConfig,
         bounds = tuple(load_balance.balance_stages(costs,
                                                    mesh.shape["stage"]))
         notes.append(f"stage bounds {bounds}")
+        if mesh.shape["stage"] > 1:
+            from repro.core.pipeline import schedule_cost
+            bub = schedule_cost(pcfg.pp_schedule, mesh.shape["stage"],
+                                max(pcfg.microbatches, 1))["bubble_frac"]
+            notes.append(f"pp {pcfg.pp_schedule} x{pcfg.microbatches} "
+                         f"bubble {bub:.2f}")
 
     return Plan(sharding=sharding, pcfg=pcfg, remat=remat,
                 grad_sync=grad_sync, stage_bounds=bounds,
                 notes=tuple(notes))
+
+
+# ---------------------------------------------------------------------------
+# Analytic DP x TP x PP step model (the ``train-parallel`` benchmark rows)
+# ---------------------------------------------------------------------------
+
+def modeled_parallel_step(cfg: ArchConfig, shape: ShapeConfig, *,
+                          dp: int = 1, tp: int = 1, pp: int = 1,
+                          n_micro: int = 8, schedule: str = "1f1b",
+                          zero1: bool = True) -> Dict[str, float]:
+    """TPU-scale roofline for one training step under a DP x TP x PP plan.
+
+    Terms (per device, ring-collective byte model as in ``hlo_cost``):
+
+    * compute — ``model_flops / (n_dev * peak)``;
+    * DP — gradient all-reduce of this rank's parameter shard;
+    * TP — Megatron activation psums: 2 branch reductions per layer forward
+      and their backward conjugates (4 activation-sized all-reduces per
+      layer-pass) over the device's ``L/pp`` layers, all micro-batches;
+    * PP — boundary activation sends (fwd) + cotangent sends (bwd);
+    * bubble — the schedule's idle fraction (``pipeline.schedule_cost``)
+      stretches the busy span by ``1/(1-bubble)`` when pp > 1.
+
+    Memory feasibility is part of the model (the paper's Table-2 baseline
+    is an OOM): per-device bytes = params + grads + optimizer (ZeRO-1 over
+    dp when ``zero1``) + residual activations; an infeasible plan reports
+    ``throughput = 0`` with ``fits = False``.
+    """
+    from repro.core.pipeline import schedule_cost
+    n_dev = dp * tp * pp
+    N = cfg.num_params()
+    flops = model_flops(cfg, shape.seq_len, shape.global_batch,
+                        training=True)
+    t_compute = flops / (n_dev * PEAK_FLOPS_BF16)
+
+    ring = lambda k, b: 2 * b * (k - 1) / k if k > 1 else 0.0  # noqa: E731
+    # DP: all-reduce this rank's grad shard (f32 master grads)
+    t_dp = ring(dp, 4 * N / (tp * pp)) / ICI_BW_PER_LINK
+    # TP: 4 act-sized all-reduces per layer (2 fwd + their 2 backward
+    # conjugates) over the device's local layers
+    L = cfg.num_layers
+    act = (shape.global_batch // max(dp, 1)) * shape.seq_len * cfg.d_model * 2
+    t_tp = ring(tp, 4 * (L / pp) * act) / ICI_BW_PER_LINK
+    # PP: neighbour sends, activation fwd + cotangent bwd per micro-batch
+    t_pp = (2 * act * 2 / ICI_BW_PER_LINK) if pp > 1 else 0.0
+    t_coll = t_dp + t_tp + t_pp
+
+    bubble = schedule_cost(schedule, pp, n_micro)["bubble_frac"] \
+        if pp > 1 else 0.0
+    t_busy = max(t_compute, t_coll)
+    t_step = t_busy / max(1.0 - bubble, 1e-9)
+
+    # memory feasibility from the resident *state*: weights bf16 + grads
+    # f32 + adamw m/v/master f32 (ZeRO-1 over dp).  Activations are left
+    # out — remat plus micro-batching keeps them subdominant — so this is
+    # the floor no schedule can dodge: the paper's Table-2 baseline (and
+    # any pure-DP carve of a 20B model) fails it.
+    state = (2 + 4) * N / (tp * pp) + 12 * N / (tp * pp * (dp if zero1
+                                                           else 1))
+    fits = state < HBM_BYTES_PER_CHIP
+    tput = shape.global_batch / t_step if fits else 0.0
+    return {"dp": dp, "tp": tp, "pp": pp, "n_micro": n_micro,
+            "schedule": schedule, "fits": bool(fits),
+            "state_gb_per_dev": state / 1e9,
+            "t_compute_ms": t_compute * 1e3, "t_dp_ms": t_dp * 1e3,
+            "t_tp_ms": t_tp * 1e3, "t_pp_ms": t_pp * 1e3,
+            "bubble_frac": bubble, "t_step_ms": t_step * 1e3,
+            "modeled_throughput": tput}

@@ -93,6 +93,38 @@ def stage_costs(layer_costs: Sequence[float], bounds: List[int]
                      for s in range(len(bounds) - 1)])
 
 
+def layer_costs_from_stage_times(stage_times: Sequence[float],
+                                 bounds: Sequence[int]) -> np.ndarray:
+    """Per-layer cost estimate from observed per-stage timings.
+
+    Timing granularity is the stage (one tick = one stage_fn call), so a
+    stage's measured time is attributed uniformly to its layers — exact
+    when layers inside a stage are homogeneous, and a contraction toward
+    the fix-point otherwise (each rebalance re-measures at the new
+    partition)."""
+    bounds = list(bounds)
+    costs = np.zeros(bounds[-1], np.float64)
+    for s in range(len(bounds) - 1):
+        n = bounds[s + 1] - bounds[s]
+        costs[bounds[s]:bounds[s + 1]] = float(stage_times[s]) / max(n, 1)
+    return costs
+
+
+def rebalance_stages(stage_times: Sequence[float], bounds: Sequence[int],
+                     n_stages: int = 0) -> List[int]:
+    """Close the observe->rebalance loop for pipeline stages (the stage
+    analogue of ``rebalance_experts`` -> ``rebalance_moe_params``): observed
+    per-tick stage timings re-carve the layer->stage bounds via the same
+    linear-partition DP.  Apply the new bounds to live stage params with
+    :func:`repro.models.transformer.remap_stage_params` — the remap is
+    output-preserving (layer order never changes, only the carve points).
+    """
+    bounds = list(bounds)
+    n_stages = n_stages or len(bounds) - 1
+    costs = layer_costs_from_stage_times(stage_times, bounds)
+    return balance_stages(costs, n_stages)
+
+
 def adaptive_batch_allocation(worker_speeds: Sequence[float],
                               global_batch: int,
                               min_per_worker: int = 1) -> np.ndarray:

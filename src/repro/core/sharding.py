@@ -309,6 +309,56 @@ class ShardingPlan:
         return jax.lax.with_sharding_constraint(x, self.named(spec))
 
 
+def pp_stage_specs(cfg: ArchConfig, stage_shape, mesh: Mesh,
+                   tp_axis: str = "model", stage_axis: str = "stage") -> Any:
+    """PartitionSpecs for the stage-stacked uniform blocks pytree
+    ({"blocks": (S, L_max, ...), "mask": (S, L_max)} from
+    ``transformer.stage_slice_params``): leading dim over ``stage_axis``,
+    Megatron TP dims over ``tp_axis`` where head / d_ff counts divide
+    (non-dividing dims replicate, same guard rule as ``param_specs``).
+    The trainer's shard_map consumes these as in/out specs, and uses
+    "has a tp dim" to decide which gradient leaves are exact local shards
+    versus per-rank partials needing a psum over ``tp_axis``.
+    """
+    tp = mesh.shape.get(tp_axis, 1)
+    q_ok = cfg.num_heads % tp == 0
+    kv_ok = cfg.num_kv_heads % tp == 0
+    ff_ok = cfg.d_ff % tp == 0
+    M = tp_axis
+
+    def rule(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", ""))) for k in path]
+        last = names[-1]
+        nd = len(leaf.shape)
+        if last == "mask":
+            return P(stage_axis, None)
+        if last == "wq":
+            base = (None, M if q_ok else None)
+        elif last in ("wk", "wv"):
+            base = (None, M if kv_ok else None)
+        elif last == "wo" and "attn" in names:
+            base = (M if q_ok else None, None)
+        elif last in ("wi", "wi_gate", "wi_up"):
+            base = (None, M if ff_ok else None)
+        elif last == "wo":                          # mlp down-projection
+            base = (M if ff_ok else None, None)
+        else:                                       # norms, qk_norm
+            base = (None,) * max(nd - 2, 0)
+        full = (stage_axis,) + (None,) * (nd - 1 - len(base)) + tuple(base)
+        return P(*full)
+
+    return jax.tree_util.tree_map_with_path(rule, stage_shape)
+
+
+def spec_has_axis(spec: P, axis: str) -> bool:
+    for dim in spec:
+        if dim is None:
+            continue
+        if dim == axis or (isinstance(dim, tuple) and axis in dim):
+            return True
+    return False
+
+
 def make_plan(mesh: Mesh, pcfg: ParallelConfig,
               seq_shard: Optional[bool] = None,
               dp_heavy: bool = False,

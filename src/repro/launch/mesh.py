@@ -20,8 +20,13 @@ def make_production_mesh(*, multi_pod: bool = False):
     return compat.make_mesh(shape, axes)
 
 
-def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
-    """Small mesh over however many host devices exist (tests/benches)."""
-    shape = ((pod,) if pod else ()) + (data, model)
-    axes = (("pod",) if pod else ()) + ("data", "model")
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0,
+                   stage: int = 0):
+    """Small mesh over however many host devices exist (tests/benches).
+    ``stage > 0`` appends a pipeline-stage axis (DP x TP x PP meshes for
+    the pipelined train step)."""
+    shape = ((pod,) if pod else ()) + (data, model) + \
+        ((stage,) if stage else ())
+    axes = (("pod",) if pod else ()) + ("data", "model") + \
+        (("stage",) if stage else ())
     return compat.make_mesh(shape, axes)

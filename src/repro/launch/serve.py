@@ -53,7 +53,10 @@ def run_engine(args) -> int:
         temperature=args.temperature, top_k=args.top_k,
         # enc-dec families: per-request encoder frames -> per-slot cross-KV
         encoder_frames=cfg.encoder_frames,
-        frame_dim=cfg.d_model if cfg.encoder_layers else 0)
+        frame_dim=cfg.d_model if cfg.encoder_layers else 0,
+        # vlm (mrope): prompts carry an image-patch grid prefix so decode
+        # exercises the text+patch position layout
+        image_grid=(2, 2) if cfg.pos_type == "mrope" else ())
     requests = generate(tcfg)
 
     ecfg = EngineConfig(n_slots=args.slots, max_len=args.max_len,

@@ -7,27 +7,24 @@ prefetch, straggler-aware data allocation).
 
   PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
       --steps 50 --batch 16 --seq 64
+
+``--pp-stages N`` switches to the pipelined DP x TP x stage path: the
+planner's balanced layer bounds slice the transformer into stages, the
+1F1B (or GPipe, ``--pp-schedule``) schedule drives them over ``--pp-micro``
+micro-batches, and DP gradient sync composes across the ``data`` axis:
+
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
+      --host-devices 8 --data 2 --model 2 --pp-stages 2 --pp-micro 4 \
+      --steps 10 --batch 16 --seq 32
 """
 import argparse
 import dataclasses
 import os
 
-import jax
-import jax.numpy as jnp
-
-from repro.config import (ParallelConfig, ShapeConfig, TrainConfig,
-                          get_arch, list_archs, reduced)
-from repro.core.hybrid import auto_plan
-from repro.data import pipeline
-from repro.launch.mesh import make_host_mesh
-from repro.models import transformer as tf
-from repro.optimizer import adamw
-from repro.runtime import trainer
-
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="olmo-1b", choices=list_archs())
+    ap.add_argument("--arch", default="olmo-1b")
     ap.add_argument("--reduced", action="store_true",
                     help="smoke-size config (CPU-friendly)")
     ap.add_argument("--steps", type=int, default=50)
@@ -35,35 +32,65 @@ def main(argv=None) -> int:
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--data", type=int, default=1, help="dp mesh size")
     ap.add_argument("--model", type=int, default=1, help="tp mesh size")
+    ap.add_argument("--pp-stages", type=int, default=1,
+                    help="pipeline stages (>1 enables the pipelined path)")
+    ap.add_argument("--pp-micro", type=int, default=4,
+                    help="pipeline micro-batches per step")
+    ap.add_argument("--pp-schedule", default="1f1b",
+                    choices=("1f1b", "gpipe"))
+    ap.add_argument("--grad-sync", default="flat",
+                    choices=("flat", "hierarchical", "onebit", "topk"),
+                    help="DP gradient sync mode on the pipelined path")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force N virtual host devices (set before jax "
+                         "initializes; needed for --pp-stages on CPU)")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args(argv)
 
+    if args.host_devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.host_devices}")
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.config import (ParallelConfig, ShapeConfig, TrainConfig,
+                              get_arch, list_archs, reduced)
+    from repro.core.hybrid import auto_plan
+    from repro.data import pipeline
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import transformer as tf
+    from repro.optimizer import adamw
+    from repro.runtime import trainer
+
+    if args.arch not in list_archs():
+        ap.error(f"unknown arch {args.arch}; have {list_archs()}")
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = dataclasses.replace(reduced(cfg), dtype="float32")
-    mesh = make_host_mesh(data=args.data, model=args.model)
+    pp = max(args.pp_stages, 1)
+    mesh = make_host_mesh(data=args.data, model=args.model,
+                          stage=pp if pp > 1 else 0)
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
-    plan = auto_plan(cfg, mesh, shape, ParallelConfig())
+    pcfg = ParallelConfig(dp=args.data, tp=args.model, pp=pp,
+                          microbatches=args.pp_micro,
+                          pp_schedule=args.pp_schedule)
+    plan = auto_plan(cfg, mesh, shape, pcfg)
     tcfg = TrainConfig(steps=args.steps, learning_rate=args.lr,
                        warmup_steps=max(args.steps // 20, 2),
                        checkpoint_dir=args.ckpt_dir,
                        checkpoint_every=max(args.steps // 4, 10))
 
-    step, jitted, shardings_for = trainer.make_hybrid_train_step(
-        cfg, plan, tcfg)
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
-    opt = adamw.init_opt_state(params)
     n = sum(x.size for x in jax.tree.leaves(params))
     print(f"{cfg.name}: {n/1e6:.1f}M params on mesh "
-          f"data={args.data} model={args.model}; plan notes: {plan.notes}")
+          f"data={args.data} model={args.model} stage={pp}; "
+          f"plan notes: {plan.notes}")
 
-    start, state = (trainer.resume_or_init({"params": params, "opt": opt},
-                                           tcfg)
-                    if args.resume else (0, {"params": params, "opt": opt}))
-
-    def gen():
+    def gen(start):
         for b in pipeline.synthetic_lm_batches(
                 cfg.vocab_size, args.batch, args.seq,
                 args.steps - start, seed=start):
@@ -81,12 +108,45 @@ def main(argv=None) -> int:
                     (args.batch, args.seq, 3)).astype(jnp.int32)
             yield b
 
-    fn = jitted(jax.eval_shape(lambda: state["params"]), next(iter(gen())))
-    res = trainer.train_loop(state, gen(), fn, tcfg, start_step=start,
-                             samples_per_batch=args.batch, verbose=True,
-                             log_every=max(args.steps // 10, 1))
-    print(f"done: {res.steps_run} steps, host throughput "
-          f"{res.throughput:.1f} samples/s, final loss {res.losses[-1]:.4f}")
+    if pp > 1:
+        # --- pipelined DP x TP x stage path ------------------------------
+        bounds = list(plan.stage_bounds)
+        scfg = trainer.DPSyncConfig(mode=args.grad_sync)
+        pp_params = tf.pp_partition_params(cfg, params, bounds)
+        pp_shape = jax.eval_shape(lambda: pp_params)
+        opt = adamw.init_opt_state(
+            trainer.pp_trainable(pp_params, cfg.tie_embeddings))
+        res = jnp.zeros((args.data, args.model, pp,
+                         trainer.pp_residual_size(cfg, pp_shape, mesh,
+                                                  scfg)))
+        step_fn = trainer.make_pp_train_step(
+            cfg, mesh, tcfg, bounds, pp_shape, n_micro=args.pp_micro,
+            pp_schedule=args.pp_schedule, scfg=scfg)
+        state = {"params": pp_params, "opt": opt, "residual": res}
+        start = 0
+        if args.resume:
+            start, state = trainer.resume_or_init(state, tcfg)
+        res_run = trainer.train_loop(
+            state, gen(start), step_fn, tcfg, start_step=start,
+            samples_per_batch=args.batch, verbose=True,
+            log_every=max(args.steps // 10, 1))
+    else:
+        # --- GSPMD hybrid path (TP x DP) ---------------------------------
+        step, jitted, shardings_for = trainer.make_hybrid_train_step(
+            cfg, plan, tcfg)
+        opt = adamw.init_opt_state(params)
+        start, state = (trainer.resume_or_init(
+            {"params": params, "opt": opt}, tcfg)
+            if args.resume else (0, {"params": params, "opt": opt}))
+        fn = jitted(jax.eval_shape(lambda: state["params"]),
+                    next(iter(gen(start))))
+        res_run = trainer.train_loop(
+            state, gen(start), fn, tcfg, start_step=start,
+            samples_per_batch=args.batch, verbose=True,
+            log_every=max(args.steps // 10, 1))
+    print(f"done: {res_run.steps_run} steps, host throughput "
+          f"{res_run.throughput:.1f} samples/s, final loss "
+          f"{res_run.losses[-1]:.4f}")
     return 0
 
 

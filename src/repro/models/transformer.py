@@ -556,6 +556,258 @@ def _whisper_decode(cfg, params, h, position, ctx, cache):
 
 
 # ---------------------------------------------------------------------------
+# Pipeline-parallel stage slicing (uniform family)
+# ---------------------------------------------------------------------------
+#
+# The stacked-layer (L, ...) scan params split at ``balance_stages`` bounds
+# into per-stage blocks with shape-uniform inter-stage activations.  Stages
+# may hold different layer counts, so every stage is padded to the widest
+# stage and carries a per-slot ``mask`` — a masked slot is the identity
+# (``x + 0 * sublayer(x)``), with the pad slots holding copies of a real
+# layer's params so no degenerate-weight numerics ever run.  Embed and
+# final-norm/head ride outside the stage stack as first/last-stage extras
+# (``pp_partition_params`` -> {"stage", "last", ["embed"]}).
+
+
+def stage_slice_params(cfg: ArchConfig, blocks, bounds) -> Dict:
+    """Split stacked (L, ...) uniform blocks into {"blocks": (S, L_max, ...),
+    "mask": (S, L_max)} at ``bounds`` (len S+1, from balance_stages)."""
+    S = len(bounds) - 1
+    sizes = [bounds[s + 1] - bounds[s] for s in range(S)]
+    if min(sizes) < 1:
+        raise ValueError(f"empty stage in bounds {bounds}")
+    L_max = max(sizes)
+
+    def slice_one(a):
+        outs = []
+        for s in range(S):
+            sl = a[bounds[s]:bounds[s + 1]]
+            if sizes[s] < L_max:                  # pad with a real layer
+                pad = jnp.broadcast_to(sl[-1:],
+                                       (L_max - sizes[s],) + sl.shape[1:])
+                sl = jnp.concatenate([sl, pad], axis=0)
+            outs.append(sl)
+        return jnp.stack(outs)
+
+    mask = jnp.asarray([[1.0] * n + [0.0] * (L_max - n) for n in sizes],
+                       jnp.float32)
+    return {"blocks": jax.tree.map(slice_one, blocks), "mask": mask}
+
+
+def unstack_stage_params(stage_params: Dict, bounds) -> Any:
+    """Inverse of :func:`stage_slice_params`: back to stacked (L, ...)."""
+    S = len(bounds) - 1
+    sizes = [bounds[s + 1] - bounds[s] for s in range(S)]
+
+    def join(a):
+        return jnp.concatenate([a[s, :sizes[s]] for s in range(S)], axis=0)
+
+    return jax.tree.map(join, stage_params["blocks"])
+
+
+def remap_stage_params(stage_params: Dict, old_bounds, new_bounds) -> Dict:
+    """Live stage remap: re-carve a padded stage stack under new layer
+    bounds (the observe->rebalance loop).  The model function is invariant
+    — layer order is preserved, only the stage assignment (and pad width)
+    changes."""
+    blocks = unstack_stage_params(stage_params, old_bounds)
+    return stage_slice_params(None, blocks, new_bounds)
+
+
+def pp_partition_params(cfg: ArchConfig, params: Dict, bounds) -> Dict:
+    """Full-model params -> the pipeline-parallel partition.
+
+    Returns {"stage": stage-stacked blocks+mask, "last": final-norm + head
+    (the tied-embedding table lives here when ``cfg.tie_embeddings``),
+    "embed": input table (untied only)}."""
+    if family(cfg) != "uniform":
+        raise NotImplementedError(
+            f"pipeline stage slicing covers the uniform family; "
+            f"{cfg.name} is {family(cfg)}")
+    if cfg.is_moe:
+        raise NotImplementedError(
+            "pipelined training drops MoE aux losses; dense uniform only")
+    if cfg.pos_type == "mrope":
+        raise NotImplementedError(
+            "the pipelined path runs plain rope positions and a bare "
+            "token embedding; mrope archs (patch_embeds mixing, "
+            "3-component positions) are not stage-sliceable yet")
+    out = {"stage": stage_slice_params(cfg, params["blocks"], bounds),
+           "last": {"final_norm": params["final_norm"]}}
+    if cfg.tie_embeddings:
+        out["last"]["embed"] = params["embed"]
+    else:
+        out["last"]["lm_head"] = params["lm_head"]
+        out["embed"] = params["embed"]
+    return out
+
+
+def pp_merge_params(cfg: ArchConfig, pp_params: Dict, bounds) -> Dict:
+    """Inverse of :func:`pp_partition_params` (checkpoint/export)."""
+    params = {"blocks": unstack_stage_params(pp_params["stage"], bounds),
+              "final_norm": pp_params["last"]["final_norm"]}
+    if cfg.tie_embeddings:
+        params["embed"] = pp_params["last"]["embed"]
+    else:
+        params["lm_head"] = pp_params["last"]["lm_head"]
+        params["embed"] = pp_params["embed"]
+    return params
+
+
+def make_stage_fn(cfg: ArchConfig, ctx: ModelCtx = ModelCtx(),
+                  tp_axis: Optional[str] = None):
+    """stage_fn(stage_slice, x) for the pipeline schedules: a masked scan
+    over the stage's (padded) layers.  x: (mb, S, d) residual stream.
+
+    With ``tp_axis`` set this is the manual Megatron-TP body, for use
+    inside a shard_map whose mesh carries that axis alongside the stage
+    axis (the trainer's full DP x TP x stage step): per-device block
+    params hold head / d_ff column slices (see ``pp_stage_specs``); each
+    residual branch enters through the Megatron ``f`` collective
+    (identity forward / psum backward) and exits through ``g`` (psum
+    forward / identity backward) — the conjugate pair is load-bearing: a
+    bare ``lax.psum`` transposes to another psum, so cotangents crossing
+    k branch boundaries would be scaled tp^k.  Gradients of TP-sliced
+    weights come out exact and local; gradients of the *replicated*
+    leaves inside a branch (the norms) are per-rank partials the trainer
+    psums over ``tp_axis`` at sync time.  Local head counts are inferred
+    from the sliced param shapes, so one builder serves any tp degree.
+    """
+    if tp_axis is not None:
+        f_in, g_out = _tp_f_g(tp_axis)
+    else:
+        f_in = g_out = lambda x: x
+
+    def stage_fn(p, x):
+        qd = p["blocks"]["attn"]["wq"].shape[-1]
+        kvd = p["blocks"]["attn"]["wk"].shape[-1]
+        cfg_l = dataclasses.replace(cfg, num_heads=qd // cfg.head_dim,
+                                    num_kv_heads=kvd // cfg.head_dim)
+        B, S_seq, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S_seq)[None], (B, S_seq))
+
+        def body(h, inp):
+            blk, m = inp
+            m = jax.lax.stop_gradient(m)        # the pad mask is not a param
+            a_out, _ = attn_apply(cfg_l, blk["attn"], f_in(h), positions,
+                                  ctx)
+            h = h + m * g_out(a_out)
+            # dense FFN spelled out (pp_partition_params rejects MoE):
+            # norm -> mlp -> residual constrain, = ffn_apply's dense path
+            # (the constrain sees the full, post-collective branch output)
+            hn = layers.apply_norm(cfg_l, blk["ffn"]["norm"], f_in(h))
+            f_out = layers.apply_mlp(cfg_l, blk["ffn"]["mlp"], hn)
+            h = h + m * ctx.constrain(g_out(f_out), "residual")
+            return h, None
+
+        body = _maybe_remat(body, ctx)
+        h, _ = jax.lax.scan(body, x, (p["blocks"], p["mask"]))
+        return h
+
+    return stage_fn
+
+
+def make_stage_fn_tp(cfg: ArchConfig, ctx: ModelCtx = ModelCtx(),
+                     tp_axis: str = "model"):
+    """The Megatron-TP configuration of :func:`make_stage_fn`."""
+    return make_stage_fn(cfg, ctx, tp_axis=tp_axis)
+
+
+def _tp_f_g(axis: str):
+    """Megatron's conjugate TP collectives for shard_map bodies.
+
+    ``f``: identity forward, psum backward — wraps a replicated activation
+    entering a tensor-sliced branch, so the branch's input cotangent is
+    reduced exactly once.  ``g``: psum forward, identity backward — merges
+    the branch's partial outputs without re-reducing the (already
+    replicated) cotangent on the way back.
+    """
+
+    @jax.custom_vjp
+    def f(x):
+        return x
+
+    f.defvjp(lambda x: (x, None),
+             lambda _, ct: (jax.lax.psum(ct, axis),))
+
+    @jax.custom_vjp
+    def g(x):
+        return jax.lax.psum(x, axis)
+
+    g.defvjp(lambda x: (jax.lax.psum(x, axis), None),
+             lambda _, ct: (ct,))
+    return f, g
+
+
+def make_last_fn(cfg: ArchConfig, ctx: ModelCtx = ModelCtx()):
+    """last_fn(last_params, y, tgt, mask) -> masked NLL *sum* over one
+    micro-batch (the pipeline divides by the global mask weight)."""
+
+    def last_fn(lp, y, tgt, mask):
+        h = layers.apply_norm(cfg, lp["final_norm"], y)
+        logits = ctx.constrain(layers.lm_logits(cfg, lp, h), "logits")
+        nll = layers._nll(logits, tgt)
+        return jnp.sum(nll * mask)
+
+    return last_fn
+
+
+# ---------------------------------------------------------------------------
+# mrope decode positions (qwen2-vl serving)
+# ---------------------------------------------------------------------------
+
+def mrope_prompt_positions(cfg: ArchConfig, seq_len: int,
+                           grid: Optional[Tuple[int, int]] = None):
+    """(1, seq_len, 3) multimodal-RoPE positions for a prompt laid out as
+    [grid_h x grid_w image patches][text...].
+
+    Patch token p sits at (t=0, h=p//gw, w=p%gw); the first text token
+    starts at ``max(gh, gw)`` — one past the largest patch index — and text
+    advances all three components together (the qwen2-vl rule).  ``grid``
+    None means a pure-text prompt (positions = arange on every component).
+    Pad positions past the true prompt length are harmless: causal
+    attention never lets a live query see them.
+
+    ``seq_len`` here is the (possibly padded) buffer length, so the check
+    below only catches grids larger than the whole buffer; the caller
+    must guard ``gh*gw < true_len`` against the REAL prompt length (the
+    serving engine rejects such requests at admission, and
+    :func:`mrope_next_position` raises) — patches spilling into pad
+    positions would silently mis-position every generated token.
+    """
+    idx = jnp.arange(seq_len)
+    if grid is None:
+        pos = jnp.stack([idx, idx, idx], axis=-1)
+        return pos[None].astype(jnp.int32)
+    gh, gw = grid
+    n_patch = gh * gw
+    if n_patch > seq_len:
+        raise ValueError(f"patch grid {grid} exceeds prompt length {seq_len}")
+    base = max(gh, gw)
+    text = base + idx - n_patch
+    t = jnp.where(idx < n_patch, 0, text)
+    h = jnp.where(idx < n_patch, idx // max(gw, 1), text)
+    w = jnp.where(idx < n_patch, idx % max(gw, 1), text)
+    return jnp.stack([t, h, w], axis=-1)[None].astype(jnp.int32)
+
+
+def mrope_next_position(true_len: int,
+                        grid: Optional[Tuple[int, int]] = None) -> int:
+    """Scalar position (shared by all three components) of the NEXT token
+    after a ``true_len``-token prompt with the given patch layout — the
+    value the serving engine advances per generated token."""
+    if grid is None:
+        return int(true_len)
+    gh, gw = grid
+    if gh * gw >= true_len:
+        raise ValueError(
+            f"patch grid {grid} needs {gh * gw} tokens but the prompt has "
+            f"only {true_len}; a prompt must carry at least one text token "
+            f"after its patches")
+    return int(max(gh, gw) + true_len - gh * gw)
+
+
+# ---------------------------------------------------------------------------
 # Public API: forward / loss / cache / decode
 # ---------------------------------------------------------------------------
 
@@ -780,8 +1032,16 @@ def _scatter_kv(cache: Dict, name: str, rows, slot):
         cache[name], rows.astype(cache[name].dtype), (0, slot, 0, 0, 0))
 
 
-def _uniform_prefill_slot(cfg, params, cache, tokens, true_len, slot, ctx):
-    logits, _, (k, v) = forward(cfg, params, {"tokens": tokens}, ctx,
+def _uniform_prefill_slot(cfg, params, cache, tokens, true_len, slot, ctx,
+                          grid=None):
+    batch = {"tokens": tokens}
+    if cfg.pos_type == "mrope":
+        # positions from the request's text+patch layout (qwen2-vl); the
+        # patch ids embed through the token table — position handling is
+        # what decode correctness needs (see mrope_prompt_positions)
+        batch["positions"] = mrope_prompt_positions(cfg, tokens.shape[1],
+                                                    grid)
+    logits, _, (k, v) = forward(cfg, params, batch, ctx,
                                 collect_kv=True, true_len=true_len)
     cache = dict(cache)
     cache["k"] = _scatter_kv(cache, "k", k, slot)
@@ -896,7 +1156,7 @@ def _whisper_prefill_slot(cfg, params, cache, tokens, true_len, slot, ctx,
 
 def prefill_into_slot(cfg: ArchConfig, params: Dict, cache: Dict, tokens,
                       true_len, slot, ctx: ModelCtx = ModelCtx(),
-                      frames=None):
+                      frames=None, grid=None):
     """Scatter one request's prompt state into slot ``slot`` of a decode
     state built by :func:`init_slots`; returns (last-position logits (V,),
     new state).  This is the family-polymorphic half of the serving
@@ -924,7 +1184,7 @@ def prefill_into_slot(cfg: ArchConfig, params: Dict, cache: Dict, tokens,
     fam = family(cfg)
     if fam == "uniform":
         return _uniform_prefill_slot(cfg, params, cache, tokens, true_len,
-                                     slot, ctx)
+                                     slot, ctx, grid=grid)
     if fam == "gemma":
         return _gemma_prefill_slot(cfg, params, cache, tokens, true_len,
                                    slot, ctx)

@@ -15,6 +15,7 @@ Two step builders:
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from functools import partial
 from typing import Any, Callable, Dict, Iterator, Optional, Tuple
@@ -27,9 +28,11 @@ from jax.experimental.shard_map import shard_map
 from repro.checkpoint import manager as ckpt
 from repro.config import ArchConfig, ParallelConfig, TrainConfig
 from repro.core import compression, hierarchical
+from repro.core import pipeline as pipe_lib
+from repro.core import sharding as sharding_lib
 from repro.core.hybrid import Plan
 from repro.embeddings import update as embed_update
-from repro.models import transformer as tf
+from repro.models import layers, transformer as tf
 from repro.models.transformer import ModelCtx
 from repro.optimizer import adamw, schedule
 
@@ -151,6 +154,13 @@ class EmbedSyncConfig:
     compress: Optional[str] = None  # None | "topk"
     k: int = 8
     use_kernel: bool = True
+    # ZeRO over the vocab dim: the named tables' AdamW moments + master
+    # rows live only on the owning dp shard (composes with the row plan —
+    # per-device optimizer bytes drop 1/P).  Each rank updates its row
+    # slice of the synced gradient and the fresh rows are all-gathered
+    # back into the replicated table.  Requires rows % dp_world == 0 and
+    # ``params_shape`` at step-build time (the opt specs become per-leaf).
+    zero_opt: bool = False
 
     @property
     def exclude(self) -> Tuple[str, ...]:
@@ -173,7 +183,8 @@ def residual_size(params, scfg: DPSyncConfig,
 
 def make_dp_train_step(loss_fn: Callable, mesh: Mesh, tcfg: TrainConfig,
                        scfg: DPSyncConfig = DPSyncConfig(),
-                       embed_sync: Optional[EmbedSyncConfig] = None):
+                       embed_sync: Optional[EmbedSyncConfig] = None,
+                       params_shape=None):
     """step(params, opt, residual, batch) -> (params, opt, residual, loss).
 
     params/opt replicated over dp axes; batch sharded on dim 0; residual is
@@ -183,9 +194,20 @@ def make_dp_train_step(loss_fn: Callable, mesh: Mesh, tcfg: TrainConfig,
     compressing (mode onebit/topk), size the residual with
     ``residual_size(params, scfg, exclude=embed_sync.exclude)`` — the
     embedding tables never enter the flattened compressed payload.
+
+    ``embed_sync.zero_opt`` row-shards the tables' AdamW state over the dp
+    axes (ZeRO over the vocab dim): the opt in/out specs split dim 0, each
+    rank updates only its row slice of the synced gradient, and the
+    updated rows all-gather back into the replicated table — trajectory-
+    identical to the replicated optimizer (AdamW is elementwise), at 1/P
+    the optimizer bytes per device.  Needs ``params_shape`` (an
+    ``eval_shape`` of params) to emit the per-leaf opt specs.
     """
     axes = (scfg.intra_axis,) + ((scfg.inter_axis,) if scfg.inter_axis
                                  else ())
+    zero_opt = embed_sync is not None and embed_sync.zero_opt
+    if zero_opt and params_shape is None:
+        raise ValueError("embed_sync.zero_opt needs params_shape")
     compressed = scfg.mode in ("onebit", "topk")
     if compressed:
         csync = compression.make_compressed_sync(
@@ -211,6 +233,23 @@ def make_dp_train_step(loss_fn: Callable, mesh: Mesh, tcfg: TrainConfig,
                 if k not in embed_sync.id_fns}
         return emb, rest
 
+    from repro import compat
+    world = math.prod(mesh.shape[a] for a in axes)
+    tables = tuple(embed_sync.id_fns) if embed_sync else ()
+    if zero_opt:
+        for key in tables:
+            rows = jax.tree.leaves(params_shape[key])[0].shape[0]
+            if rows % world:
+                raise ValueError(
+                    f"zero_opt table {key!r}: {rows} rows do not divide "
+                    f"over {world} dp ranks")
+
+    def _flat_rank():
+        r = jnp.zeros((), jnp.int32)
+        for ax in axes:
+            r = r * compat.axis_size(ax) + jax.lax.axis_index(ax)
+        return r
+
     def inner(params, opt, residual, batch):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
         loss = jax.lax.pmean(loss, axes)
@@ -229,16 +268,303 @@ def make_dp_train_step(loss_fn: Callable, mesh: Mesh, tcfg: TrainConfig,
             grads = {**grads, **emb_grads}
         lr = schedule.warmup_cosine(opt["step"], tcfg.learning_rate,
                                     tcfg.warmup_steps, tcfg.steps)
-        new_params, new_opt = adamw.adamw_apply(params, grads, opt, lr, tcfg)
+        if not zero_opt:
+            new_params, new_opt = adamw.adamw_apply(params, grads, opt, lr,
+                                                    tcfg)
+            return new_params, new_opt, new_res, loss
+        # ZeRO over the vocab dim: this rank updates only its row slice of
+        # each table; everything else is replicated as before
+        r = _flat_rank()
+        for key in tables:
+            g = grads[key]
+            rows = g.shape[0] // world
+            grads = {**grads,
+                     key: jax.lax.dynamic_slice_in_dim(g, r * rows, rows, 0)}
+        tcfg_eff = tcfg
+        if tcfg.grad_clip > 0:
+            # global norm with shard-aware accounting (table rows are
+            # disjoint per rank; the rest is replicated) so every rank
+            # clips by the same scale
+            sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                     for k, g in grads.items() if k not in tables)
+            sq = sq + jax.lax.psum(
+                sum(jnp.sum(jnp.square(grads[k].astype(jnp.float32)))
+                    for k in tables), axes)
+            scale = jnp.minimum(1.0, tcfg.grad_clip
+                                / jnp.maximum(jnp.sqrt(sq), 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+            tcfg_eff = dataclasses.replace(tcfg, grad_clip=0.0)
+        new_params, new_opt = adamw.adamw_apply(params, grads, opt, lr,
+                                                tcfg_eff)
+        # fresh rows all-gather back into the replicated tables (reversed
+        # axes order => first listed axis ends up major, matching r)
+        for key in tables:
+            full = new_params[key]
+            for ax in reversed(axes):
+                full = jax.lax.all_gather(full, ax, axis=0, tiled=True)
+            new_params = {**new_params, key: full}
         return new_params, new_opt, new_res, loss
 
     dp_spec = P(axes if len(axes) > 1 else axes[0])
+    if zero_opt:
+        ax_spec = axes if len(axes) > 1 else axes[0]
+
+        def opt_rule(path, leaf):
+            top = str(getattr(path[0], "key", ""))
+            if top in tables:
+                return P(ax_spec, *([None] * (len(leaf.shape) - 1)))
+            return P()
+
+        one = jax.tree_util.tree_map_with_path(opt_rule, params_shape)
+        opt_specs = {"m": one, "v": one, "master": one, "step": P()}
+    else:
+        opt_specs = P()
     inner_sm = shard_map(
         inner, mesh=mesh,
-        in_specs=(P(), P(), dp_spec, dp_spec),
-        out_specs=(P(), P(), dp_spec, P()),
+        in_specs=(P(), opt_specs, dp_spec, dp_spec),
+        out_specs=(P(), opt_specs, dp_spec, P()),
         check_rep=False)
     return jax.jit(inner_sm, donate_argnums=(0, 1, 2))
+
+
+# ---------------------------------------------------------------------------
+# Pipelined DP x TP x stage train step (the unified training-parallelism
+# path: planner stage bounds -> 1F1B/GPipe schedule -> manual Megatron TP ->
+# composed DP gradient sync)
+# ---------------------------------------------------------------------------
+
+
+def pp_trainable(pp_params, tied: bool):
+    """The optimizer's view of the pipeline param tree (drops the pad
+    mask, which is layout metadata, not a weight)."""
+    t = {"stage": {"blocks": pp_params["stage"]["blocks"]},
+         "last": pp_params["last"]}
+    if not tied:
+        t["embed"] = pp_params["embed"]
+    return t
+
+
+def pp_residual_size(cfg: ArchConfig, pp_params_shape, mesh,
+                     scfg: DPSyncConfig,
+                     embed_sync: Optional[EmbedSyncConfig] = None) -> int:
+    """Flat padded size of one device's compression residual under the
+    pipelined step: stage blocks count their LOCAL shard (1/S stages,
+    1/tp of each TP-sliced dim), replicated extras count in full, and
+    sparse-synced embedding tables are excluded (as in
+    :func:`residual_size`)."""
+    S = mesh.shape["stage"]
+    tp = mesh.shape.get("model", 1)
+    specs = sharding_lib.pp_stage_specs(
+        cfg, pp_params_shape["stage"], mesh)["blocks"]
+    is_p = lambda x: isinstance(x, jax.sharding.PartitionSpec)  # noqa: E731
+    spec_leaves = jax.tree.leaves(specs, is_leaf=is_p)
+    blk_leaves = jax.tree.leaves(pp_params_shape["stage"]["blocks"])
+    n = 0
+    for leaf, sp in zip(blk_leaves, spec_leaves):
+        n += leaf.size // S // (tp if sharding_lib.spec_has_axis(sp, "model")
+                                else 1)
+    exclude = tuple(embed_sync.id_fns) if embed_sync else ()
+    for key in ("last", "embed"):
+        if key in pp_params_shape and key not in exclude:
+            n += sum(l.size for l in jax.tree.leaves(pp_params_shape[key]))
+    mult = 8 * scfg.block if scfg.mode == "onebit" else scfg.topk_block
+    return n + ((-n) % mult)
+
+
+def make_pp_train_step(cfg: ArchConfig, mesh: Mesh, tcfg: TrainConfig,
+                       bounds, pp_params_shape, n_micro: int = 4,
+                       pp_schedule: str = "1f1b",
+                       scfg: DPSyncConfig = DPSyncConfig(),
+                       embed_sync: Optional[EmbedSyncConfig] = None,
+                       ctx: Optional[ModelCtx] = None):
+    """The full DP x TP x stage pipelined train step, one shard_map.
+
+    step(pp_params, opt, residual, batch) -> (pp_params, opt, residual,
+    loss); ``pp_params`` from :func:`transformer.pp_partition_params` at
+    the planner's ``bounds``, ``opt`` = ``adamw.init_opt_state`` over the
+    trainable view (everything but the pad mask), ``residual`` shaped
+    (dp, tp, S, :func:`pp_residual_size`).
+
+    Inside the body: the token embedding runs replicated (its gradient
+    arrives through the pipeline's input cotangent), micro-batches pad a
+    remainder batch with masked rows, the 1F1B/GPipe executor
+    (:func:`repro.core.pipeline.make_pipeline_vag_body`) drives the stage
+    axis with Megatron-TP stage bodies over ``model``, TP-partial gradients
+    (the replicated norm leaves) are psum'd over ``model``, and the
+    existing DP sync stack — flat / hierarchical / onebit / topk plus the
+    rows-touched :class:`EmbedSyncConfig` path — runs across ``data``
+    exactly as in :func:`make_dp_train_step`.
+    """
+    S = mesh.shape["stage"]
+    tp = mesh.shape.get("model", 1)
+    if len(bounds) - 1 != S:
+        raise ValueError(f"bounds {bounds} vs stage axis {S}")
+    if tp > 1 and cfg.num_heads % tp:
+        raise ValueError(f"num_heads {cfg.num_heads} must divide tp {tp}")
+    if tp > 1 and cfg.num_kv_heads % tp and \
+            (cfg.num_heads // tp) % cfg.num_kv_heads:
+        # kv falls back to replication when it doesn't divide; the GQA
+        # grouping then needs local q heads divisible by the FULL kv count
+        raise ValueError(
+            f"tp {tp} leaves {cfg.num_heads // tp} local q heads over "
+            f"{cfg.num_kv_heads} replicated kv heads — GQA grouping is "
+            f"unexpressible; pick tp with num_kv_heads % tp == 0 or "
+            f"(num_heads/tp) % num_kv_heads == 0")
+    tied = cfg.tie_embeddings
+    if embed_sync is not None and tied:
+        raise NotImplementedError(
+            "sparse embed sync under pp needs an untied embedding (the "
+            "tied table also carries the dense lm-head gradient)")
+    ctx = ctx if ctx is not None else ModelCtx(attn_chunk=8)
+    stage_fn = tf.make_stage_fn_tp(cfg, ctx)
+    last_fn = tf.make_last_fn(cfg, ctx)
+    vag_body = pipe_lib.make_pipeline_vag_body(stage_fn, last_fn, S,
+                                               n_micro, pp_schedule)
+
+    stage_specs = sharding_lib.pp_stage_specs(cfg, pp_params_shape["stage"],
+                                              mesh)
+    is_p = lambda x: isinstance(x, P)  # noqa: E731
+    has_model = jax.tree.map(
+        lambda sp: sharding_lib.spec_has_axis(sp, "model"),
+        stage_specs["blocks"], is_leaf=is_p)
+
+    compressed = scfg.mode in ("onebit", "topk")
+    if compressed:
+        csync = compression.make_compressed_sync(
+            scfg.mode, axis=scfg.intra_axis,
+            block=scfg.block if scfg.mode == "onebit" else scfg.topk_block,
+            k=scfg.k, use_kernel=scfg.use_kernel)
+    else:
+        gsync = hierarchical.make_sync_fn(scfg.mode, scfg.intra_axis,
+                                          scfg.inter_axis)
+    row_compress = None
+    if embed_sync is not None and embed_sync.compress:
+        row_compress = embed_update.make_row_compressor(
+            embed_sync.compress, embed_sync.k, embed_sync.use_kernel)
+    tcfg_noclip = dataclasses.replace(tcfg, grad_clip=0.0)
+
+    def clip_scale(g):
+        """Global-norm clip scale with shard-aware accounting: stage
+        blocks psum disjoint shards over (model, stage) — replicated
+        leaves (post-psum over model) weighted 1/tp first — while the
+        everywhere-replicated extras count once locally."""
+        sq = jnp.zeros((), jnp.float32)
+        for leaf, hm in zip(jax.tree.leaves(g["stage"]["blocks"]),
+                            jax.tree.leaves(has_model)):
+            sq = sq + jnp.sum(jnp.square(leaf)) / (1.0 if hm else tp)
+        sq = jax.lax.psum(sq, ("model", "stage"))
+        for key in ("last", "embed"):
+            if key in g:
+                sq = sq + sum(jnp.sum(jnp.square(l))
+                              for l in jax.tree.leaves(g[key]))
+        norm = jnp.sqrt(sq)
+        if tcfg.grad_clip <= 0:
+            return jnp.ones((), jnp.float32), norm
+        return jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(norm, 1e-9)), \
+            norm
+
+    def inner(params, opt, residual, batch):
+        tokens, targets = batch["tokens"], batch["targets"]
+        mask = batch.get("mask")
+        if mask is None:
+            mask = jnp.ones(tokens.shape, jnp.float32)
+        emb_tab = params["last"]["embed"] if tied else params["embed"]
+        h, emb_vjp = jax.vjp(
+            lambda e: layers.embed_tokens(e, tokens), emb_tab)
+        x_mic = pipe_lib.microbatch(h, n_micro, pad=True)
+        t_mic = pipe_lib.microbatch(targets, n_micro, pad=True)
+        m_mic = pipe_lib.microbatch(mask, n_micro, pad=True)
+        loss, g_stage, g_last, g_x = vag_body(
+            params["stage"], params["last"], x_mic, t_mic, m_mic)
+        loss = jax.lax.pmean(loss, scfg.intra_axis)
+        # TP: replicated-leaf grads are per-rank partials -> reduce once
+        g_blocks = jax.tree.map(
+            lambda gl, hm: gl if hm else jax.lax.psum(gl, "model"),
+            g_stage["blocks"], has_model)
+        # embed grad via the pipeline's input cotangent (pad rows sliced)
+        B_loc = tokens.shape[0]
+        g_h = g_x.reshape((-1,) + g_x.shape[2:])[:B_loc].astype(h.dtype)
+        (g_emb,) = emb_vjp(g_h)
+        grads = {"stage": {"blocks": g_blocks}, "last": dict(g_last)}
+        if tied:
+            grads["last"]["embed"] = grads["last"]["embed"] \
+                + g_emb.astype(jnp.float32)
+        else:
+            grads["embed"] = g_emb.astype(jnp.float32)
+        # DP sync across `data`: sparse rows-touched tables first, then
+        # the dense/compressed path over the rest
+        emb_grads = {}
+        if embed_sync is not None:
+            for key, id_fn in embed_sync.id_fns.items():
+                emb_grads[key] = embed_update.sparse_row_sync(
+                    grads[key], id_fn(batch), (scfg.intra_axis,),
+                    cap=embed_sync.cap, compress=row_compress)
+            grads = {k: v for k, v in grads.items() if k not in emb_grads}
+        if compressed:
+            grads, new_res = csync(grads, residual[0, 0, 0])
+            if scfg.inter_axis:
+                grads = jax.tree.map(
+                    lambda g: jax.lax.pmean(g, scfg.inter_axis), grads)
+            new_res = new_res[None, None, None]
+        else:
+            grads = gsync(grads)
+            new_res = residual
+        grads = {**grads, **emb_grads}
+        scale, _ = clip_scale(grads)
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        lr = schedule.warmup_cosine(opt["step"], tcfg.learning_rate,
+                                    tcfg.warmup_steps, tcfg.steps)
+        trainable = pp_trainable(params, tied)
+        new_tr, new_opt = adamw.adamw_apply(trainable, grads, opt, lr,
+                                            tcfg_noclip)
+        new_params = {"stage": {"blocks": new_tr["stage"]["blocks"],
+                                "mask": params["stage"]["mask"]},
+                      "last": new_tr["last"]}
+        if not tied:
+            new_params["embed"] = new_tr["embed"]
+        return new_params, new_opt, new_res, loss
+
+    param_specs = {"stage": stage_specs,
+                   "last": jax.tree.map(lambda _: P(),
+                                        pp_params_shape["last"])}
+    if not tied:
+        param_specs["embed"] = P()
+    tr_specs = {"stage": {"blocks": stage_specs["blocks"]},
+                "last": param_specs["last"]}
+    if not tied:
+        tr_specs["embed"] = P()
+    opt_specs = {"m": tr_specs, "v": tr_specs, "master": tr_specs,
+                 "step": P()}
+    res_spec = P(scfg.intra_axis, "model", "stage", None)
+    inner_sm = shard_map(
+        inner, mesh=mesh,
+        in_specs=(param_specs, opt_specs, res_spec, P(scfg.intra_axis)),
+        out_specs=(param_specs, opt_specs, res_spec, P()),
+        check_rep=False)
+    return jax.jit(inner_sm, donate_argnums=(0, 1, 2))
+
+
+def make_update_rule(tcfg: TrainConfig):
+    """The trainer's shared optimizer plumbing (AdamW + warmup-cosine LR),
+    packaged so other training simulators — :mod:`repro.core.async_dp`'s
+    sync/async parameter-server models — step parameters through exactly
+    the update rule the real train steps use.
+
+    Returns (init, apply): ``init(params) -> opt``;
+    ``apply(params, opt, grads, lr_scale=1.0) -> (params, opt)`` where
+    ``lr_scale`` is the per-update multiplier hooks like delay
+    compensation (Eq. 12's 1/(1+tau)) plug into.
+    """
+
+    def init(params):
+        return adamw.init_opt_state(params)
+
+    def apply(params, opt, grads, lr_scale=1.0):
+        lr = schedule.warmup_cosine(opt["step"], tcfg.learning_rate,
+                                    tcfg.warmup_steps, tcfg.steps)
+        return adamw.adamw_apply(params, grads, opt, lr * lr_scale, tcfg)
+
+    return init, apply
 
 
 # ---------------------------------------------------------------------------

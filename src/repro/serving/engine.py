@@ -194,9 +194,15 @@ class SlotBackend:
                 f"{type(self).__name__} supports families {self.families}; "
                 f"{cfg.name} is {fam}")
         self.cfg, self.params, self.family = cfg, params, fam
+        # mrope archs (qwen2-vl) need explicit decode positions: they
+        # advance per generated token from the request's text+patch layout
+        # rather than equalling the KV frontier
+        self.needs_positions = cfg.pos_type == "mrope"
         self.ctx = ctx if ctx is not None else tf.ModelCtx(attn_chunk=8)
         self._decode = jax.jit(self._decode_impl)
-        self._prefill = jax.jit(self._prefill_impl)
+        # the patch grid is layout (shapes the traced position tensor):
+        # static arg, one compile per distinct grid — like prompt buckets
+        self._prefill = jax.jit(self._prefill_impl, static_argnames="grid")
 
     def kv_keys(self) -> tuple:
         return KV_KEYS[self.family]
@@ -209,10 +215,12 @@ class SlotBackend:
         return self.init_slots(n_slots, max_len)
 
     def prefill(self, cache: Dict, tokens: np.ndarray, true_len: int,
-                slot: int, frames=None):
+                slot: int, frames=None, grid=None):
         """tokens (1, S_pad) -> (last-position logits (V,), cache).
         ``frames`` (F, d) or (1, F, d): encoder input for enc-dec families
-        (zeros when omitted — every slot then shares one silent context)."""
+        (zeros when omitted — every slot then shares one silent context).
+        ``grid`` (gh, gw): vlm prompts' leading patch-token grid (mrope
+        position layout)."""
         if self.cfg.encoder_layers:
             if frames is None:
                 frames = np.zeros(
@@ -225,11 +233,15 @@ class SlotBackend:
             frames = None
         return self._prefill(self.params, cache,
                              jnp.asarray(tokens, jnp.int32),
-                             jnp.int32(true_len), jnp.int32(slot), frames)
+                             jnp.int32(true_len), jnp.int32(slot), frames,
+                             grid=grid)
 
-    def decode(self, cache: Dict, tokens):
-        """tokens (n_slots, 1) -> (logits (n_slots, 1, V), cache)."""
-        return self._decode(self.params, cache, tokens)
+    def decode(self, cache: Dict, tokens, positions=None):
+        """tokens (n_slots, 1) -> (logits (n_slots, 1, V), cache).
+        ``positions`` (n_slots, 1, 3): per-slot mrope positions (vlm)."""
+        if positions is None:
+            return self._decode(self.params, cache, tokens)
+        return self._decode(self.params, cache, tokens, positions)
 
 
 @register_family("uniform", "gemma", "jamba", "rwkv6", "whisper")
@@ -240,13 +252,15 @@ class NativeBackend(SlotBackend):
     def init_slots(self, n_slots: int, max_len: int) -> Dict:
         return tf.init_slots(self.cfg, n_slots, max_len)
 
-    def _decode_impl(self, params, cache, tokens):
-        return tf.decode_step(self.cfg, params, cache, tokens, self.ctx)
+    def _decode_impl(self, params, cache, tokens, positions=None):
+        return tf.decode_step(self.cfg, params, cache, tokens, self.ctx,
+                              positions=positions)
 
     def _prefill_impl(self, params, cache, tokens, true_len, slot,
-                      frames=None):
+                      frames=None, grid=None):
         return tf.prefill_into_slot(self.cfg, params, cache, tokens,
-                                    true_len, slot, self.ctx, frames=frames)
+                                    true_len, slot, self.ctx, frames=frames,
+                                    grid=grid)
 
 
 class Int8KVBackend(SlotBackend):
@@ -260,12 +274,16 @@ class Int8KVBackend(SlotBackend):
     def init_slots(self, n_slots: int, max_len: int) -> Dict:
         return kvquant.init_model_quant_cache(self.cfg, n_slots, max_len)
 
-    def _decode_impl(self, params, cache, tokens):
+    def _decode_impl(self, params, cache, tokens, positions=None):
+        if positions is not None:
+            raise NotImplementedError(
+                "fused int8 decode has no mrope positions path; "
+                "make_backend routes mrope archs through Int8KVSlots")
         return kvquant.quant_decode_step(self.cfg, params, cache, tokens,
                                          self.ctx)
 
     def _prefill_impl(self, params, cache, tokens, true_len, slot,
-                      frames=None):
+                      frames=None, grid=None):
         logits, (k_q, k_s, v_q, v_s) = kvquant.quant_prefill_kv(
             self.cfg, params, {"tokens": tokens}, self.ctx)
         cache = dict(cache)
@@ -314,15 +332,17 @@ class Int8KVSlots(SlotBackend):
     def init_slots(self, n_slots: int, max_len: int) -> Dict:
         return self._quant(self.inner.init_slots(n_slots, max_len))
 
-    def _decode_impl(self, params, qcache, tokens):
+    def _decode_impl(self, params, qcache, tokens, positions=None):
         logits, cache = self.inner._decode_impl(params,
-                                                self._dequant(qcache), tokens)
+                                                self._dequant(qcache),
+                                                tokens, positions)
         return logits, self._quant(cache)
 
     def _prefill_impl(self, params, qcache, tokens, true_len, slot,
-                      frames=None):
+                      frames=None, grid=None):
         logits, cache = self.inner._prefill_impl(
-            params, self._dequant(qcache), tokens, true_len, slot, frames)
+            params, self._dequant(qcache), tokens, true_len, slot, frames,
+            grid=grid)
         return logits, self._quant(cache)
 
 
@@ -340,6 +360,11 @@ def make_backend(cfg, params, ctx: Optional[tf.ModelCtx] = None,
         return FAMILY_BACKENDS[fam](cfg, params, ctx)
     if kv == "int8":
         if fam == "uniform":
+            if cfg.pos_type == "mrope":
+                # the fused path derives positions from the KV frontier;
+                # mrope archs take the generic composition, whose inner
+                # native decode accepts explicit positions
+                return Int8KVSlots(FAMILY_BACKENDS[fam](cfg, params, ctx))
             return Int8KVBackend(cfg, params, ctx)
         if not KV_KEYS[fam]:
             raise ValueError(
@@ -369,6 +394,9 @@ class ServingEngine:
         self.slot_remaining = np.zeros(n, np.int64)
         self.slot_tokens = np.zeros((n, 1), np.int32)
         self.slot_key: List = [None] * n    # per-slot sampling RNG keys
+        # mrope: the position of each slot's NEXT input token, advanced
+        # per generated token from the request's prefill text+patch layout
+        self.slot_pos = np.zeros(n, np.int64)
         self.outputs: Dict[int, List[int]] = {}
         self.records: List[metrics_lib.RequestRecord] = []
         self.decode_steps = 0
@@ -403,6 +431,13 @@ class ServingEngine:
         if len(req.prompt) >= self.ecfg.max_len:
             rec.rejected = True
             return False
+        if req.grid is not None and \
+                req.grid[0] * req.grid[1] >= len(req.prompt):
+            # a patch grid must leave at least one text token: patches
+            # spilling into pad positions would silently corrupt the
+            # request's mrope layout (see mrope_prompt_positions)
+            rec.rejected = True
+            return False
         if len(self.queue) >= self.ecfg.queue_capacity:
             shed = (self.queue.shed_batch()
                     if req.slo.name == "interactive" else None)
@@ -431,6 +466,8 @@ class ServingEngine:
         kwargs = {}
         if req.frames is not None:       # enc-dec: cross-KV at admission
             kwargs["frames"] = np.asarray(req.frames, np.float32)
+        if getattr(self.backend, "needs_positions", False):
+            kwargs["grid"] = req.grid    # text+patch mrope layout
         logits_row, self.cache = self._timed(
             self.clock.fixed_prefill_s,
             lambda: self.backend.prefill(self.cache, padded,
@@ -451,6 +488,11 @@ class ServingEngine:
         self.slot_remaining[slot] = budget - 1
         self.slot_tokens[slot, 0] = first
         self.slot_key[slot] = np.asarray(key)    # host copy: stacked later
+        if getattr(self.backend, "needs_positions", False):
+            # the first generated token's mrope position, one past the
+            # prompt's layout (text continues all three components)
+            self.slot_pos[slot] = tf.mrope_next_position(len(prompt),
+                                                         req.grid)
 
     def _refill(self) -> None:
         free = [s for s in range(self.ecfg.n_slots)
@@ -463,11 +505,21 @@ class ServingEngine:
                 self._start(s, req, rec)        # may finish instantly (EOS)
 
     def _decode_once(self) -> None:
-        logits, self.cache = self._timed(
-            self.clock.fixed_decode_s,
-            lambda: self.backend.decode(self.cache,
-                                        jnp.asarray(self.slot_tokens)))
+        positions = None
+        if getattr(self.backend, "needs_positions", False):
+            # (n, 1, 3): text decode advances t/h/w together per token
+            positions = jnp.asarray(
+                np.broadcast_to(self.slot_pos[:, None, None],
+                                (self.ecfg.n_slots, 1, 3)), jnp.int32)
+        if positions is None:       # toy/test backends take (cache, tokens)
+            call = lambda: self.backend.decode(  # noqa: E731
+                self.cache, jnp.asarray(self.slot_tokens))
+        else:
+            call = lambda: self.backend.decode(  # noqa: E731
+                self.cache, jnp.asarray(self.slot_tokens), positions)
+        logits, self.cache = self._timed(self.clock.fixed_decode_s, call)
         self.decode_steps += 1
+        self.slot_pos += 1
         n = self.ecfg.n_slots
         any_sampled = any(r is not None and r.temperature > 0.0
                           for r in self.slot_req)

@@ -51,6 +51,11 @@ class Request:
     # (F, d_model) as nested tuples so Request stays hashable/comparable;
     # the engine computes the slot's cross-KV from these at admission.
     frames: Optional[Tuple[Tuple[float, ...], ...]] = None
+    # vlm prompts (qwen2-vl): the prompt's leading image-patch grid
+    # (grid_h, grid_w) — grid_h*grid_w patch tokens precede the text.
+    # Drives the request's multimodal-RoPE position layout at prefill and
+    # the per-token position advance at decode.
+    grid: Optional[Tuple[int, int]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +80,9 @@ class TrafficConfig:
     encoder_frames: int = 0             # >0: attach (F, frame_dim) frames
     frame_dim: int = 0                  # (enc-dec families, e.g. whisper)
     frame_scale: float = 0.02
+    image_grid: Tuple[int, int] = ()    # (gh, gw): vlm requests carry a
+                                        # gh x gw patch-token prompt prefix
+    image_fraction: float = 1.0         # share of requests with an image
     seed: int = 0
 
 
@@ -140,6 +148,11 @@ def generate(cfg: TrafficConfig) -> List[Request]:
             f = rng.normal(0.0, cfg.frame_scale,
                            (cfg.encoder_frames, cfg.frame_dim))
             frames = tuple(tuple(float(x) for x in row) for row in f)
+        grid = None
+        if cfg.image_grid and rng.random() < cfg.image_fraction:
+            gh, gw = cfg.image_grid
+            if gh * gw < int(lengths[i]):   # patches must leave text room
+                grid = (int(gh), int(gw))
         reqs.append(Request(
             rid=i,
             user_id=int(users[i]),
@@ -151,6 +164,7 @@ def generate(cfg: TrafficConfig) -> List[Request]:
             temperature=cfg.temperature,
             top_k=cfg.top_k,
             frames=frames,
+            grid=grid,
         ))
     return reqs
 

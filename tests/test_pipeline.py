@@ -1,0 +1,217 @@
+"""Single-process tests for the pipeline-parallel training path: schedule
+tables, bubble/stash cost model, stage slicing + live rebalance, microbatch
+remainder handling, mrope position layout, and the analytic DP x TP x PP
+step model.  Multi-device parity (1F1B vs GPipe vs serial; the full
+pipelined train step) runs in ``distributed_checks.py``."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import SHAPES, get_arch, reduced
+from repro.core import load_balance as lb, pipeline
+from repro.core.hybrid import modeled_parallel_step
+from repro.models import layers as L, transformer as tf
+
+
+# -- schedule tables ---------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 12), st.sampled_from(["gpipe",
+                                                               "1f1b"]))
+def test_schedule_tables_cover_and_validate(S, M, sched):
+    # the builder self-validates ring-buffer no-overwrite + dependency
+    # invariants; here we check coverage and the stash bound
+    fwd, bwd, depth = pipeline.schedule_tables(sched, S, M)
+    for tbl in (fwd, bwd):
+        for s in range(S):
+            micros = tbl[:, s][tbl[:, s] >= 0]
+            assert sorted(micros.tolist()) == list(range(M)), (sched, s)
+    assert depth == (min(S, M) if sched == "1f1b" else M)
+
+
+def test_1f1b_inflight_bounded_by_stage_depth():
+    S, M = 4, 12
+    fwd, bwd, depth = pipeline.schedule_tables("1f1b", S, M)
+    T = fwd.shape[0]
+    for s in range(S):
+        inflight = 0
+        peak = 0
+        for t in range(T):
+            if fwd[t, s] >= 0:
+                inflight += 1
+            if bwd[t, s] >= 0:
+                inflight -= 1
+            peak = max(peak, inflight)
+        assert peak <= S - s, (s, peak)
+
+
+def test_schedule_cost_1f1b_beats_gpipe():
+    for S in (2, 4, 8):
+        for M in (4, 8, 16):
+            g = pipeline.schedule_cost("gpipe", S, M)
+            f = pipeline.schedule_cost("1f1b", S, M)
+            assert f["bubble_frac"] < g["bubble_frac"], (S, M)
+            assert f["stash_micros"] <= S < g["stash_micros"] + S
+            assert f["stash_micros"] == min(S, M)
+            assert g["stash_micros"] == M
+
+
+def test_schedule_cost_unknown_raises():
+    with pytest.raises(ValueError):
+        pipeline.schedule_cost("zb-h1", 4, 8)
+
+
+# -- microbatching -----------------------------------------------------------
+
+def test_microbatch_divides_and_pads():
+    x = jnp.arange(12.0).reshape(6, 2)
+    y = pipeline.microbatch(x, 3)
+    assert y.shape == (3, 2, 2)
+    with pytest.raises(ValueError):
+        pipeline.microbatch(x, 4)
+    yp = pipeline.microbatch(x, 4, pad=True)
+    assert yp.shape == (4, 2, 2)
+    np.testing.assert_array_equal(np.asarray(yp[:3]), np.asarray(y))
+    assert float(jnp.abs(yp[3]).sum()) == 0.0     # zero pad rows
+
+
+# -- stage balancing / rebalancing ------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0.1, 10), min_size=4, max_size=20),
+       st.integers(2, 4))
+def test_rebalance_bounds_cover_and_monotone(times, n_stages):
+    L_ = len(times)
+    if L_ < n_stages:
+        return
+    uni = [round(i * L_ / n_stages) for i in range(n_stages + 1)]
+    # observe per-stage times under the uniform carve, rebalance
+    st_times = [sum(times[uni[s]:uni[s + 1]]) for s in range(n_stages)]
+    nb = lb.rebalance_stages(st_times, uni)
+    assert nb[0] == 0 and nb[-1] == L_
+    assert all(a < b for a, b in zip(nb, nb[1:]))   # non-empty stages
+    # the re-carve never worsens the inferred max-stage cost
+    costs = lb.layer_costs_from_stage_times(st_times, uni)
+    assert lb.stage_costs(costs, nb).max() <= \
+        lb.stage_costs(costs, list(uni)).max() + 1e-9
+
+
+def test_layer_costs_attribution_roundtrip():
+    bounds = [0, 2, 5]
+    costs = lb.layer_costs_from_stage_times([4.0, 9.0], bounds)
+    np.testing.assert_allclose(costs, [2, 2, 3, 3, 3])
+    np.testing.assert_allclose(lb.stage_costs(costs, bounds), [4.0, 9.0])
+
+
+# -- stage slicing on the real transformer (1 device) ------------------------
+
+def _tiny_cfg():
+    return dataclasses.replace(reduced(get_arch("olmo-1b")), num_layers=6,
+                               dtype="float32")
+
+
+def test_stage_slice_unstack_roundtrip_and_remap_preserves_outputs():
+    cfg = _tiny_cfg()
+    ctx = tf.ModelCtx(attn_chunk=16)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    bounds = [0, 2, 3, 6]                     # uneven -> padded stages
+    sp = tf.stage_slice_params(cfg, params["blocks"], bounds)
+    assert sp["blocks"]["attn"]["wq"].shape[:2] == (3, 3)
+    np.testing.assert_allclose(np.asarray(sp["mask"]),
+                               [[1, 1, 0], [1, 0, 0], [1, 1, 1]])
+    back = tf.unstack_stage_params(sp, bounds)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), params["blocks"], back)
+
+    stage_fn = tf.make_stage_fn(cfg, ctx)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    h = x
+    for s in range(3):
+        h = stage_fn(jax.tree.map(lambda a: a[s], sp), h)
+    # serial reference through the stock forward body
+    hr, _, _ = tf._uniform_forward(cfg, params, x,
+                                   jnp.broadcast_to(jnp.arange(8)[None],
+                                                    (2, 8)), ctx, False)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=1e-5)
+
+    # live remap to new bounds computes the same function
+    sp2 = tf.remap_stage_params(sp, bounds, [0, 1, 4, 6])
+    h2 = x
+    for s in range(3):
+        h2 = stage_fn(jax.tree.map(lambda a: a[s], sp2), h2)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h), atol=1e-5)
+
+
+def test_pp_partition_merge_roundtrip():
+    cfg = _tiny_cfg()
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    bounds = [0, 3, 6]
+    pp = tf.pp_partition_params(cfg, params, bounds)
+    assert ("embed" in pp) == (not cfg.tie_embeddings)
+    back = tf.pp_merge_params(cfg, pp, bounds)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), params, back)
+
+
+def test_pp_partition_rejects_non_uniform_families():
+    cfg = dataclasses.replace(reduced(get_arch("rwkv6-1.6b")),
+                              dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(NotImplementedError):
+        tf.pp_partition_params(cfg, params, [0, 1, 2])
+
+
+# -- mrope position layout ---------------------------------------------------
+
+def test_mrope_positions_text_only_equals_arange():
+    cfg = dataclasses.replace(reduced(get_arch("qwen2-vl-2b")),
+                              dtype="float32")
+    pos = tf.mrope_prompt_positions(cfg, 7, None)
+    assert pos.shape == (1, 7, 3)
+    want = np.broadcast_to(np.arange(7)[:, None], (7, 3))
+    np.testing.assert_array_equal(np.asarray(pos[0]), want)
+    assert tf.mrope_next_position(7, None) == 7
+
+
+def test_mrope_positions_patch_grid_layout():
+    cfg = dataclasses.replace(reduced(get_arch("qwen2-vl-2b")),
+                              dtype="float32")
+    pos = np.asarray(tf.mrope_prompt_positions(cfg, 10, (2, 3))[0])
+    # patches: t=0, h=row, w=col
+    np.testing.assert_array_equal(pos[:6, 0], 0)
+    np.testing.assert_array_equal(pos[:6, 1], [0, 0, 0, 1, 1, 1])
+    np.testing.assert_array_equal(pos[:6, 2], [0, 1, 2, 0, 1, 2])
+    # text resumes at max(gh, gw) with all components advancing together
+    np.testing.assert_array_equal(pos[6], [3, 3, 3])
+    np.testing.assert_array_equal(pos[9], [6, 6, 6])
+    # decode continues where the prompt layout left off
+    assert tf.mrope_next_position(10, (2, 3)) == 7
+    with pytest.raises(ValueError):
+        tf.mrope_prompt_positions(cfg, 4, (2, 3))
+
+
+# -- analytic DP x TP x PP model ---------------------------------------------
+
+def test_modeled_parallel_step_hybrid_beats_single_modes():
+    cfg = get_arch("internlm2-20b")
+    shape = SHAPES["train_4k"]
+    n = 32
+    hybrid = modeled_parallel_step(cfg, shape, dp=2, tp=4, pp=4,
+                                   n_micro=8, schedule="1f1b")
+    assert hybrid["fits"] and hybrid["modeled_throughput"] > 0
+    for kw in ({"dp": n}, {"tp": n}, {"pp": n}):
+        single = modeled_parallel_step(cfg, shape, n_micro=8,
+                                       schedule="1f1b", **kw)
+        assert hybrid["modeled_throughput"] >= \
+            single["modeled_throughput"], (kw, single)
+    # dp-only cannot even hold the optimizer state (the Table-2 baseline)
+    assert not modeled_parallel_step(cfg, shape, dp=n)["fits"]
+    # 1f1b's bubble advantage carries into the step model
+    g = modeled_parallel_step(cfg, shape, dp=2, tp=4, pp=4, n_micro=8,
+                              schedule="gpipe")
+    assert hybrid["bubble_frac"] < g["bubble_frac"]
+    assert hybrid["t_step_ms"] < g["t_step_ms"]

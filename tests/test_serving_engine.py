@@ -693,3 +693,81 @@ def test_slo_tiers_assigned_by_fraction():
         n_requests=300, interactive_fraction=0.75, seed=0))
     frac = sum(r.slo.name == "interactive" for r in reqs) / len(reqs)
     assert 0.6 < frac < 0.9
+
+
+# ---------------------------------------------------------------------------
+# mrope decode positions (qwen2-vl through the engine)
+# ---------------------------------------------------------------------------
+
+def _mrope_reference(cfg, params, prompt, grid, new_tokens):
+    """Teacher-forced oracle: re-run the full forward each step with the
+    exact text+patch mrope layout and take the last-position argmax."""
+    ctx = tf.ModelCtx(attn_chunk=8)
+    toks = list(prompt)
+    out = []
+    for _ in range(new_tokens):
+        b = {"tokens": jnp.asarray([toks], jnp.int32),
+             "positions": tf.mrope_prompt_positions(cfg, len(toks), grid)}
+        logits, _, _ = tf.forward(cfg, params, b, ctx)
+        out.append(int(jnp.argmax(logits[0, -1])))
+        toks.append(out[-1])
+    return out
+
+
+@pytest.mark.parametrize("grid,kv", [(None, "native"), ((2, 3), "native"),
+                                     ((2, 3), "int8")])
+def test_qwen2_vl_engine_matches_mrope_reference(grid, kv):
+    """Decode positions advance per generated token from the request's
+    prefill text+patch layout — engine output must equal the teacher-
+    forced full-forward reference (greedy), incl. under int8 KV (which
+    routes through the generic Int8KVSlots composition for mrope)."""
+    cfg = dataclasses.replace(reduced(get_arch("qwen2-vl-2b")),
+                              dtype="float32")
+    assert cfg.pos_type == "mrope"
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompt = tuple(int(x) for x in rng.integers(3, 200, 10))
+    backend = eng.make_backend(cfg, params, kv=kv)
+    assert backend.needs_positions
+    engine = eng.ServingEngine(backend, eng.EngineConfig(n_slots=2,
+                                                         max_len=64),
+                               clock=traffic.Clock(0.0, 0.0))
+    req = traffic.Request(rid=0, user_id=0, prompt=prompt,
+                          max_new_tokens=6, arrival=0.0, grid=grid)
+    outputs, _, _ = engine.run([req])
+    assert outputs[0] == _mrope_reference(cfg, params, prompt, grid, 6)
+
+
+def test_qwen2_vl_concurrent_grids_keep_per_slot_positions():
+    """Two concurrent requests with different patch grids decode with
+    their own position streams (slot state cannot leak)."""
+    cfg = dataclasses.replace(reduced(get_arch("qwen2-vl-2b")),
+                              dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    reqs = []
+    grids = [None, (2, 2)]
+    for i, grid in enumerate(grids):
+        prompt = tuple(int(x) for x in rng.integers(3, 200, 8))
+        reqs.append(traffic.Request(rid=i, user_id=i, prompt=prompt,
+                                    max_new_tokens=5, arrival=0.0,
+                                    grid=grid))
+    backend = eng.make_backend(cfg, params)
+    engine = eng.ServingEngine(backend, eng.EngineConfig(n_slots=2,
+                                                         max_len=64),
+                               clock=traffic.Clock(0.0, 0.0))
+    outputs, _, summary = engine.run(reqs)
+    assert summary["finished"] == 2
+    for req, grid in zip(reqs, grids):
+        assert outputs[req.rid] == _mrope_reference(
+            cfg, params, req.prompt, grid, 5), req.rid
+
+
+def test_traffic_attaches_image_grids():
+    reqs = traffic.generate(traffic.TrafficConfig(
+        n_requests=40, image_grid=(2, 3), image_fraction=0.5,
+        prompt_min=8, prompt_max=24, seed=0))
+    with_img = [r for r in reqs if r.grid is not None]
+    assert 0 < len(with_img) < len(reqs)
+    assert all(r.grid == (2, 3) for r in with_img)
+    assert all(len(r.prompt) > 6 for r in with_img)
