@@ -313,12 +313,43 @@ def serve(rows):
     import dataclasses
 
     import jax
+    import jax.numpy as jnp
+    import numpy as np
     from repro.config import get_arch, reduced
     from repro.models import transformer as tf
     from repro.serving import EngineConfig, ServingEngine, TrafficConfig, \
         generate
     from repro.serving.engine import make_backend
-    from repro.serving.roofline import modeled_decode_step
+    from repro.serving.roofline import decode_attn_read_bytes, \
+        modeled_decode_step
+
+    def decode_parity(fcfg, fparams, max_len=32):
+        """dense vs flash decode_step logits on ragged prefilled slots
+        (interpret-mode kernel on CPU) — the per-family parity record the
+        CI gate checks actually ran."""
+        rng = np.random.default_rng(3)
+        frames = (jnp.asarray(rng.normal(size=(1, fcfg.encoder_frames,
+                                               fcfg.d_model)), jnp.float32)
+                  if fcfg.encoder_layers else None)
+        prompts = [jnp.asarray(rng.integers(3, fcfg.vocab_size, (1, 24)),
+                               jnp.int32) for _ in range(2)]
+        caches = {}
+        for impl in ("dense", "flash"):
+            ctx = tf.ModelCtx(attn_chunk=8, decode_impl=impl,
+                              decode_block_k=8)
+            cache = tf.init_slots(fcfg, 2, max_len)
+            for slot, ln in enumerate((5, 17)):
+                _, cache = tf.prefill_into_slot(
+                    fcfg, fparams, cache, prompts[slot], ln, slot, ctx,
+                    frames=frames)
+            logits, cache = tf.decode_step(
+                fcfg, fparams, cache,
+                jnp.asarray([[7], [9]], jnp.int32), ctx)
+            caches[impl] = np.asarray(logits, np.float32)
+        diff = float(np.max(np.abs(caches["flash"] - caches["dense"])))
+        scale = float(np.max(np.abs(caches["dense"]))) + 1e-9
+        return {"ran": True, "max_abs_diff": diff,
+                "ok": bool(diff <= 1e-3 * max(scale, 1.0))}
 
     cfg = dataclasses.replace(reduced(get_arch("olmo-1b")), dtype="float32")
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
@@ -344,6 +375,21 @@ def serve(rows):
     _emit(rows, "serve.continuous_vs_static.speedup",
           out["continuous"]["throughput_tok_s"]
           / out["static"]["throughput_tok_s"], "measured")
+
+    # -- decode hot path: dense einsum vs Pallas flash-decode (interpret
+    # mode on this CPU container) vs int8-fused, same engine + workload
+    out["decode_impls"] = {}
+    for name, kv, impl in (("dense", "native", "dense"),
+                           ("flash", "native", "flash"),
+                           ("int8_fused", "int8", "flash")):
+        backend = make_backend(cfg, params, kv=kv, decode_impl=impl)
+        ServingEngine(backend, ecfg).run(requests)        # compile/warm
+        _, _, s = ServingEngine(backend, ecfg).run(requests)
+        out["decode_impls"][name] = s
+        _emit(rows, f"serve.decode.{name}.tok_s", s["throughput_tok_s"],
+              "measured")
+        _emit(rows, f"serve.decode.{name}.decode_steps", s["decode_steps"],
+              "measured")
 
     # -- per-family sweep: host-CPU reduced archs measure the engine; the
     # roofline terms model the FULL arch's TPU decode step (compute vs
@@ -386,6 +432,31 @@ def serve(rows):
         _emit(rows, f"serve.{fam}.modeled_state_mb_per_slot",
               entry["roofline"]["bf16"]["state_bytes_per_slot"] / 1e6,
               "derived")
+        # decode-attention bytes/step on the FULL arch at ragged lengths
+        # (mean utilization ~25% of S_max): dense streams the padded
+        # cache, flash streams live KV blocks, int8-fused halves the bytes
+        rng = np.random.default_rng(7)
+        s_max = 4096
+        ragged = rng.integers(0, s_max // 2, size=64).tolist()
+        entry["decode_bytes"] = {
+            "dense": decode_attn_read_bytes(full, ragged, s_max,
+                                            impl="dense"),
+            "flash": decode_attn_read_bytes(full, ragged, s_max,
+                                            impl="flash"),
+            "int8_fused": decode_attn_read_bytes(full, ragged, s_max,
+                                                 impl="flash", kv_bits=8),
+        }
+        _emit(rows, f"serve.{fam}.attn_read_gb.dense",
+              entry["decode_bytes"]["dense"]["attn_read_bytes_per_step"]
+              / 1e9, "derived")
+        _emit(rows, f"serve.{fam}.attn_read_gb.flash",
+              entry["decode_bytes"]["flash"]["attn_read_bytes_per_step"]
+              / 1e9, "derived")
+        # parity record the CI gate checks: flash agrees with dense on
+        # this family's decode step, ragged slots, interpret-mode kernel
+        entry["decode_parity"] = decode_parity(fcfg, fparams)
+        _emit(rows, f"serve.{fam}.decode_parity_maxdiff",
+              entry["decode_parity"]["max_abs_diff"] * 1e6, "measured")
         out["families"][fam] = entry
     _save("serve", out)
 

@@ -1,0 +1,280 @@
+"""Pallas TPU flash-decode attention: the serving engine's per-step hot path.
+
+One decode step attends a single query token per sequence against that
+sequence's resident KV cache.  The dense XLA path streams the **entire
+padded** cache ``(B, S_max, Hk, D)`` every step; this kernel streams only
+the live prefix.  Grid is ``(B, Hk, S/block_k)`` with the KV axis innermost
+("arbitrary"); the per-slot ``lengths`` vector is **scalar-prefetched** so
+
+* the KV BlockSpec index maps clamp every out-of-range block index onto the
+  last live block — consecutive grid steps that map to the same block are
+  not re-fetched, so the HBM traffic for a slot is ``ceil(len/block_k)``
+  blocks instead of ``S_max/block_k`` (the O(B*S_max) -> O(B*len) claim);
+* a ``pl.when`` guard skips the online-softmax update for dead blocks, so
+  the clamped (re-visited) block is never double-counted.
+
+GQA: q is reshaped to ``(B, Hk, G, D)`` and each grid cell computes all G
+query heads of one KV head against one KV block — repeated KV heads are
+never materialized.  Running max / sum / accumulator live in VMEM scratch
+across KV iterations (same online-softmax recurrence as the prefill flash
+kernel in :mod:`repro.kernels.flash_attention`).
+
+Three fused variants share the one kernel body:
+
+* **full** (``window=0``) — mask ``pos < len``; blocks past the length are
+  skipped.
+* **sliding window** (``window>0, ring=False``) — linear cache, band mask
+  ``len-window <= pos < len``; blocks are skipped from *both* ends.
+* **ring** (``window>0, ring=True``) — gemma's sliding-window ring buffer:
+  row ``r`` holds the latest absolute position ``p < len`` with
+  ``p % S == r``, so the valid band *wraps*: a row is attendable iff
+  ``r < min(len, S)`` and ``(len-1-r) mod S < window``.  With
+  ``window == S`` (the layout :func:`repro.models.transformer.init_cache`
+  builds) the wrap band covers every written row and the mask reduces to
+  the length clamp — but the kernel handles ``window < S`` exactly.
+
+* **int8** (:func:`flash_decode_attention_quant`) — the cache is int8
+  values + per-(position, head) f32 scales; tiles are dequantized *inside*
+  the kernel (scores fold ``k_s`` after the matmul, ``v_s`` folds into the
+  probabilities before the PV matmul), so the quantized path attends
+  without ever materializing a bf16 cache.
+
+Empty slots (``len == 0``) produce exactly-zero outputs in every variant —
+the semantics the pure-jnp oracle in :mod:`repro.kernels.ref` pins and the
+dense paths in :mod:`repro.models.attention` / :mod:`repro.models.kvquant`
+share.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+
+_CompilerParams = compat.pallas_compiler_params()
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _sublanes(dtype) -> int:
+    return 16 if jnp.dtype(dtype) == jnp.bfloat16 else 8
+
+
+def _live_block_bounds(length, block_k: int, S: int, window: int,
+                       ring: bool):
+    """(lo, hi) inclusive block-index range holding live KV positions.
+
+    Degenerate slots (length == 0) return (0, 0): block 0 is the one block
+    that gets (re-)mapped — fetched at most once — and compute is skipped.
+    """
+    eff = jnp.minimum(length, S) if ring else length
+    hi = jnp.maximum(pl.cdiv(eff, block_k) - 1, 0)
+    if window > 0 and not ring:
+        lo = jnp.clip(length - window, 0, None) // block_k
+        lo = jnp.minimum(lo, hi)
+    else:
+        lo = jnp.zeros_like(hi)
+    return lo, hi
+
+
+def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float, window: int,
+                   ring: bool, block_k: int, n_kv: int, S: int,
+                   quant: bool = False, ks_ref=None, vs_ref=None):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    length = lens_ref[b]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    lo, hi = _live_block_bounds(length, block_k, S, window, ring)
+    live = (ki >= lo) & (ki <= hi) & (length > 0)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (G_pad, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (block_k, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if quant:                                            # fold k scales
+            s = s * ks_ref[0, 0][None, :]
+        s = s * scale                                        # (G_pad, bk)
+
+        g_pad = q.shape[0]
+        pos_k = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (g_pad, block_k), 1)
+        if ring and window > 0:
+            mask = pos_k < jnp.minimum(length, S)
+            mask &= jnp.mod(length - 1 - pos_k, S) < window
+        else:
+            mask = pos_k < length
+            if window > 0:
+                mask &= pos_k > length - 1 - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, 0]                                 # (G_pad,)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_scr[:, 0] * corr + jnp.sum(p, axis=-1)
+        if quant:                                            # fold v scales
+            p = p * vs_ref[0, 0][None, :]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)            # (block_k, D)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+        m_scr[...] = jnp.broadcast_to(m_new[:, None], m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new[:, None], l_scr.shape)
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        l = jnp.maximum(l_scr[:, 0], 1e-30)                  # len==0 -> 0/1
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def _prep_q(q, Hk: int):
+    """(B, 1, H, D) -> padded (B, Hk, G_pad, D); returns (qg, G, G_pad)."""
+    B, one, H, D = q.shape
+    assert one == 1, f"decode takes one query token, got Sq={one}"
+    G = H // Hk
+    qg = q.reshape(B, Hk, G, D)
+    sub = _sublanes(q.dtype)
+    G_pad = max(sub, ((G + sub - 1) // sub) * sub)
+    if G_pad != G:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, G_pad - G), (0, 0)))
+    return qg, G, G_pad
+
+
+def _pad_kv_len(x, block_k: int):
+    pad = (-x.shape[1]) % block_k
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+    return x
+
+
+def flash_decode_attention(q, k_cache, v_cache, lengths, *, window: int = 0,
+                           ring: bool = False, softmax_scale=None,
+                           block_k: int = 128, interpret: bool = False):
+    """q (B, 1, H, D); k/v (B, S, Hk, D); lengths (B,) int32 live prefix.
+
+    Returns (B, 1, H, D) in q.dtype.  ``window``/``ring`` select the
+    masking variant (see module docstring)."""
+    B, _, H, D = q.shape
+    S = k_cache.shape[1]
+    Hk = k_cache.shape[2]
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    block_k = min(block_k, S)
+    qg, G, G_pad = _prep_q(q, Hk)
+    k_cache = _pad_kv_len(k_cache, block_k)
+    v_cache = _pad_kv_len(v_cache, block_k)
+    S_pad = k_cache.shape[1]
+    n_kv = S_pad // block_k
+    lengths = lengths.astype(jnp.int32)
+
+    def kv_map(b, h, ki, lens):
+        lo, hi = _live_block_bounds(lens[b], block_k, S, window, ring)
+        return (b, jnp.clip(ki, lo, hi), h, 0)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, window=window, ring=ring,
+        block_k=block_k, n_kv=n_kv, S=S)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hk, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G_pad, D), lambda b, h, ki, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, D), kv_map),
+            pl.BlockSpec((1, block_k, 1, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G_pad, D),
+                               lambda b, h, ki, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G_pad, LANES), jnp.float32),
+            pltpu.VMEM((G_pad, LANES), jnp.float32),
+            pltpu.VMEM((G_pad, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hk, G_pad, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths, qg, k_cache, v_cache)
+    return out[:, :, :G].reshape(B, 1, H, D)
+
+
+def flash_decode_attention_quant(q, k_q, k_s, v_q, v_s, lengths, *,
+                                 softmax_scale=None, block_k: int = 128,
+                                 interpret: bool = False):
+    """Int8 fused variant: k_q/v_q (B, S, Hk, D) int8; k_s/v_s (B, S, Hk)
+    f32 per-(position, head) scales; attends the quantized cache directly
+    (tile dequantization inside the kernel, full-cache masking only)."""
+    B, _, H, D = q.shape
+    S = k_q.shape[1]
+    Hk = k_q.shape[2]
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    block_k = min(block_k, S)
+    qg, G, G_pad = _prep_q(q, Hk)
+    k_q = _pad_kv_len(k_q, block_k)
+    v_q = _pad_kv_len(v_q, block_k)
+    # scales travel as (B, Hk, S): lane-major along the blocked axis
+    k_s = _pad_kv_len(k_s, block_k).transpose(0, 2, 1)
+    v_s = _pad_kv_len(v_s, block_k).transpose(0, 2, 1)
+    S_pad = k_q.shape[1]
+    n_kv = S_pad // block_k
+    lengths = lengths.astype(jnp.int32)
+
+    def kv_map(b, h, ki, lens):
+        lo, hi = _live_block_bounds(lens[b], block_k, S, 0, False)
+        return (b, jnp.clip(ki, lo, hi), h, 0)
+
+    def scale_map(b, h, ki, lens):
+        lo, hi = _live_block_bounds(lens[b], block_k, S, 0, False)
+        return (b, h, jnp.clip(ki, lo, hi))
+
+    def kernel(lens_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref, o_ref,
+               m_scr, l_scr, acc_scr):
+        _decode_kernel(lens_ref, q_ref, kq_ref, vq_ref, o_ref,
+                       m_scr, l_scr, acc_scr, scale=scale, window=0,
+                       ring=False, block_k=block_k, n_kv=n_kv, S=S,
+                       quant=True, ks_ref=ks_ref, vs_ref=vs_ref)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hk, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G_pad, D), lambda b, h, ki, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, D), kv_map),
+            pl.BlockSpec((1, 1, block_k), scale_map),
+            pl.BlockSpec((1, block_k, 1, D), kv_map),
+            pl.BlockSpec((1, 1, block_k), scale_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G_pad, D),
+                               lambda b, h, ki, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G_pad, LANES), jnp.float32),
+            pltpu.VMEM((G_pad, LANES), jnp.float32),
+            pltpu.VMEM((G_pad, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hk, G_pad, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths, qg, k_q, k_s, v_q, v_s)
+    return out[:, :, :G].reshape(B, 1, H, D)

@@ -12,6 +12,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import decode_attention as _decode
 from repro.kernels import embedding_ops as _embed
 from repro.kernels import fused_adamw as _adamw
 from repro.kernels import wkv6 as _wkv6
@@ -53,6 +54,38 @@ def flash_attention(q, k, v, *, causal=True, window=0, softmax_scale=None,
                              softmax_scale=softmax_scale, block_q=block_q,
                              block_k=block_k, impl=impl)
     return o.transpose(0, 2, 1, 3)
+
+
+# -- flash-decode attention ---------------------------------------------------
+
+@partial(jax.jit, static_argnames=("window", "ring", "softmax_scale",
+                                   "block_k", "impl"))
+def flash_decode(q, k_cache, v_cache, lengths, *, window=0, ring=False,
+                 softmax_scale=None, block_k=128, impl="kernel"):
+    """One-token decode over per-slot live cache prefixes.  q (B, 1, H, D);
+    caches (B, S, Hk, D); lengths (B,).  Layouts match the model stack's
+    decode caches — no transposes on the hot path."""
+    if impl == "ref":
+        return ref.decode_attention(q, k_cache, v_cache, lengths,
+                                    window=window, ring=ring,
+                                    softmax_scale=softmax_scale)
+    return _decode.flash_decode_attention(
+        q, k_cache, v_cache, lengths, window=window, ring=ring,
+        softmax_scale=softmax_scale, block_k=block_k,
+        interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("softmax_scale", "block_k", "impl"))
+def flash_decode_quant(q, k_q, k_s, v_q, v_s, lengths, *, softmax_scale=None,
+                       block_k=128, impl="kernel"):
+    """Int8 fused decode: in-kernel tile dequantization of the quantized
+    cache (values (B, S, Hk, D) int8, per-(position, head) f32 scales)."""
+    if impl == "ref":
+        return ref.decode_attention_quant(q, k_q, k_s, v_q, v_s, lengths,
+                                          softmax_scale=softmax_scale)
+    return _decode.flash_decode_attention_quant(
+        q, k_q, k_s, v_q, v_s, lengths, softmax_scale=softmax_scale,
+        block_k=block_k, interpret=_interpret())
 
 
 # -- MoE router ---------------------------------------------------------------

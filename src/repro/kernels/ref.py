@@ -39,6 +39,62 @@ def flash_attention(q, k, v, *, causal=True, window=0, softmax_scale=None,
 
 
 # ---------------------------------------------------------------------------
+# flash-decode attention (layout: q (B,1,H,D); caches (B,S,Hk,D)) — the
+# length-skipping oracle: per-slot live prefixes, sliding-window band or
+# gemma ring wraparound masking, int8 per-(position, head) scales.  Empty
+# slots (len == 0) are defined to produce exactly-zero outputs.
+# ---------------------------------------------------------------------------
+
+def _decode_mask(lengths, S: int, window: int, ring: bool):
+    """(B, S) bool: which cache rows a slot's single query may attend."""
+    pos = jnp.arange(S)[None, :]
+    lengths = lengths[:, None]
+    if ring and window > 0:
+        valid = pos < jnp.minimum(lengths, S)
+        valid &= jnp.mod(lengths - 1 - pos, S) < window
+    else:
+        valid = pos < lengths
+        if window > 0:
+            valid &= pos > lengths - 1 - window
+    return valid
+
+
+def decode_attention(q, k, v, lengths, *, window=0, ring=False,
+                     softmax_scale=None):
+    B, _, H, D = q.shape
+    _, S, Hk, _ = k.shape
+    G = H // Hk
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    qg = q.reshape(B, Hk, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k.astype(jnp.float32)) * scale
+    valid = _decode_mask(lengths, S, window, ring)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)           # len==0 -> 0
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def decode_attention_quant(q, k_q, k_s, v_q, v_s, lengths, *,
+                           softmax_scale=None):
+    B, _, H, D = q.shape
+    _, S, Hk, _ = k_q.shape
+    G = H // Hk
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    qg = q.reshape(B, Hk, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_q.astype(jnp.float32))
+    s = s * k_s.transpose(0, 2, 1)[:, :, None, :] * scale
+    valid = _decode_mask(lengths, S, 0, False)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    pv = jnp.einsum("bhgk,bkhd->bhgd",
+                    p * v_s.transpose(0, 2, 1)[:, :, None, :],
+                    v_q.astype(jnp.float32))
+    return pv.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # MoE router: softmax + top-k (first-occurrence argmax tie-break)
 # ---------------------------------------------------------------------------
 

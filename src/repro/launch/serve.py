@@ -15,6 +15,15 @@ family:
   PYTHONPATH=src python -m repro.launch.serve --reduced --arch gemma3-1b \\
       --kv int8
 
+``--decode-impl flash`` swaps the decode-attention hot path for the Pallas
+flash-decode kernel (per-slot length-aware KV-block skipping); ``--prefill-
+chunk N`` streams uniform-family prompts through prefill in fixed chunks:
+
+  PYTHONPATH=src python -m repro.launch.serve --reduced --arch gemma3-1b \\
+      --decode-impl flash
+  PYTHONPATH=src python -m repro.launch.serve --reduced --arch olmo-1b \\
+      --decode-impl flash --prefill-chunk 8 --kv int8
+
 ``--mode raw`` keeps the original fixed-batch decode-loop microbenchmark:
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \\
@@ -63,7 +72,9 @@ def run_engine(args) -> int:
                         queue_capacity=args.queue_capacity,
                         refill=args.refill, sample_seed=args.seed)
     try:
-        backend = make_backend(cfg, params, kv=args.kv)
+        backend = make_backend(cfg, params, kv=args.kv,
+                               decode_impl=args.decode_impl,
+                               prefill_chunk=args.prefill_chunk)
     except ValueError as e:
         raise SystemExit(str(e))
     if not args.no_warmup:
@@ -128,6 +139,16 @@ def main(argv=None) -> int:
     ap.add_argument("--process", default="poisson",
                     choices=("poisson", "bursty"))
     ap.add_argument("--kv", default="native", choices=("native", "int8"))
+    ap.add_argument("--decode-impl", default="dense",
+                    choices=("dense", "flash"),
+                    help="decode-attention hot path: dense XLA einsum over "
+                         "the padded cache, or the Pallas flash-decode "
+                         "kernel (per-slot length-aware KV-block skipping; "
+                         "interpret mode off-TPU)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="stream uniform-family prompts through prefill in "
+                         "fixed chunks of this many tokens (0 = monolithic "
+                         "padded forward)")
     ap.add_argument("--refill", default="continuous",
                     choices=("continuous", "static"))
     ap.add_argument("--queue-capacity", type=int, default=64)

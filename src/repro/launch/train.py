@@ -38,6 +38,10 @@ def main(argv=None) -> int:
                     help="pipeline micro-batches per step")
     ap.add_argument("--pp-schedule", default="1f1b",
                     choices=("1f1b", "gpipe"))
+    ap.add_argument("--pp-rebalance-every", type=int, default=0,
+                    help="every K steps, re-carve the layer->stage bounds "
+                         "from measured per-stage times and live-remap "
+                         "params/optimizer (0 = off)")
     ap.add_argument("--grad-sync", default="flat",
                     choices=("flat", "hierarchical", "onebit", "topk"),
                     help="DP gradient sync mode on the pipelined path")
@@ -119,17 +123,32 @@ def main(argv=None) -> int:
         res = jnp.zeros((args.data, args.model, pp,
                          trainer.pp_residual_size(cfg, pp_shape, mesh,
                                                   scfg)))
-        step_fn = trainer.make_pp_train_step(
-            cfg, mesh, tcfg, bounds, pp_shape, n_micro=args.pp_micro,
-            pp_schedule=args.pp_schedule, scfg=scfg)
-        state = {"params": pp_params, "opt": opt, "residual": res}
+        state = {"params": pp_params, "opt": opt, "residual": res,
+                 "stage_bounds": jnp.asarray(bounds, jnp.int32)}
         start = 0
         if args.resume:
             start, state = trainer.resume_or_init(state, tcfg)
+            # checkpoints restore by key (shapes come from disk): a run
+            # rebalanced mid-flight restores its moved carve points, and
+            # the step must be rebuilt at THOSE bounds, not the planner's
+            bounds = [int(b) for b in state["stage_bounds"]]
+            pp_shape = jax.eval_shape(lambda: state["params"])
+        step_fn = trainer.make_pp_train_step(
+            cfg, mesh, tcfg, bounds, pp_shape, n_micro=args.pp_micro,
+            pp_schedule=args.pp_schedule, scfg=scfg)
+        rebal = None
+        if args.pp_rebalance_every:
+            rebal = trainer.PPRebalancer(
+                cfg, mesh, tcfg, bounds, n_micro=args.pp_micro,
+                pp_schedule=args.pp_schedule, scfg=scfg)
         res_run = trainer.train_loop(
             state, gen(start), step_fn, tcfg, start_step=start,
             samples_per_batch=args.batch, verbose=True,
+            rebalance_every=args.pp_rebalance_every, rebalance_fn=rebal,
             log_every=max(args.steps // 10, 1))
+        if rebal is not None and len(rebal.history) > 1:
+            print(f"stage bounds rebalanced {len(rebal.history) - 1}x: "
+                  f"{rebal.history[0]} -> {rebal.history[-1]}")
     else:
         # --- GSPMD hybrid path (TP x DP) ---------------------------------
         step, jitted, shardings_for = trainer.make_hybrid_train_step(

@@ -276,10 +276,28 @@ def flash_chunked_attention(q, k, v, *, causal=True, window=0,
     return _flash(q, k, v, causal, window, chunk, scale)
 
 
-def decode_attention(q, k_cache, v_cache, lengths, *, window=0,
-                     softmax_scale=None):
+def decode_attention(q, k_cache, v_cache, lengths, *, window=0, ring=False,
+                     softmax_scale=None, impl="dense", block_k=128):
     """One-token decode. q:(B,1,H,D); caches:(B,S,Hk,D); lengths:(B,) valid len
-    (the new token's position is lengths-1 and must be attendable)."""
+    (the new token's position is lengths-1 and must be attendable).
+
+    ``window > 0`` masks a sliding band ``[len-window, len)``; with
+    ``ring=True`` the cache is a size-S ring buffer (row ``r`` holds the
+    latest position ``p < len`` with ``p % S == r``) and the band *wraps*:
+    valid rows are ``r < min(len, S)`` with ``(len-1-r) mod S < window``.
+    Empty slots (``len == 0``) produce exactly-zero outputs.
+
+    ``impl`` selects the hot-path implementation: ``"dense"`` streams the
+    whole padded cache through one XLA einsum; ``"flash"`` is the Pallas
+    flash-decode kernel (:mod:`repro.kernels.decode_attention`) that
+    streams only ``ceil(len/block_k)`` KV blocks per slot."""
+    if impl == "flash":
+        from repro.kernels import ops
+        return ops.flash_decode(q, k_cache, v_cache, lengths, window=window,
+                                ring=ring, softmax_scale=softmax_scale,
+                                block_k=block_k)
+    if impl != "dense":
+        raise ValueError(f"decode impl {impl!r} (want dense|flash)")
     B, _, H, D = q.shape
     _, S, Hk, _ = k_cache.shape
     G = H // Hk
@@ -288,11 +306,16 @@ def decode_attention(q, k_cache, v_cache, lengths, *, window=0,
     s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
                    preferred_element_type=jnp.float32) * scale
     pos_k = jnp.arange(S)[None, :]                           # (1,S)
-    valid = pos_k < lengths[:, None]
-    if window > 0:
-        valid &= pos_k > (lengths[:, None] - 1 - window)
+    if ring and window > 0:
+        valid = pos_k < jnp.minimum(lengths[:, None], S)
+        valid &= jnp.mod(lengths[:, None] - 1 - pos_k, S) < window
+    else:
+        valid = pos_k < lengths[:, None]
+        if window > 0:
+            valid &= pos_k > (lengths[:, None] - 1 - window)
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)           # len==0 -> 0
     out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
     return out.reshape(B, 1, H, D).astype(q.dtype)

@@ -110,7 +110,9 @@ def quant_decode_step(cfg, params, cache: Dict, tokens, ctx=None):
         q, k, v = tf._qkv(cfg, blk["attn"], hn, pos[:, None], ctx)
         k_q, k_s = cache_insert(k_q, k_s, pos, k[:, 0])
         v_q, v_s = cache_insert(v_q, v_s, pos, v[:, 0])
-        o = decode_attention_quant(q, k_q, k_s, v_q, v_s, pos + 1)
+        o = decode_attention_quant(q, k_q, k_s, v_q, v_s, pos + 1,
+                                   impl=ctx.decode_impl,
+                                   block_k=ctx.decode_block_k)
         x = x + o.reshape(B, 1, cfg.q_dim) @ blk["attn"]["wo"]
         f_out, _ = tf.ffn_apply(cfg, blk["ffn"], x, ctx)
         x = x + f_out
@@ -144,14 +146,25 @@ def quant_prefill_kv(cfg, params, batch: Dict, ctx=None):
 
 
 def decode_attention_quant(q, k_q, k_s, v_q, v_s, lengths,
-                           softmax_scale=None):
+                           softmax_scale=None, impl="dense", block_k=128):
     """One-token decode against an int8 cache.
 
     q: (B, 1, H, D); k_q/v_q: (B, S, Hk, D) int8; k_s/v_s: (B, S, Hk).
     The score matmul runs int8 x bf16 -> f32 with the scale folded in
     afterwards (on TPU this is an int8 MXU pass — cache bytes halve AND
-    the matmul rate doubles).
+    the matmul rate doubles).  ``impl="flash"`` routes through the fused
+    Pallas flash-decode kernel (in-kernel tile dequantization, per-slot
+    KV-block skipping) so the quantized cache is attended without ever
+    materializing a bf16 copy — and without streaming dead positions.
+    Empty slots (``len == 0``) produce exactly-zero outputs on both paths.
     """
+    if impl == "flash":
+        from repro.kernels import ops
+        return ops.flash_decode_quant(q, k_q, k_s, v_q, v_s, lengths,
+                                      softmax_scale=softmax_scale,
+                                      block_k=block_k)
+    if impl != "dense":
+        raise ValueError(f"decode impl {impl!r} (want dense|flash)")
     B, _, H, D = q.shape
     _, S, Hk, _ = k_q.shape
     G = H // Hk
@@ -164,6 +177,7 @@ def decode_attention_quant(q, k_q, k_s, v_q, v_s, lengths,
     valid = pos_k < lengths[:, None]
     s = jnp.where(valid[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)           # len==0 -> 0
     pv = jnp.einsum("bhgk,bkhd->bhgd",
                     (p * v_s.transpose(0, 2, 1)[:, :, None, :]),
                     v_q.astype(jnp.float32))

@@ -33,6 +33,8 @@ class ModelCtx:
     """Runtime knobs threaded through the stack (not part of params)."""
     attn_impl: str = "chunked"       # naive | chunked | pallas
     attn_chunk: int = 1024
+    decode_impl: str = "dense"       # dense | flash (Pallas flash-decode)
+    decode_block_k: int = 128        # flash-decode KV block (skip quantum)
     mamba_chunk: int = 512
     remat: bool = False
     use_kernels: bool = False
@@ -112,8 +114,19 @@ def attn_decode(cfg: ArchConfig, p: Dict, x, position, ctx: ModelCtx,
     slot = cache_len % S if window > 0 else cache_len
     k_cache = k_cache.at[jnp.arange(B), slot].set(k[:, 0].astype(k_cache.dtype))
     v_cache = v_cache.at[jnp.arange(B), slot].set(v[:, 0].astype(v_cache.dtype))
-    valid = jnp.minimum(cache_len + 1, S)
-    o = attn_lib.decode_attention(q, k_cache, v_cache, valid, window=0)
+    if window > 0:
+        # ring-buffer cache: unclamped lengths + wraparound band masking
+        # (ring rows hold permuted absolute positions; with window == S the
+        # band covers every written row, reducing to the length clamp)
+        o = attn_lib.decode_attention(q, k_cache, v_cache, cache_len + 1,
+                                      window=window, ring=True,
+                                      impl=ctx.decode_impl,
+                                      block_k=ctx.decode_block_k)
+    else:
+        valid = jnp.minimum(cache_len + 1, S)
+        o = attn_lib.decode_attention(q, k_cache, v_cache, valid,
+                                      impl=ctx.decode_impl,
+                                      block_k=ctx.decode_block_k)
     out = o.reshape(B, 1, cfg.q_dim) @ p["wo"]
     return out, k_cache, v_cache
 
@@ -1050,6 +1063,87 @@ def _uniform_prefill_slot(cfg, params, cache, tokens, true_len, slot, ctx,
     return logits[0, true_len - 1], cache
 
 
+def _uniform_prefill_slot_chunked(cfg, params, cache, tokens, true_len,
+                                  slot, ctx, chunk: int):
+    """Streaming prefill: the prompt runs through the stack in fixed
+    ``chunk``-token pieces that reuse the decode cache-append path — each
+    chunk's per-layer K/V lands in the slot's cache rows and the next chunk
+    attends the accumulated prefix (``q_offset`` causal masking).  A long
+    prompt therefore never compiles or pads a monolithic ``(1, S_pad)``
+    forward: the traced unit is one chunk, scanned ``S_pad/chunk`` times.
+
+    Parity with the whole-prompt path is exact for dense uniform archs
+    (per-position math is identical; only the attention accumulation order
+    differs).  MoE layers route each chunk as its own capacity group, so a
+    capacity-dropping MoE can differ from the bucket-length grouping of the
+    monolithic forward — streams stay a pure function of request + chunk
+    size.  mrope archs take the whole-prompt path (their patch/text
+    position layout is not chunk-decomposable here)."""
+    B, S_in = tokens.shape
+    pad = (-S_in) % chunk
+    if pad:
+        tokens = jnp.pad(tokens, ((0, 0), (0, pad)))
+    S_pad = S_in + pad
+    n_chunks = S_pad // chunk
+    L = cfg.num_layers
+    S_max = cache["k"].shape[2]
+    Hk, D = cfg.num_kv_heads, cfg.head_dim
+    k_rows = jax.lax.dynamic_slice(cache["k"], (0, slot, 0, 0, 0),
+                                   (L, 1, S_max, Hk, D))
+    v_rows = jax.lax.dynamic_slice(cache["v"], (0, slot, 0, 0, 0),
+                                   (L, 1, S_max, Hk, D))
+    if S_pad > S_max:
+        # chunk padding may overhang the cache (bucket == S_max with a
+        # non-dividing chunk): give the working rows that headroom so the
+        # tail chunk's dynamic_update_slice never clamps into live rows —
+        # the overhang holds pad-token K/V only and is dropped at
+        # write-back (positions >= true_len are dead by the slot length)
+        grow = ((0, 0), (0, 0), (0, S_pad - S_max), (0, 0), (0, 0))
+        k_rows = jnp.pad(k_rows, grow)
+        v_rows = jnp.pad(v_rows, grow)
+
+    def per_chunk(carry, ci):
+        k_rows, v_rows = carry
+        c0 = ci * chunk
+        toks = jax.lax.dynamic_slice(tokens, (0, c0), (1, chunk))
+        x = layers.embed_tokens(params["embed"], toks)
+        positions = c0 + jnp.arange(chunk)[None]             # (1, chunk)
+        live = positions < true_len
+
+        def body(h, inp):
+            blk, kc, vc = inp                                # kc (1,S,Hk,D)
+            hn = layers.apply_norm(cfg, blk["attn"]["norm"], h)
+            q, k, v = _qkv(cfg, blk["attn"], hn, positions, ctx)
+            kc = jax.lax.dynamic_update_slice(
+                kc, k.astype(kc.dtype), (0, c0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                vc, v.astype(vc.dtype), (0, c0, 0, 0))
+            o = attn_lib.attention(q, kc, vc, causal=True, q_offset=c0,
+                                   impl="chunked", chunk=ctx.attn_chunk)
+            h = h + o.reshape(1, chunk, cfg.q_dim) @ blk["attn"]["wo"]
+            f_out, _ = ffn_apply(cfg, blk["ffn"], h, ctx, live=live)
+            return h + f_out, (kc, vc)
+
+        x, (k_rows, v_rows) = jax.lax.scan(
+            body, x, (params["blocks"], k_rows, v_rows))
+        return (k_rows, v_rows), x                           # x (1,chunk,d)
+
+    (k_rows, v_rows), hs = jax.lax.scan(
+        per_chunk, (k_rows, v_rows), jnp.arange(n_chunks))
+    hidden = hs.transpose(1, 0, 2, 3).reshape(1, S_pad, cfg.d_model)
+    row = jax.lax.dynamic_slice(hidden, (0, true_len - 1, 0),
+                                (1, 1, cfg.d_model))
+    row = layers.apply_norm(cfg, params["final_norm"], row)
+    logits = layers.lm_logits(cfg, params, row)              # (1, 1, V)
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], k_rows[:, :, :S_max], (0, slot, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], v_rows[:, :, :S_max], (0, slot, 0, 0, 0))
+    cache["len"] = cache["len"].at[slot].set(true_len)
+    return logits[0, 0], cache
+
+
 def _gemma_prefill_slot(cfg, params, cache, tokens, true_len, slot, ctx):
     logits, _, kvs = forward(cfg, params, {"tokens": tokens}, ctx,
                              collect_kv=True, true_len=true_len)
@@ -1156,7 +1250,7 @@ def _whisper_prefill_slot(cfg, params, cache, tokens, true_len, slot, ctx,
 
 def prefill_into_slot(cfg: ArchConfig, params: Dict, cache: Dict, tokens,
                       true_len, slot, ctx: ModelCtx = ModelCtx(),
-                      frames=None, grid=None):
+                      frames=None, grid=None, chunk: int = 0):
     """Scatter one request's prompt state into slot ``slot`` of a decode
     state built by :func:`init_slots`; returns (last-position logits (V,),
     new state).  This is the family-polymorphic half of the serving
@@ -1180,9 +1274,20 @@ def prefill_into_slot(cfg: ArchConfig, params: Dict, cache: Dict, tokens,
     capacity.  The scattered state is the state after ``true_len`` tokens
     — exactly, except that a capacity-dropping MoE evaluates its group
     capacity at the bucket length (streams stay a pure function of the
-    request + bucket, never of pad contents)."""
+    request + bucket, never of pad contents).
+
+    ``chunk > 0`` (uniform family): streaming prefill — the prompt runs in
+    fixed ``chunk``-token pieces through the decode cache-append path, so
+    long prompts never trace a monolithic ``(1, S_pad)`` forward (see
+    :func:`_uniform_prefill_slot_chunked`)."""
     fam = family(cfg)
     if fam == "uniform":
+        if chunk > 0 and cfg.pos_type != "mrope":
+            # streaming prefill: fixed chunks through the decode
+            # cache-append path (mrope prompts keep the monolithic
+            # forward — their position layout is not chunk-decomposable)
+            return _uniform_prefill_slot_chunked(
+                cfg, params, cache, tokens, true_len, slot, ctx, chunk)
         return _uniform_prefill_slot(cfg, params, cache, tokens, true_len,
                                      slot, ctx, grid=grid)
     if fam == "gemma":

@@ -544,6 +544,124 @@ def make_pp_train_step(cfg: ArchConfig, mesh: Mesh, tcfg: TrainConfig,
     return jax.jit(inner_sm, donate_argnums=(0, 1, 2))
 
 
+def probe_stage_times(cfg: ArchConfig, pp_params, bounds, ctx=None,
+                      batch: int = 2, seq: int = 16, iters: int = 3,
+                      jit_cache: Optional[Dict] = None):
+    """Host-measured per-stage forward times over each stage's REAL
+    (unpadded) layers — the observe half of the observe->rebalance loop.
+
+    The padded executor runs every stage at the widest stage's layer count
+    (masked identity slots), so its own tick times cannot see imbalance;
+    the probe instead times each stage's true layer slice, which is what a
+    production (unpadded) pipeline — and the analytic bubble model — pays.
+    Returns per-stage median seconds over ``iters`` timed calls.
+
+    ``jit_cache`` (a dict the caller keeps alive, e.g.
+    :class:`PPRebalancer`'s): reuses one jitted stage program across
+    probes, so repeated probing only compiles when a stage's layer count
+    first appears — a converged partition probes compile-free.
+    """
+    ctx = ctx if ctx is not None else ModelCtx(attn_chunk=8)
+    bounds = list(bounds)
+    blocks = tf.unstack_stage_params(pp_params["stage"], bounds)
+    if jit_cache is not None and "fn" in jit_cache:
+        fn = jit_cache["fn"]
+    else:
+        fn = jax.jit(tf.make_stage_fn(cfg, ctx))
+        if jit_cache is not None:
+            jit_cache["fn"] = fn
+    x = jnp.zeros((batch, seq, cfg.d_model),
+                  jax.tree.leaves(blocks)[0].dtype)
+    times = []
+    for s in range(len(bounds) - 1):
+        n = bounds[s + 1] - bounds[s]
+        sl = jax.tree.map(lambda a: a[bounds[s]:bounds[s + 1]], blocks)
+        p = {"blocks": sl, "mask": jnp.ones((n,), jnp.float32)}
+        jax.block_until_ready(fn(p, x))                      # compile+warm
+        samples = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(p, x))
+            samples.append(time.perf_counter() - t0)
+        samples.sort()
+        times.append(samples[len(samples) // 2])
+    return times
+
+
+class PPRebalancer:
+    """Rebalance-in-the-loop for the pipelined train step.
+
+    Every invocation (``train_loop`` calls it every ``rebalance_every``
+    steps): probe per-stage times at the current bounds, re-carve the
+    layer->stage partition with :func:`repro.core.load_balance.
+    rebalance_stages`, and — when the carve points move — live-remap the
+    stage params *and* their AdamW moments with
+    :func:`repro.models.transformer.remap_stage_params` semantics, then
+    rebuild the jitted step for the new bounds.  The model function is
+    invariant under the remap (layer order never changes); only the stage
+    assignment, pad width, and per-stage cost change.  A compressed-sync
+    residual whose flat size changes with the pad width is re-zeroed
+    (error feedback restarts warm).
+    """
+
+    def __init__(self, cfg: ArchConfig, mesh: Mesh, tcfg: TrainConfig,
+                 bounds, n_micro: int = 4, pp_schedule: str = "1f1b",
+                 scfg: DPSyncConfig = DPSyncConfig(), ctx=None,
+                 probe_batch: int = 2, probe_seq: int = 16):
+        self.cfg, self.mesh, self.tcfg = cfg, mesh, tcfg
+        self.bounds = list(bounds)
+        self.n_micro, self.pp_schedule, self.scfg = n_micro, pp_schedule, scfg
+        self.ctx = ctx
+        self.probe_batch, self.probe_seq = probe_batch, probe_seq
+        self.history = [list(bounds)]
+        self.last_stage_times = None
+        self._probe_jit: Dict = {}      # shared stage program across probes
+
+    def _remap_blocks(self, blocks_tree, new_bounds):
+        return tf.remap_stage_params({"blocks": blocks_tree}, self.bounds,
+                                     new_bounds)["blocks"]
+
+    def __call__(self, state, step_fn):
+        from repro.core import load_balance
+        times = probe_stage_times(self.cfg, state["params"], self.bounds,
+                                  self.ctx, self.probe_batch,
+                                  self.probe_seq,
+                                  jit_cache=self._probe_jit)
+        self.last_stage_times = times
+        new_bounds = load_balance.rebalance_stages(times, self.bounds)
+        if new_bounds == self.bounds:
+            return None
+        params = dict(state["params"])
+        params["stage"] = tf.remap_stage_params(params["stage"],
+                                                self.bounds, new_bounds)
+        opt = dict(state["opt"])
+        for key in ("m", "v", "master"):
+            if key in opt and "stage" in opt[key]:
+                moment = dict(opt[key])
+                moment["stage"] = {"blocks": self._remap_blocks(
+                    opt[key]["stage"]["blocks"], new_bounds)}
+                opt[key] = moment
+        new_state = {**state, "params": params, "opt": opt,
+                     "stage_bounds": jnp.asarray(new_bounds, jnp.int32)}
+        pp_shape = jax.eval_shape(lambda: params)
+        if "residual" in state:
+            # always restart error feedback: even at an unchanged flat
+            # size, moving the carve point re-aligns residual entries to
+            # different layers' gradients
+            n_res = pp_residual_size(self.cfg, pp_shape, self.mesh,
+                                     self.scfg)
+            new_state["residual"] = jnp.zeros(
+                state["residual"].shape[:-1] + (n_res,),
+                state["residual"].dtype)
+        new_step = make_pp_train_step(
+            self.cfg, self.mesh, self.tcfg, new_bounds, pp_shape,
+            n_micro=self.n_micro, pp_schedule=self.pp_schedule,
+            scfg=self.scfg, ctx=self.ctx)
+        self.bounds = new_bounds
+        self.history.append(list(new_bounds))
+        return new_state, new_step
+
+
 def make_update_rule(tcfg: TrainConfig):
     """The trainer's shared optimizer plumbing (AdamW + warmup-cosine LR),
     packaged so other training simulators — :mod:`repro.core.async_dp`'s
@@ -583,17 +701,35 @@ def train_loop(state: Dict[str, Any], batches: Iterator, step_fn: Callable,
                tcfg: TrainConfig, *, start_step: int = 0,
                tokens_per_batch: int = 0, samples_per_batch: int = 0,
                fail_at: Optional[int] = None,
+               rebalance_every: int = 0,
+               rebalance_fn: Optional[Callable] = None,
                log_every: int = 10, verbose: bool = False) -> TrainResult:
     """Generic loop: state = {'params', 'opt', ['residual']}.
 
     ``fail_at``: inject a simulated node failure (raises RuntimeError) after
     that step commits — the fault-tolerance tests restart from checkpoint.
+
+    ``rebalance_every`` / ``rebalance_fn``: close the observe->rebalance
+    loop in-training.  Every K committed steps the loop calls
+    ``rebalance_fn(state, step_fn)``; a ``None`` return keeps the current
+    partition, otherwise the returned ``(state, step_fn)`` — e.g. from
+    :class:`PPRebalancer`, which re-carves the pipeline's layer->stage
+    bounds from measured per-stage times — replaces both for the steps
+    that follow.
     """
     losses = []
     t0 = time.perf_counter()
     step = start_step
     n = 0
     for batch in batches:
+        if rebalance_every and rebalance_fn is not None and n > 0 \
+                and n % rebalance_every == 0:
+            new = rebalance_fn(state, step_fn)
+            if new is not None:
+                state, step_fn = new
+                if verbose:
+                    print(f"step {step}: rebalanced "
+                          f"(bounds {getattr(rebalance_fn, 'bounds', '?')})")
         if "residual" in state:
             state["params"], state["opt"], state["residual"], loss = step_fn(
                 state["params"], state["opt"], state["residual"], batch)
@@ -610,7 +746,11 @@ def train_loop(state: Dict[str, Any], batches: Iterator, step_fn: Callable,
             ckpt.save(tcfg.checkpoint_dir, step,
                       {"params": state["params"], "opt": state["opt"],
                        **({"residual": state["residual"]}
-                          if "residual" in state else {})},
+                          if "residual" in state else {}),
+                       # a rebalanced pipeline's carve points must ride
+                       # along: restore rebuilds the step at THESE bounds
+                       **({"stage_bounds": state["stage_bounds"]}
+                          if "stage_bounds" in state else {})},
                       keep=tcfg.keep_checkpoints)
         if fail_at is not None and step >= fail_at:
             raise RuntimeError(f"injected failure at step {step}")

@@ -187,7 +187,8 @@ class SlotBackend:
 
     families = None                     # set by @register_family (None: any)
 
-    def __init__(self, cfg, params, ctx: Optional[tf.ModelCtx] = None):
+    def __init__(self, cfg, params, ctx: Optional[tf.ModelCtx] = None,
+                 decode_impl: Optional[str] = None):
         fam = tf.family(cfg)
         if self.families is not None and fam not in self.families:
             raise NotImplementedError(
@@ -199,10 +200,18 @@ class SlotBackend:
         # rather than equalling the KV frontier
         self.needs_positions = cfg.pos_type == "mrope"
         self.ctx = ctx if ctx is not None else tf.ModelCtx(attn_chunk=8)
-        self._decode = jax.jit(self._decode_impl)
+        if decode_impl is not None:
+            self.ctx = dataclasses.replace(self.ctx, decode_impl=decode_impl)
+        # the slot state is consumed and replaced every call: donating it
+        # lets XLA update the KV cache in place instead of allocating a
+        # fresh multi-MB copy per decode step (no-op on the CPU backend,
+        # which would only log a donation warning)
+        donate = () if jax.default_backend() == "cpu" else (1,)
+        self._decode = jax.jit(self._decode_impl, donate_argnums=donate)
         # the patch grid is layout (shapes the traced position tensor):
         # static arg, one compile per distinct grid — like prompt buckets
-        self._prefill = jax.jit(self._prefill_impl, static_argnames="grid")
+        self._prefill = jax.jit(self._prefill_impl, static_argnames="grid",
+                                donate_argnums=donate)
 
     def kv_keys(self) -> tuple:
         return KV_KEYS[self.family]
@@ -247,7 +256,16 @@ class SlotBackend:
 @register_family("uniform", "gemma", "jamba", "rwkv6", "whisper")
 class NativeBackend(SlotBackend):
     """Model-dtype slot state via the transformer DecodeState protocol
-    (``init_slots`` / ``prefill_into_slot`` / ``decode_step``)."""
+    (``init_slots`` / ``prefill_into_slot`` / ``decode_step``).
+
+    ``prefill_chunk > 0`` streams uniform-family prompts through the
+    decode cache-append path in fixed chunks instead of one monolithic
+    padded forward (see :func:`transformer.prefill_into_slot`)."""
+
+    def __init__(self, cfg, params, ctx: Optional[tf.ModelCtx] = None,
+                 decode_impl: Optional[str] = None, prefill_chunk: int = 0):
+        self.prefill_chunk = int(prefill_chunk)
+        super().__init__(cfg, params, ctx, decode_impl)
 
     def init_slots(self, n_slots: int, max_len: int) -> Dict:
         return tf.init_slots(self.cfg, n_slots, max_len)
@@ -260,7 +278,7 @@ class NativeBackend(SlotBackend):
                       frames=None, grid=None):
         return tf.prefill_into_slot(self.cfg, params, cache, tokens,
                                     true_len, slot, self.ctx, frames=frames,
-                                    grid=grid)
+                                    grid=grid, chunk=self.prefill_chunk)
 
 
 class Int8KVBackend(SlotBackend):
@@ -347,30 +365,38 @@ class Int8KVSlots(SlotBackend):
 
 
 def make_backend(cfg, params, ctx: Optional[tf.ModelCtx] = None,
-                 kv: str = "native"):
+                 kv: str = "native", decode_impl: Optional[str] = None,
+                 prefill_chunk: int = 0):
     """Family-registry dispatch: the backend for ``tf.family(cfg)``, with
     the int8-KV composition applied on request (fused path for uniform,
-    :class:`Int8KVSlots` for any other KV-bearing family)."""
+    :class:`Int8KVSlots` for any other KV-bearing family).
+
+    ``decode_impl`` overrides the decode-attention hot path on the
+    backend's :class:`~repro.models.transformer.ModelCtx` (``"dense"`` |
+    ``"flash"``); ``prefill_chunk > 0`` enables streaming prefill for
+    uniform-family prompts (and routes uniform int8 through the
+    :class:`Int8KVSlots` composition, whose inner native prefill chunks)."""
     fam = tf.family(cfg)
     if fam not in FAMILY_BACKENDS:
         raise NotImplementedError(
             f"no serving backend registered for family {fam!r} "
             f"(have {sorted(FAMILY_BACKENDS)})")
     if kv == "native":
-        return FAMILY_BACKENDS[fam](cfg, params, ctx)
+        return FAMILY_BACKENDS[fam](cfg, params, ctx, decode_impl,
+                                    prefill_chunk)
     if kv == "int8":
-        if fam == "uniform":
-            if cfg.pos_type == "mrope":
-                # the fused path derives positions from the KV frontier;
-                # mrope archs take the generic composition, whose inner
-                # native decode accepts explicit positions
-                return Int8KVSlots(FAMILY_BACKENDS[fam](cfg, params, ctx))
-            return Int8KVBackend(cfg, params, ctx)
+        if fam == "uniform" and cfg.pos_type != "mrope" and not prefill_chunk:
+            # fused int8 path (whole-prompt quantized prefill).  mrope
+            # archs need explicit decode positions and chunked prefill
+            # needs the native cache-append path: both take the generic
+            # composition below
+            return Int8KVBackend(cfg, params, ctx, decode_impl)
         if not KV_KEYS[fam]:
             raise ValueError(
                 f"family {fam!r} carries no KV cache; kv='int8' does not "
                 f"apply (its recurrent state is O(1) per slot already)")
-        return Int8KVSlots(FAMILY_BACKENDS[fam](cfg, params, ctx))
+        return Int8KVSlots(FAMILY_BACKENDS[fam](cfg, params, ctx,
+                                                decode_impl, prefill_chunk))
     raise ValueError(f"unknown kv backend {kv!r}")
 
 
@@ -393,6 +419,11 @@ class ServingEngine:
         self.slot_rec: List[Optional[metrics_lib.RequestRecord]] = [None] * n
         self.slot_remaining = np.zeros(n, np.int64)
         self.slot_tokens = np.zeros((n, 1), np.int32)
+        # device twin of slot_tokens: on pure decode steps the next tokens
+        # are already on device (the sampler's output), so nothing is
+        # re-uploaded; only host-side slot writes (prefill) mark it dirty
+        self._tokens_dev = None
+        self._tokens_dirty = True
         self.slot_key: List = [None] * n    # per-slot sampling RNG keys
         # mrope: the position of each slot's NEXT input token, advanced
         # per generated token from the request's prefill text+patch layout
@@ -487,6 +518,7 @@ class ServingEngine:
         self.slot_rec[slot] = rec
         self.slot_remaining[slot] = budget - 1
         self.slot_tokens[slot, 0] = first
+        self._tokens_dirty = True           # host wrote a slot: re-upload
         self.slot_key[slot] = np.asarray(key)    # host copy: stacked later
         if getattr(self.backend, "needs_positions", False):
             # the first generated token's mrope position, one past the
@@ -511,12 +543,16 @@ class ServingEngine:
             positions = jnp.asarray(
                 np.broadcast_to(self.slot_pos[:, None, None],
                                 (self.ecfg.n_slots, 1, 3)), jnp.int32)
+        if self._tokens_dirty or self._tokens_dev is None:
+            self._tokens_dev = jnp.asarray(self.slot_tokens)
+            self._tokens_dirty = False
+        tokens = self._tokens_dev
         if positions is None:       # toy/test backends take (cache, tokens)
             call = lambda: self.backend.decode(  # noqa: E731
-                self.cache, jnp.asarray(self.slot_tokens))
+                self.cache, tokens)
         else:
             call = lambda: self.backend.decode(  # noqa: E731
-                self.cache, jnp.asarray(self.slot_tokens), positions)
+                self.cache, tokens, positions)
         logits, self.cache = self._timed(self.clock.fixed_decode_s, call)
         self.decode_steps += 1
         self.slot_pos += 1
@@ -524,7 +560,8 @@ class ServingEngine:
         any_sampled = any(r is not None and r.temperature > 0.0
                           for r in self.slot_req)
         if not any_sampled:
-            nxt = np.asarray(_greedy_tokens(logits[:, 0, :]), np.int32)
+            nxt_dev = _greedy_tokens(logits[:, 0, :])
+            nxt = np.asarray(nxt_dev, np.int32)
         else:
             # batched temperature/top-k/categorical over all slots: one
             # device call, one host sync.  Per-slot keys fold with the
@@ -542,8 +579,12 @@ class ServingEngine:
                 topks[s] = self.slot_req[s].top_k
                 counts[s] = self.slot_rec[s].tokens_out
                 keys[s] = self.slot_key[s]
-            nxt = np.asarray(_fold_and_sample(logits[:, 0, :], temps, topks,
-                                              keys, counts), np.int32)
+            nxt_dev = _fold_and_sample(logits[:, 0, :], temps, topks,
+                                       keys, counts)
+            nxt = np.asarray(nxt_dev, np.int32)
+        # the sampled tokens are the next step's inputs and are already on
+        # device — keep them there instead of re-uploading from host
+        self._tokens_dev = nxt_dev[:, None].astype(jnp.int32)
         for s in range(n):
             req, rec = self.slot_req[s], self.slot_rec[s]
             if req is None:

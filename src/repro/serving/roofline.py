@@ -20,7 +20,8 @@ KV-dominated families and does nothing for rwkv6 (no KV to quantize).
 """
 from __future__ import annotations
 
-from typing import Dict
+import math
+from typing import Dict, Sequence
 
 from repro.config import ArchConfig, HBM_BW, PEAK_FLOPS_BF16
 
@@ -60,6 +61,53 @@ def decode_state_bytes(cfg: ArchConfig, cache_len: int,
     if cfg.encoder_layers:               # per-decoder-layer cross-KV rows
         total += cfg.num_layers * cfg.encoder_frames * kv_pos
     return total
+
+
+def decode_attn_read_bytes(cfg: ArchConfig, lengths: Sequence[int],
+                           s_max: int, impl: str = "dense",
+                           kv_bits: int = 16,
+                           block_k: int = 128) -> Dict[str, float]:
+    """KV-cache bytes ONE decode step streams through attention, per impl.
+
+    ``lengths`` are the live per-slot prefixes (ragged); ``s_max`` the
+    padded cache capacity.  ``impl="dense"`` models the XLA einsum over
+    the whole padded cache — every slot pays ``s_max`` positions per
+    attention layer regardless of its length.  ``impl="flash"`` models the
+    length-aware Pallas flash-decode kernel: a slot streams only its live
+    KV blocks, ``max(ceil(len/block_k), 1)`` blocks of ``block_k``
+    positions (the clamped index map always touches at least block 0).
+    Sliding-window (gemma local / ring) layers cap a slot's live positions
+    at the window on both paths.  Whisper's per-slot cross-KV rows are not
+    ragged and are charged identically to both impls.  ``kv_bits=8``
+    prices the int8-fused variant.
+    """
+    kv_pos = _kv_pos_bytes(cfg.head_dim, cfg.num_kv_heads, kv_bits)
+    total = 0.0
+    for kind in cfg.layer_kinds():
+        if kind == "attn":
+            cap = s_max
+        elif kind == "local_attn":
+            cap = min(cfg.sliding_window or s_max, s_max)
+        else:
+            continue                     # recurrent layers hold no KV rows
+        if impl == "dense":
+            total += len(lengths) * cap * kv_pos
+        elif impl == "flash":
+            for ln in lengths:
+                bk = min(block_k, cap)
+                n_blocks = max(math.ceil(min(int(ln), cap) / bk), 1)
+                total += min(n_blocks * bk, cap) * kv_pos
+        else:
+            raise ValueError(f"impl {impl!r} (want dense|flash)")
+    if cfg.encoder_layers:
+        total += len(lengths) * cfg.num_layers * cfg.encoder_frames * kv_pos
+    return {
+        "impl": impl, "kv_bits": kv_bits, "block_k": block_k,
+        "n_slots": len(lengths), "s_max": s_max,
+        "mean_utilization": (sum(int(x) for x in lengths)
+                             / max(len(lengths) * s_max, 1)),
+        "attn_read_bytes_per_step": total,
+    }
 
 
 def modeled_decode_step(cfg: ArchConfig, n_slots: int, cache_len: int,

@@ -358,6 +358,111 @@ def _():
 
 
 # ---------------------------------------------------------------------------
+@check("pp_rebalance_in_loop")
+def _():
+    """Rebalance-in-the-loop: training from a deliberately skewed
+    layer->stage split, the in-loop probe->rebalance->remap hook converges
+    the bounds to the balanced partition, and the loss trajectory matches
+    an unrebalanced run (the remap is model-function invariant)."""
+    import dataclasses
+    from repro.config import TrainConfig, get_arch, reduced
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import transformer as tf
+    from repro.optimizer import adamw
+    from repro.runtime import trainer
+    cfg = dataclasses.replace(reduced(get_arch("olmo-1b")), num_layers=6,
+                              dtype="float32")
+    ctx = tf.ModelCtx(attn_chunk=8)
+    tcfg = TrainConfig(steps=6, learning_rate=1e-3, warmup_steps=2,
+                       checkpoint_every=0)
+    skew = [0, 1, 6]                           # stage 0: 1 layer, stage 1: 5
+    rng = np.random.default_rng(2)
+    batches = [{"tokens": jnp.asarray(rng.integers(3, 200, (8, 16)),
+                                      jnp.int32),
+                "targets": jnp.asarray(rng.integers(3, 200, (8, 16)),
+                                       jnp.int32)}
+               for _ in range(6)]
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    scfg = trainer.DPSyncConfig(mode="flat")
+
+    def run(rebalance_every):
+        mesh = make_host_mesh(data=2, model=2, stage=2)
+        pp = tf.pp_partition_params(cfg, jax.tree.map(jnp.copy, params),
+                                    skew)
+        pp_shape = jax.eval_shape(lambda: pp)
+        opt = adamw.init_opt_state(trainer.pp_trainable(pp,
+                                                        cfg.tie_embeddings))
+        res = jnp.zeros((2, 2, 2, trainer.pp_residual_size(
+            cfg, pp_shape, mesh, scfg)))
+        step = trainer.make_pp_train_step(cfg, mesh, tcfg, skew, pp_shape,
+                                          n_micro=2, scfg=scfg, ctx=ctx)
+        rebal = trainer.PPRebalancer(cfg, mesh, tcfg, skew, n_micro=2,
+                                     scfg=scfg, ctx=ctx, probe_batch=4,
+                                     probe_seq=32)
+        state = {"params": pp, "opt": opt, "residual": res}
+        out = trainer.train_loop(
+            state, iter(batches), step, tcfg,
+            rebalance_every=rebalance_every,
+            rebalance_fn=rebal if rebalance_every else None)
+        return out.losses, rebal
+    base_losses, _ = run(0)
+    losses, rebal = run(2)
+    assert len(rebal.history) > 1, "rebalance never fired"
+    final = rebal.history[-1]
+    sizes = [final[s + 1] - final[s] for s in range(2)]
+    assert max(sizes) <= 4, (rebal.history, rebal.last_stage_times)
+    # the remap preserves the model function: same trajectory either way
+    np.testing.assert_allclose(losses, base_losses, rtol=5e-3, atol=1e-4)
+    RESULTS.setdefault("pp_rebalance_history", rebal.history)
+
+    # checkpoint/resume leg: the moved carve points ride in the checkpoint,
+    # and restore rebuilds a working step at THOSE bounds (not the skewed
+    # template's) — a resumed rebalanced run must not scramble its layers
+    import shutil
+    import tempfile
+    ckpt_dir = tempfile.mkdtemp(prefix="pp_rebal_ckpt_")
+    try:
+        tcfg_ck = dataclasses.replace(tcfg, checkpoint_every=2,
+                                      checkpoint_dir=ckpt_dir)
+        mesh = make_host_mesh(data=2, model=2, stage=2)
+
+        def fresh_state():
+            pp = tf.pp_partition_params(cfg,
+                                        jax.tree.map(jnp.copy, params),
+                                        skew)
+            opt = adamw.init_opt_state(
+                trainer.pp_trainable(pp, cfg.tie_embeddings))
+            res = jnp.zeros((2, 2, 2, trainer.pp_residual_size(
+                cfg, jax.eval_shape(lambda: pp), mesh, scfg)))
+            return {"params": pp, "opt": opt, "residual": res,
+                    "stage_bounds": jnp.asarray(skew, jnp.int32)}
+
+        state = fresh_state()
+        step = trainer.make_pp_train_step(
+            cfg, mesh, tcfg_ck, skew, jax.eval_shape(lambda: state["params"]),
+            n_micro=2, scfg=scfg, ctx=ctx)
+        rebal2 = trainer.PPRebalancer(cfg, mesh, tcfg_ck, skew, n_micro=2,
+                                      scfg=scfg, ctx=ctx, probe_batch=4,
+                                      probe_seq=32)
+        trainer.train_loop(state, iter(batches[:4]), step, tcfg_ck,
+                           rebalance_every=2, rebalance_fn=rebal2)
+        assert len(rebal2.history) > 1
+        start, restored = trainer.resume_or_init(fresh_state(), tcfg_ck)
+        assert start == 4
+        rb = [int(b) for b in restored["stage_bounds"]]
+        assert rb == rebal2.bounds, (rb, rebal2.bounds)
+        step_r = trainer.make_pp_train_step(
+            cfg, mesh, tcfg_ck, rb,
+            jax.eval_shape(lambda: restored["params"]), n_micro=2,
+            scfg=scfg, ctx=ctx)
+        _, _, _, l = step_r(restored["params"], restored["opt"],
+                            restored["residual"], batches[4])
+        assert np.isfinite(float(l)), float(l)
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
 @check("pp_launch_train_e2e")
 def _():
     """launch/train.py drives the pipelined hybrid path end-to-end on the

@@ -1,0 +1,194 @@
+"""Flash-decode Pallas kernel (interpret mode on CPU): length-skipping
+parity with the pure-jnp oracle AND the dense model-stack decode paths
+across ragged length vectors — every masking variant (full cache, sliding
+window, gemma ring wraparound) plus the int8 in-kernel-dequant fusion."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.kernels import ops, ref
+from repro.models import attention as attn_lib
+from repro.models import kvquant as kq
+
+B, S, H, Hk, D = 4, 64, 4, 2, 16
+
+
+def _qkv_cache(seed=0, s=S, h=H, hk=Hk, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, 1, h, D), dtype)
+    k = jax.random.normal(ks[1], (B, s, hk, D), dtype)
+    v = jax.random.normal(ks[2], (B, s, hk, D), dtype)
+    return q, k, v
+
+
+RAGGED = [
+    [0, 0, 0, 0],                        # every slot empty
+    [S, S, S, S],                        # every slot full
+    [0, 1, S // 2 + 3, S],               # empty / single / mid / full
+    [5, 17, 40, 63],
+]
+
+
+@pytest.mark.parametrize("lengths", RAGGED)
+@pytest.mark.parametrize("block_k", [8, 16, 64])
+def test_flash_decode_matches_oracle_and_dense(lengths, block_k):
+    q, k, v = _qkv_cache()
+    lens = jnp.asarray(lengths, jnp.int32)
+    out = ops.flash_decode(q, k, v, lens, block_k=block_k)
+    want = ref.decode_attention(q, k, v, lens)
+    assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+    dense = attn_lib.decode_attention(q, k, v, lens, impl="dense")
+    assert_allclose(np.asarray(out), np.asarray(dense), atol=2e-5,
+                    rtol=2e-5)
+
+
+def test_flash_decode_gqa_and_mqa_head_groups():
+    for h, hk in ((4, 1), (8, 2), (2, 2)):
+        q, k, v = _qkv_cache(seed=1, h=h, hk=hk)
+        lens = jnp.asarray([3, 0, 29, S], jnp.int32)
+        out = ops.flash_decode(q, k, v, lens, block_k=16)
+        want = ref.decode_attention(q, k, v, lens)
+        assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5,
+                        rtol=2e-5, err_msg=f"H={h} Hk={hk}")
+
+
+@pytest.mark.parametrize("window", [5, 12, 100])   # incl. window > len
+def test_flash_decode_sliding_window_band(window):
+    q, k, v = _qkv_cache(seed=2)
+    lens = jnp.asarray([0, 3, 33, S], jnp.int32)
+    out = ops.flash_decode(q, k, v, lens, window=window, block_k=8)
+    want = ref.decode_attention(q, k, v, lens, window=window)
+    assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+    dense = attn_lib.decode_attention(q, k, v, lens, window=window,
+                                      impl="dense")
+    assert_allclose(np.asarray(out), np.asarray(dense), atol=2e-5,
+                    rtol=2e-5)
+
+
+@pytest.mark.parametrize("window", [16, 7])
+def test_flash_decode_ring_wraparound(window):
+    """Ring cache of 16 rows, lengths beyond the ring (wrapped) and below
+    it; wrap band masking must match the oracle and the dense ring path."""
+    ring = 16
+    q, k, v = _qkv_cache(seed=3, s=ring)
+    lens = jnp.asarray([0, 3, ring, 37], jnp.int32)
+    out = ops.flash_decode(q, k, v, lens, window=window, ring=True,
+                           block_k=8)
+    want = ref.decode_attention(q, k, v, lens, window=window, ring=True)
+    assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+    dense = attn_lib.decode_attention(q, k, v, lens, window=window,
+                                      ring=True, impl="dense")
+    assert_allclose(np.asarray(out), np.asarray(dense), atol=2e-5,
+                    rtol=2e-5)
+
+
+@pytest.mark.parametrize("lengths", RAGGED)
+def test_flash_decode_quant_matches_oracle_and_dense(lengths):
+    q, k, v = _qkv_cache(seed=4)
+    k_q, k_s = kq.quantize_kv(k)
+    v_q, v_s = kq.quantize_kv(v)
+    lens = jnp.asarray(lengths, jnp.int32)
+    out = ops.flash_decode_quant(q, k_q, k_s, v_q, v_s, lens, block_k=16)
+    want = ref.decode_attention_quant(q, k_q, k_s, v_q, v_s, lens)
+    assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+    dense = kq.decode_attention_quant(q, k_q, k_s, v_q, v_s, lens,
+                                      impl="dense")
+    assert_allclose(np.asarray(out), np.asarray(dense), atol=2e-5,
+                    rtol=2e-5)
+
+
+def test_flash_decode_property_sweep():
+    """Property-style sweep: many random ragged length vectors (always
+    including 0 and S_max) stay within tight f32 tolerance of the dense
+    path for both the bf16-layout and int8 kernels."""
+    q, k, v = _qkv_cache(seed=5)
+    k_q, k_s = kq.quantize_kv(k)
+    v_q, v_s = kq.quantize_kv(v)
+    rng = np.random.default_rng(0)
+    for trial in range(12):
+        lens = rng.integers(0, S + 1, size=B)
+        lens[trial % B] = 0 if trial % 2 else S          # pin the extremes
+        lens = jnp.asarray(lens, jnp.int32)
+        bk = int(rng.choice([8, 16, 32]))
+        out = ops.flash_decode(q, k, v, lens, block_k=bk)
+        dense = attn_lib.decode_attention(q, k, v, lens, impl="dense")
+        assert_allclose(np.asarray(out), np.asarray(dense), atol=2e-5,
+                        rtol=2e-5, err_msg=f"trial {trial} lens {lens}")
+        outq = ops.flash_decode_quant(q, k_q, k_s, v_q, v_s, lens,
+                                      block_k=bk)
+        denseq = kq.decode_attention_quant(q, k_q, k_s, v_q, v_s, lens)
+        assert_allclose(np.asarray(outq), np.asarray(denseq), atol=2e-5,
+                        rtol=2e-5, err_msg=f"trial {trial} lens {lens}")
+
+
+def test_decode_attention_impl_dispatch():
+    q, k, v = _qkv_cache(seed=6)
+    lens = jnp.asarray([5, 0, 40, S], jnp.int32)
+    flash = attn_lib.decode_attention(q, k, v, lens, impl="flash",
+                                      block_k=16)
+    dense = attn_lib.decode_attention(q, k, v, lens, impl="dense")
+    assert_allclose(np.asarray(flash), np.asarray(dense), atol=2e-5,
+                    rtol=2e-5)
+    with pytest.raises(ValueError):
+        attn_lib.decode_attention(q, k, v, lens, impl="nope")
+
+
+def test_empty_slot_outputs_are_exact_zero():
+    """len == 0 slots are defined to output zeros on every path (the dense
+    softmax would otherwise emit the mean of garbage cache rows)."""
+    q, k, v = _qkv_cache(seed=7)
+    lens = jnp.asarray([0, 0, 7, 0], jnp.int32)
+    for out in (ops.flash_decode(q, k, v, lens, block_k=8),
+                attn_lib.decode_attention(q, k, v, lens, impl="dense"),
+                ref.decode_attention(q, k, v, lens)):
+        o = np.asarray(out)
+        assert np.all(o[[0, 1, 3]] == 0.0)
+        assert np.any(o[2] != 0.0)
+
+
+def test_modeled_flash_bytes_below_dense_at_low_utilization():
+    """The roofline term the CI serve gate checks: at mean utilization
+    < 50% of S_max the flash-decode kernel's modeled bytes/step are
+    strictly below the dense path's, and int8 halves them again."""
+    from repro.config import get_arch
+    from repro.serving.roofline import decode_attn_read_bytes
+    cfg = get_arch("olmo-1b")
+    rng = np.random.default_rng(1)
+    lengths = rng.integers(0, 2048, size=32).tolist()   # ~25% of 4096
+    dense = decode_attn_read_bytes(cfg, lengths, 4096, impl="dense")
+    flash = decode_attn_read_bytes(cfg, lengths, 4096, impl="flash")
+    fused = decode_attn_read_bytes(cfg, lengths, 4096, impl="flash",
+                                   kv_bits=8)
+    assert flash["mean_utilization"] < 0.5
+    assert flash["attn_read_bytes_per_step"] \
+        < dense["attn_read_bytes_per_step"]
+    assert fused["attn_read_bytes_per_step"] \
+        < flash["attn_read_bytes_per_step"]
+    # full slots erase the advantage — dense == flash at 100% utilization
+    full = [4096] * 32
+    d_full = decode_attn_read_bytes(cfg, full, 4096, impl="dense")
+    f_full = decode_attn_read_bytes(cfg, full, 4096, impl="flash")
+    assert f_full["attn_read_bytes_per_step"] == \
+        d_full["attn_read_bytes_per_step"]
+
+
+def test_quant_decode_step_flash_matches_dense():
+    """The fused uniform int8 decode body (kvquant.quant_decode_step) is
+    logit-stable under the flash impl."""
+    from repro.config import get_arch, reduced
+    from repro.models import transformer as tf
+    cfg = dataclasses.replace(reduced(get_arch("olmo-1b")), dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    cache = kq.init_model_quant_cache(cfg, 2, 32)
+    cache["len"] = jnp.asarray([4, 9], jnp.int32)
+    toks = jnp.asarray([[5], [11]], jnp.int32)
+    ld, _ = kq.quant_decode_step(cfg, params, cache, toks,
+                                 tf.ModelCtx(attn_chunk=8))
+    lf, _ = kq.quant_decode_step(
+        cfg, params, cache, toks,
+        tf.ModelCtx(attn_chunk=8, decode_impl="flash", decode_block_k=8))
+    assert_allclose(np.asarray(lf), np.asarray(ld), atol=2e-4, rtol=2e-4)

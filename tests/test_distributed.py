@@ -40,6 +40,7 @@ CHECKS = [
     "pipeline_1f1b_matches_gpipe_and_serial",
     "pp_hybrid_train_step_matches_dp",
     "pp_train_step_compressed_embed_sync_converges",
+    "pp_rebalance_in_loop",
     "pp_launch_train_e2e",
     "embed_zero_opt_state_matches_replicated",
     "dp_train_step_hier_and_compressed_converge",

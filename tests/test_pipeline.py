@@ -215,3 +215,55 @@ def test_modeled_parallel_step_hybrid_beats_single_modes():
                               schedule="gpipe")
     assert hybrid["bubble_frac"] < g["bubble_frac"]
     assert hybrid["t_step_ms"] < g["t_step_ms"]
+
+
+# -- rebalance-in-the-loop (observe -> rebalance -> remap) -------------------
+
+def test_probe_stage_times_sees_skew_and_rebalance_converges():
+    """A deliberately skewed 1:7 layer split is measurably imbalanced under
+    the unpadded stage probe, and one rebalance round re-carves it to the
+    balanced partition (homogeneous layers -> equal halves +-1)."""
+    from repro.runtime import trainer
+    cfg = dataclasses.replace(
+        reduced(get_arch("olmo-1b"), layers=8), dtype="float32",
+        d_model=128, num_heads=4, num_kv_heads=2, head_dim=32, d_ff=256)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    skew = [0, 1, 8]
+    pp = tf.pp_partition_params(cfg, params, skew)
+    times = trainer.probe_stage_times(cfg, pp, skew, batch=4, seq=32)
+    assert times[1] > times[0], times
+    new = lb.rebalance_stages(times, skew)
+    assert new[0] == 0 and new[-1] == 8
+    assert max(new[s + 1] - new[s] for s in range(2)) <= 5, (new, times)
+    # pure-timing fixpoint: exactly proportional times carve exact halves
+    assert lb.rebalance_stages([1.0, 7.0], [0, 1, 8]) == [0, 4, 8]
+    assert lb.rebalance_stages([4.0, 4.0], [0, 4, 8]) == [0, 4, 8]
+
+
+def test_train_loop_rebalance_hook_swaps_step_fn():
+    """train_loop calls rebalance_fn every K committed steps and adopts the
+    returned (state, step_fn); a None return keeps the current ones."""
+    from repro.config import TrainConfig
+    from repro.runtime import trainer
+    calls = []
+
+    def step_a(params, opt, batch):
+        return params, opt, {"loss": jnp.asarray(1.0)}
+
+    def step_b(params, opt, batch):
+        return params, opt, {"loss": jnp.asarray(2.0)}
+
+    def rebalance(state, step_fn):
+        calls.append(step_fn)
+        if len(calls) == 1:
+            return None                       # first probe: no change
+        return state, step_b                  # second: swap the step
+
+    tcfg = TrainConfig(steps=8, checkpoint_every=0)
+    out = trainer.train_loop({"params": {}, "opt": {}},
+                             iter([{}] * 8), step_a, tcfg,
+                             rebalance_every=2, rebalance_fn=rebalance)
+    # fired at n=2,4,6; swapped after the 2nd call (n=4)
+    assert len(calls) == 3
+    assert calls[:2] == [step_a, step_a] and calls[2] is step_b
+    assert out.losses == [1.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0, 2.0]

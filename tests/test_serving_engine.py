@@ -771,3 +771,179 @@ def test_traffic_attaches_image_grids():
     assert 0 < len(with_img) < len(reqs)
     assert all(r.grid == (2, 3) for r in with_img)
     assert all(len(r.prompt) > 6 for r in with_img)
+
+
+# ---------------------------------------------------------------------------
+# decode hot path: flash-decode impl through the engine, host overhead
+# ---------------------------------------------------------------------------
+
+def test_engine_flash_decode_token_exact_vs_dense():
+    """The Pallas flash-decode impl is token-exact against the dense path
+    through the full continuous-batching engine (uniform family)."""
+    cfg = dataclasses.replace(reduced(get_arch("olmo-1b")), dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = _real_requests(cfg, n=6)
+    ecfg = eng.EngineConfig(n_slots=3, max_len=64)
+    clock = lambda: traffic.Clock(0.0, 0.0)  # noqa: E731 — deterministic
+    dense, _, _ = eng.ServingEngine(
+        eng.make_backend(cfg, params), ecfg, clock()).run(reqs)
+    flash, _, s = eng.ServingEngine(
+        eng.make_backend(cfg, params, decode_impl="flash"), ecfg,
+        clock()).run(reqs)
+    assert s["finished"] == len(reqs)
+    assert flash == dense
+
+
+def test_engine_gemma_ring_wraparound_flash_regression():
+    """Gemma ring-buffer regression through the engine: generations run the
+    local-layer rings far past the sliding window, and the flash-decode
+    kernel's wraparound masking must keep every greedy stream identical to
+    the dense path."""
+    cfg = dataclasses.replace(reduced(get_arch("gemma3-1b")),
+                              dtype="float32")
+    assert cfg.sliding_window == 8
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    reqs = []
+    for i in range(4):
+        plen = int(rng.integers(10, 16))     # prompt alone wraps the ring
+        reqs.append(traffic.Request(
+            rid=i, user_id=i,
+            prompt=tuple(int(t) for t in
+                         rng.integers(3, cfg.vocab_size, plen)),
+            max_new_tokens=12, arrival=0.0))
+    ecfg = eng.EngineConfig(n_slots=2, max_len=48)
+    dense, _, _ = eng.ServingEngine(
+        eng.make_backend(cfg, params), ecfg, traffic.Clock(0.0, 0.0)).run(reqs)
+    flash, _, s = eng.ServingEngine(
+        eng.make_backend(cfg, params, decode_impl="flash"), ecfg,
+        traffic.Clock(0.0, 0.0)).run(reqs)
+    assert s["finished"] == len(reqs)
+    assert flash == dense
+    # the streams really ran past the window (wraparound exercised)
+    assert any(len(reqs[i].prompt) + len(flash[i]) > 2 * cfg.sliding_window
+               for i in range(len(reqs)))
+
+
+def test_engine_no_per_step_recompiles():
+    """Host-overhead regression: one decode compile for the whole run (the
+    decode signature never changes step to step — the device-resident
+    token buffer and donated cache keep it stable) and at most one prefill
+    compile per distinct prompt bucket."""
+    cfg = dataclasses.replace(reduced(get_arch("olmo-1b")), dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = _real_requests(cfg, n=8, seed=3)
+    backend = eng.make_backend(cfg, params)
+    ecfg = eng.EngineConfig(n_slots=3, max_len=64, prompt_quantum=8)
+    engine = eng.ServingEngine(backend, ecfg, traffic.Clock(0.0, 0.0))
+    _, _, summary = engine.run(reqs)
+    assert summary["decode_steps"] > 5
+    assert backend._decode._cache_size() == 1, "decode recompiled mid-run"
+    buckets = {eng._bucket(len(r.prompt), ecfg.prompt_quantum,
+                           ecfg.max_len) for r in reqs}
+    assert backend._prefill._cache_size() <= len(buckets)
+
+
+def test_engine_device_resident_tokens_skip_reupload():
+    """On pure decode steps the engine feeds the sampler's device output
+    straight back in; the host token array is only re-uploaded after a
+    prefill writes a slot."""
+    cfg = dataclasses.replace(reduced(get_arch("olmo-1b")), dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    req = _real_requests(cfg, n=1)[0]
+    backend = eng.make_backend(cfg, params)
+    engine = eng.ServingEngine(backend, eng.EngineConfig(n_slots=2,
+                                                         max_len=64),
+                               traffic.Clock(0.0, 0.0))
+    engine.submit(req)
+    engine._refill()
+    assert engine._tokens_dirty                 # prefill marked it dirty
+    engine._decode_once()
+    assert not engine._tokens_dirty
+    dev_before = engine._tokens_dev
+    engine._decode_once()
+    assert engine._tokens_dev is not dev_before  # sampler output, no upload
+    assert not engine._tokens_dirty
+    # device twin always matches the host bookkeeping for live slots
+    np.testing.assert_array_equal(
+        np.asarray(engine._tokens_dev)[0], engine.slot_tokens[0])
+
+
+# ---------------------------------------------------------------------------
+# chunked / streaming prefill
+# ---------------------------------------------------------------------------
+
+def test_chunked_prefill_matches_whole_prompt():
+    """Streaming prefill (fixed chunks through the decode cache-append
+    path) matches the monolithic whole-prompt forward: same last-position
+    logits, same cached K/V rows, same decode continuation."""
+    cfg = dataclasses.replace(reduced(get_arch("olmo-1b")), dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    ctx = tf.ModelCtx(attn_chunk=8)
+    rng = np.random.default_rng(7)
+    toks = jnp.asarray(rng.integers(3, cfg.vocab_size, (1, 24)), jnp.int32)
+    true_len, slot = 13, 1
+    base = tf.init_slots(cfg, 3, 64)
+    lw, cw = tf.prefill_into_slot(cfg, params, dict(base), toks,
+                                  jnp.int32(true_len), jnp.int32(slot), ctx)
+    for chunk in (8, 7, 24):
+        lc, cc = tf.prefill_into_slot(cfg, params, dict(base), toks,
+                                      jnp.int32(true_len), jnp.int32(slot),
+                                      ctx, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(lc), np.asarray(lw),
+                                   atol=2e-5, rtol=2e-5, err_msg=str(chunk))
+        np.testing.assert_allclose(
+            np.asarray(cc["k"][:, slot, :true_len]),
+            np.asarray(cw["k"][:, slot, :true_len]), atol=2e-5, rtol=2e-5)
+        assert int(cc["len"][slot]) == true_len
+        t = jnp.asarray([[3], [5], [7]], jnp.int32)
+        l1, _ = tf.decode_step(cfg, params, cw, t, ctx)
+        l2, _ = tf.decode_step(cfg, params, cc, t, ctx)
+        np.testing.assert_allclose(np.asarray(l2[slot]), np.asarray(l1[slot]),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_chunked_prefill_overhang_does_not_clamp_into_live_rows():
+    """Regression: a prompt bucketed to the full cache width with a
+    non-dividing chunk pads past S_max; the tail chunk must spill into
+    working-row headroom, not clamp back onto (and corrupt) live rows."""
+    cfg = dataclasses.replace(reduced(get_arch("olmo-1b")), dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    ctx = tf.ModelCtx(attn_chunk=8)
+    rng = np.random.default_rng(9)
+    s_max, true_len, chunk = 32, 30, 7        # S_pad=35 > S_max
+    toks = jnp.asarray(rng.integers(3, cfg.vocab_size, (1, s_max)),
+                       jnp.int32)
+    base = tf.init_slots(cfg, 2, s_max)
+    lw, cw = tf.prefill_into_slot(cfg, params, dict(base), toks,
+                                  jnp.int32(true_len), jnp.int32(0), ctx)
+    lc, cc = tf.prefill_into_slot(cfg, params, dict(base), toks,
+                                  jnp.int32(true_len), jnp.int32(0), ctx,
+                                  chunk=chunk)
+    np.testing.assert_allclose(np.asarray(lc), np.asarray(lw),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(cc["k"][:, 0, :true_len]),
+                               np.asarray(cw["k"][:, 0, :true_len]),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_engine_chunked_prefill_token_exact():
+    """--prefill-chunk end-to-end: the engine's greedy streams are
+    unchanged by streaming prefill, composed with int8 KV (which routes
+    through the Int8KVSlots composition when chunking)."""
+    cfg = dataclasses.replace(reduced(get_arch("olmo-1b")), dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = _real_requests(cfg, n=5, seed=11)
+    ecfg = eng.EngineConfig(n_slots=2, max_len=64)
+    whole, _, _ = eng.ServingEngine(
+        eng.make_backend(cfg, params), ecfg, traffic.Clock(0.0, 0.0)).run(reqs)
+    chunked, _, s = eng.ServingEngine(
+        eng.make_backend(cfg, params, prefill_chunk=8), ecfg,
+        traffic.Clock(0.0, 0.0)).run(reqs)
+    assert s["finished"] == len(reqs)
+    assert chunked == whole
+    b = eng.make_backend(cfg, params, kv="int8", prefill_chunk=8)
+    assert isinstance(b, eng.Int8KVSlots)       # fused path can't chunk
+    out_i8, _, s8 = eng.ServingEngine(b, ecfg,
+                                      traffic.Clock(0.0, 0.0)).run(reqs)
+    assert s8["finished"] == len(reqs)
