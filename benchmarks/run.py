@@ -315,13 +315,14 @@ def serve(rows):
     import jax
     import jax.numpy as jnp
     import numpy as np
+    from repro.cache_layout import CacheLayout
     from repro.config import get_arch, reduced
     from repro.models import transformer as tf
     from repro.serving import EngineConfig, ServingEngine, TrafficConfig, \
         generate
     from repro.serving.engine import make_backend
     from repro.serving.roofline import decode_attn_read_bytes, \
-        modeled_decode_step
+        max_concurrent_slots, modeled_decode_step
 
     def decode_parity(fcfg, fparams, max_len=32):
         """dense vs flash decode_step logits on ragged prefilled slots
@@ -359,10 +360,11 @@ def serve(rows):
     ecfg = EngineConfig(n_slots=4, max_len=64)
 
     out = {}
-    for name, kv, refill in (("static", "native", "static"),
-                             ("continuous", "native", "continuous"),
-                             ("continuous_int8", "int8", "continuous")):
-        backend = make_backend(cfg, params, kv=kv)
+    for name, bits, refill in (("static", 16, "static"),
+                               ("continuous", 16, "continuous"),
+                               ("continuous_int8", 8, "continuous")):
+        backend = make_backend(cfg, params,
+                               layout=CacheLayout(kv_bits=bits))
         vcfg = dataclasses.replace(ecfg, refill=refill)
         ServingEngine(backend, vcfg).run(requests)       # compile/warm
         _, _, s = ServingEngine(backend, vcfg).run(requests)
@@ -372,6 +374,10 @@ def serve(rows):
               "measured")
         _emit(rows, f"serve.{name}.decode_steps", s["decode_steps"],
               "measured")
+        _emit(rows, f"serve.{name}.max_concurrent_slots",
+              s["max_concurrent_slots"], "measured")
+        _emit(rows, f"serve.{name}.kv_mb_per_step",
+              s["kv_bytes_per_step"] / 1e6, "derived")
     _emit(rows, "serve.continuous_vs_static.speedup",
           out["continuous"]["throughput_tok_s"]
           / out["static"]["throughput_tok_s"], "measured")
@@ -379,10 +385,11 @@ def serve(rows):
     # -- decode hot path: dense einsum vs Pallas flash-decode (interpret
     # mode on this CPU container) vs int8-fused, same engine + workload
     out["decode_impls"] = {}
-    for name, kv, impl in (("dense", "native", "dense"),
-                           ("flash", "native", "flash"),
-                           ("int8_fused", "int8", "flash")):
-        backend = make_backend(cfg, params, kv=kv, decode_impl=impl)
+    for name, bits, impl in (("dense", 16, "dense"),
+                             ("flash", 16, "flash"),
+                             ("int8_fused", 8, "flash")):
+        backend = make_backend(cfg, params,
+                               layout=CacheLayout(kv_bits=bits, impl=impl))
         ServingEngine(backend, ecfg).run(requests)        # compile/warm
         _, _, s = ServingEngine(backend, ecfg).run(requests)
         out["decode_impls"][name] = s
@@ -390,6 +397,32 @@ def serve(rows):
               "measured")
         _emit(rows, f"serve.decode.{name}.decode_steps", s["decode_steps"],
               "measured")
+
+    # -- cache layouts: dense vs paged (shared block pool, prefix sharing,
+    # copy-on-write), same workload and slots.  Paged must stay token-exact;
+    # its resident KV bytes track live blocks instead of slots*max_len
+    out["layouts"] = {}
+    layout_outputs = {}
+    for name, lay in (("dense", CacheLayout()),
+                      ("paged", CacheLayout(kind="paged", block_size=8)),
+                      ("paged_int8", CacheLayout(kind="paged", kv_bits=8,
+                                                 block_size=8))):
+        backend = make_backend(cfg, params, layout=lay)
+        vcfg = dataclasses.replace(ecfg, layout=lay)
+        ServingEngine(backend, vcfg).run(requests)        # compile/warm
+        o, _, s = ServingEngine(backend, vcfg).run(requests)
+        layout_outputs[name] = o
+        out["layouts"][name] = s
+        _emit(rows, f"serve.layout.{name}.tok_s", s["throughput_tok_s"],
+              "measured")
+        _emit(rows, f"serve.layout.{name}.max_concurrent_slots",
+              s["max_concurrent_slots"], "measured")
+        _emit(rows, f"serve.layout.{name}.kv_mb_per_step",
+              s["kv_bytes_per_step"] / 1e6, "derived")
+    out["layouts"]["paged_token_exact"] = bool(
+        layout_outputs["paged"] == layout_outputs["dense"])
+    _emit(rows, "serve.layout.paged_token_exact",
+          int(out["layouts"]["paged_token_exact"]), "measured")
 
     # -- per-family sweep: host-CPU reduced archs measure the engine; the
     # roofline terms model the FULL arch's TPU decode step (compute vs
@@ -409,15 +442,53 @@ def serve(rows):
             frame_dim=fcfg.d_model if fcfg.encoder_layers else 0))
         backend = make_backend(fcfg, fparams)
         entry = {}
+        dense_outputs = None
         for refill in ("static", "continuous"):
             vcfg = dataclasses.replace(ecfg, refill=refill)
             ServingEngine(backend, vcfg).run(freqs)      # compile/warm
-            _, _, s = ServingEngine(backend, vcfg).run(freqs)
+            o, _, s = ServingEngine(backend, vcfg).run(freqs)
+            if refill == "continuous":
+                dense_outputs = o
             entry[refill] = s
             _emit(rows, f"serve.{fam}.{refill}.tok_s",
                   s["throughput_tok_s"], "measured")
             _emit(rows, f"serve.{fam}.{refill}.decode_steps",
                   s["decode_steps"], "measured")
+        # paged-vs-dense token parity on THIS family (the per-family
+        # record the CI paged gate checks actually ran): same workload
+        # through the paged layout must reproduce the dense tokens exactly
+        paged_layout = CacheLayout(kind="paged", block_size=8)
+        pbackend = make_backend(fcfg, fparams, layout=paged_layout)
+        pcfg = dataclasses.replace(ecfg, layout=paged_layout)
+        po, _, ps = ServingEngine(pbackend, pcfg).run(freqs)
+        entry["paged_parity"] = {
+            "ran": True, "ok": bool(po == dense_outputs),
+            "backend": type(pbackend).__name__,
+            "shared_hits": ps["paged"]["shared_hits"],
+            "cow_events": ps["paged"]["cow_events"],
+        }
+        _emit(rows, f"serve.{fam}.paged_token_exact",
+              int(entry["paged_parity"]["ok"]), "measured")
+        # modeled admission capacity at one HBM budget: dense reserves
+        # max_len rows per slot, paged maps only live blocks.  Strictly
+        # more slots whenever the family pages any KV (rwkv6 pages none —
+        # its O(1) recurrent rows are identical under both layouts)
+        budget, s_max, live = 8e9, 2048, 512
+        adm_layout = CacheLayout(kind="paged", block_size=16)
+        dense_slots = max_concurrent_slots(full, budget, s_max, live,
+                                           CacheLayout())
+        paged_slots = max_concurrent_slots(full, budget, s_max, live,
+                                           adm_layout)
+        entry["paged_admission"] = {
+            "hbm_budget_gb": budget / 1e9, "max_len": s_max,
+            "mean_live_len": live,
+            "dense_slots": dense_slots, "paged_slots": paged_slots,
+            "pageable": any(k == "attn" for k in full.layer_kinds()),
+        }
+        _emit(rows, f"serve.{fam}.admission.dense_slots", dense_slots,
+              "derived")
+        _emit(rows, f"serve.{fam}.admission.paged_slots", paged_slots,
+              "derived")
         _emit(rows, f"serve.{fam}.continuous_vs_static.speedup",
               entry["continuous"]["throughput_tok_s"]
               / entry["static"]["throughput_tok_s"], "measured")

@@ -1,0 +1,127 @@
+"""One explicit KV-cache layout spec shared by kernels, models, serving, launch.
+
+Before this module the decode-cache configuration was smeared across stacked
+dispatch sites: ``make_backend(kv=..., decode_impl=...)``, int8 booleans in
+the backends, per-class layout assumptions (ring vs linear window), and four
+separate kernel entry points.  :class:`CacheLayout` collapses all of that
+into one frozen, hashable value that
+
+* :func:`repro.kernels.ops.decode_attention` keys its dispatch (and the
+  :mod:`repro.kernels.ref` oracles) off,
+* :mod:`repro.serving.engine` uses to pick a slot backend and (for
+  ``kind="paged"``) to size the shared block pool, and
+* ``launch/serve.py`` builds from CLI flags.
+
+Fields:
+
+``kind``
+    ``"dense"`` — per-slot padded rows ``(n_slots, S_max, ...)`` (the
+    classical layout); ``"paged"`` — a shared block pool
+    ``(num_blocks, block_size, ...)`` plus per-slot block tables, so
+    resident KV is bounded by *live tokens* instead of padded capacity.
+``kv_bits``
+    16 (model dtype) or 8 (int8 values + per-(position, head) f32 scales).
+``impl``
+    decode-attention implementation: ``"dense"`` (XLA einsum over the
+    padded / gathered cache), ``"flash"`` (Pallas flash-decode kernel,
+    length-aware block skipping; block-table indexed when paged), or
+    ``"ref"`` (pure-jnp oracle).
+``block_size``
+    paged only: tokens per pool block (also the paged kernel's KV tile).
+``num_blocks``
+    paged only: pool capacity in blocks; 0 = auto
+    (:func:`resolved_num_blocks` — dense-equivalent capacity plus the
+    reserved null block).
+``prefix_sharing``
+    paged only: hash-index full prompt blocks so identical live prefixes
+    share physical blocks (copy-on-write on first divergent write).
+``window`` / ``ring``
+    kernel-level masking variant of *one attention call*: sliding-window
+    band over a linear cache, or gemma's wraparound ring buffer.  Engine
+    level layouts keep the defaults; per-layer call sites
+    ``dataclasses.replace`` them in.
+``block_k``
+    flash-decode KV tile for the dense layout (paged tiles are
+    ``block_size``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["CacheLayout", "resolved_num_blocks", "blocks_per_slot",
+           "layout_from_legacy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheLayout:
+    kind: str = "dense"          # dense | paged
+    kv_bits: int = 16            # 16 | 8
+    impl: str = "dense"          # ref | dense | flash
+    block_size: int = 16         # paged: tokens per pool block
+    num_blocks: int = 0          # paged: pool capacity (0 = auto)
+    prefix_sharing: bool = True  # paged: hash-share full prompt blocks
+    window: int = 0              # sliding-window band (one attention call)
+    ring: bool = False           # ring-buffer window layout
+    block_k: int = 128           # flash-decode KV tile (dense layout)
+
+    def __post_init__(self):
+        if self.kind not in ("dense", "paged"):
+            raise ValueError(f"kind {self.kind!r} (want dense|paged)")
+        if self.kv_bits not in (8, 16):
+            raise ValueError(f"kv_bits {self.kv_bits!r} (want 8|16)")
+        if self.impl not in ("ref", "dense", "flash"):
+            raise ValueError(f"impl {self.impl!r} (want ref|dense|flash)")
+        if self.block_size <= 0:
+            raise ValueError(f"block_size must be positive: {self.block_size}")
+        if self.ring and self.window <= 0:
+            raise ValueError("ring=True needs window > 0")
+
+    @property
+    def paged(self) -> bool:
+        return self.kind == "paged"
+
+    @property
+    def quantized(self) -> bool:
+        return self.kv_bits == 8
+
+    def replace(self, **kw) -> "CacheLayout":
+        return dataclasses.replace(self, **kw)
+
+
+def blocks_per_slot(layout: CacheLayout, max_len: int) -> int:
+    """Block-table width: virtual blocks covering one slot's serving window.
+
+    ``max_len`` must be a multiple of ``block_size`` so dense and paged
+    states describe the same position space (validated here, once, for
+    every consumer)."""
+    if max_len % layout.block_size:
+        raise ValueError(
+            f"max_len={max_len} must be a multiple of "
+            f"block_size={layout.block_size} for the paged layout")
+    return max_len // layout.block_size
+
+
+def resolved_num_blocks(layout: CacheLayout, n_slots: int,
+                        max_len: int) -> int:
+    """Pool capacity in blocks: ``layout.num_blocks``, or (when 0) the
+    dense-equivalent capacity ``n_slots * max_len / block_size``.  Either
+    way one extra block is included: block 0 is the reserved *null sink*
+    (never allocated; dead table entries point at it)."""
+    nb = blocks_per_slot(layout, max_len)
+    cap = layout.num_blocks if layout.num_blocks > 0 else n_slots * nb
+    return cap + 1
+
+
+def layout_from_legacy(kv=None, decode_impl=None,
+                       base: CacheLayout = None) -> CacheLayout:
+    """Fold the deprecated ``make_backend(kv=..., decode_impl=...)`` /
+    ``--kv`` / ``--decode-impl`` knobs into a :class:`CacheLayout` (the
+    one-release compatibility shim's translation table)."""
+    lay = base if base is not None else CacheLayout()
+    if kv is not None:
+        if kv not in ("native", "int8"):
+            raise ValueError(f"unknown kv backend {kv!r}")
+        lay = lay.replace(kv_bits=8 if kv == "int8" else 16)
+    if decode_impl is not None:
+        lay = lay.replace(impl=decode_impl)
+    return lay

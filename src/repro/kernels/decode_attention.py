@@ -39,6 +39,19 @@ Three fused variants share the one kernel body:
   probabilities before the PV matmul), so the quantized path attends
   without ever materializing a bf16 cache.
 
+**Paged** variants (:func:`flash_decode_attention_paged`,
+:func:`flash_decode_attention_paged_quant`) read the same kernel body
+against a *shared block pool* ``(num_blocks, block_size, Hk, D)`` plus a
+per-slot block table ``(B, blocks_per_slot)``: the block table is scalar-
+prefetched alongside ``lengths`` and the KV BlockSpec index map becomes a
+table lookup — grid step ``ki`` of slot ``b`` fetches physical block
+``tables[b, ki]`` instead of contiguous row-block ``ki``.  Virtual
+positions are still ``ki * block_size + iota``, so the full / window / ring
+masks and the length-skipping clamp are identical to the dense-layout
+kernel; only *where a block's rows live* changes.  Dead table entries point
+at the reserved null block 0 and are never touched (the clamp keeps ``ki``
+inside the live range).
+
 Empty slots (``len == 0``) produce exactly-zero outputs in every variant —
 the semantics the pure-jnp oracle in :mod:`repro.kernels.ref` pins and the
 dense paths in :mod:`repro.models.attention` / :mod:`repro.models.kvquant`
@@ -277,4 +290,126 @@ def flash_decode_attention_quant(q, k_q, k_s, v_q, v_s, lengths, *,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lengths, qg, k_q, k_s, v_q, v_s)
+    return out[:, :, :G].reshape(B, 1, H, D)
+
+
+def flash_decode_attention_paged(q, k_pool, v_pool, block_tables, lengths, *,
+                                 window: int = 0, ring: bool = False,
+                                 softmax_scale=None,
+                                 interpret: bool = False):
+    """Paged flash decode: q (B, 1, H, D); k/v pools (N, bs, Hk, D) shared
+    across slots; block_tables (B, nb) int32 physical block ids; lengths
+    (B,) live virtual prefix.  The KV tile is one pool block (``block_k ==
+    block_size``) and the index map dereferences the prefetched table."""
+    B, _, H, D = q.shape
+    N, bs, Hk, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    S = nb * bs                              # virtual position space
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    qg, G, G_pad = _prep_q(q, Hk)
+    lengths = lengths.astype(jnp.int32)
+    block_tables = block_tables.astype(jnp.int32)
+
+    def kv_map(b, h, ki, lens, tables):
+        lo, hi = _live_block_bounds(lens[b], bs, S, window, ring)
+        return (tables[b, jnp.clip(ki, lo, hi)], 0, h, 0)
+
+    kernel_body = functools.partial(
+        _decode_kernel, scale=scale, window=window, ring=ring,
+        block_k=bs, n_kv=nb, S=S)
+
+    def kernel(lens_ref, tables_ref, q_ref, k_ref, v_ref, o_ref,
+               m_scr, l_scr, acc_scr):
+        kernel_body(lens_ref, q_ref, k_ref, v_ref, o_ref,
+                    m_scr, l_scr, acc_scr)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hk, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, G_pad, D),
+                         lambda b, h, ki, lens, tables: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D), kv_map),
+            pl.BlockSpec((1, bs, 1, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G_pad, D),
+                               lambda b, h, ki, lens, tables: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G_pad, LANES), jnp.float32),
+            pltpu.VMEM((G_pad, LANES), jnp.float32),
+            pltpu.VMEM((G_pad, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hk, G_pad, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths, block_tables, qg, k_pool, v_pool)
+    return out[:, :, :G].reshape(B, 1, H, D)
+
+
+def flash_decode_attention_paged_quant(q, k_q_pool, k_s_pool, v_q_pool,
+                                       v_s_pool, block_tables, lengths, *,
+                                       softmax_scale=None,
+                                       interpret: bool = False):
+    """Paged int8 fused variant: value pools (N, bs, Hk, D) int8, scale
+    pools (N, bs, Hk) f32; in-kernel tile dequant exactly as the dense-
+    layout quant kernel, with the block-table index map of the paged one."""
+    B, _, H, D = q.shape
+    N, bs, Hk, _ = k_q_pool.shape
+    nb = block_tables.shape[1]
+    S = nb * bs
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    qg, G, G_pad = _prep_q(q, Hk)
+    lengths = lengths.astype(jnp.int32)
+    block_tables = block_tables.astype(jnp.int32)
+    # scales travel as (N, Hk, bs): lane-major along the blocked axis
+    k_s_pool = k_s_pool.transpose(0, 2, 1)
+    v_s_pool = v_s_pool.transpose(0, 2, 1)
+
+    def kv_map(b, h, ki, lens, tables):
+        lo, hi = _live_block_bounds(lens[b], bs, S, 0, False)
+        return (tables[b, jnp.clip(ki, lo, hi)], 0, h, 0)
+
+    def scale_map(b, h, ki, lens, tables):
+        lo, hi = _live_block_bounds(lens[b], bs, S, 0, False)
+        return (tables[b, jnp.clip(ki, lo, hi)], h, 0)
+
+    def kernel(lens_ref, tables_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref,
+               o_ref, m_scr, l_scr, acc_scr):
+        _decode_kernel(lens_ref, q_ref, kq_ref, vq_ref, o_ref,
+                       m_scr, l_scr, acc_scr, scale=scale, window=0,
+                       ring=False, block_k=bs, n_kv=nb, S=S,
+                       quant=True, ks_ref=ks_ref, vs_ref=vs_ref)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hk, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, G_pad, D),
+                         lambda b, h, ki, lens, tables: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D), kv_map),
+            pl.BlockSpec((1, 1, bs), scale_map),
+            pl.BlockSpec((1, bs, 1, D), kv_map),
+            pl.BlockSpec((1, 1, bs), scale_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G_pad, D),
+                               lambda b, h, ki, lens, tables: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G_pad, LANES), jnp.float32),
+            pltpu.VMEM((G_pad, LANES), jnp.float32),
+            pltpu.VMEM((G_pad, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hk, G_pad, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths, block_tables, qg, k_q_pool, k_s_pool, v_q_pool, v_s_pool)
     return out[:, :, :G].reshape(B, 1, H, D)

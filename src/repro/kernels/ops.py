@@ -58,6 +58,82 @@ def flash_attention(q, k, v, *, causal=True, window=0, softmax_scale=None,
 
 # -- flash-decode attention ---------------------------------------------------
 
+@partial(jax.jit, static_argnames=("layout", "softmax_scale"))
+def decode_attention(q, cache, lengths, *, layout, softmax_scale=None):
+    """THE decode-attention entry point, keyed off one
+    :class:`repro.cache_layout.CacheLayout` instead of four separate
+    wrappers.  ``cache`` is a dict whose keys the layout determines:
+
+    * dense bf16 — ``{"k", "v"}`` with (B, S, Hk, D) per-slot rows;
+    * dense int8 — ``{"k_q", "k_s", "v_q", "v_s"}`` (scales (B, S, Hk));
+    * paged — the same value keys holding *pool* arrays (N, bs, Hk, D)
+      (scales (N, bs, Hk)), plus ``"block_table"`` (B, nb) int32.
+
+    ``layout.impl`` selects ref oracle / dense XLA einsum / Pallas flash
+    kernel; ``layout.window`` / ``layout.ring`` the masking variant (int8
+    supports full-cache masking only, matching the fused kernels).  The
+    legacy ``flash_decode`` / ``flash_decode_quant`` wrappers below remain
+    as thin shims over the same kernels."""
+    if layout.quantized and (layout.window or layout.ring):
+        raise ValueError("int8 decode supports full-cache masking only")
+    interp = _interpret()
+    if layout.paged:
+        table = cache["block_table"]
+        if layout.quantized:
+            args = (cache["k_q"], cache["k_s"], cache["v_q"], cache["v_s"])
+            if layout.impl == "ref":
+                return ref.decode_attention_paged_quant(
+                    q, *args, table, lengths, softmax_scale=softmax_scale)
+            if layout.impl == "dense":
+                from repro.models import kvquant
+                return kvquant.decode_attention_quant(
+                    q, *(ref.paged_gather(a, table) for a in args), lengths,
+                    softmax_scale=softmax_scale, impl="dense")
+            return _decode.flash_decode_attention_paged_quant(
+                q, *args, table, lengths, softmax_scale=softmax_scale,
+                interpret=interp)
+        if layout.impl == "ref":
+            return ref.decode_attention_paged(
+                q, cache["k"], cache["v"], table, lengths,
+                window=layout.window, ring=layout.ring,
+                softmax_scale=softmax_scale)
+        if layout.impl == "dense":
+            from repro.models import attention
+            return attention.decode_attention(
+                q, ref.paged_gather(cache["k"], table),
+                ref.paged_gather(cache["v"], table), lengths,
+                window=layout.window, ring=layout.ring,
+                softmax_scale=softmax_scale, impl="dense")
+        return _decode.flash_decode_attention_paged(
+            q, cache["k"], cache["v"], table, lengths, window=layout.window,
+            ring=layout.ring, softmax_scale=softmax_scale, interpret=interp)
+    if layout.quantized:
+        args = (cache["k_q"], cache["k_s"], cache["v_q"], cache["v_s"])
+        if layout.impl == "ref":
+            return ref.decode_attention_quant(q, *args, lengths,
+                                              softmax_scale=softmax_scale)
+        if layout.impl == "dense":
+            from repro.models import kvquant
+            return kvquant.decode_attention_quant(
+                q, *args, lengths, softmax_scale=softmax_scale, impl="dense")
+        return _decode.flash_decode_attention_quant(
+            q, *args, lengths, softmax_scale=softmax_scale,
+            block_k=layout.block_k, interpret=interp)
+    if layout.impl == "ref":
+        return ref.decode_attention(q, cache["k"], cache["v"], lengths,
+                                    window=layout.window, ring=layout.ring,
+                                    softmax_scale=softmax_scale)
+    if layout.impl == "dense":
+        from repro.models import attention
+        return attention.decode_attention(
+            q, cache["k"], cache["v"], lengths, window=layout.window,
+            ring=layout.ring, softmax_scale=softmax_scale, impl="dense")
+    return _decode.flash_decode_attention(
+        q, cache["k"], cache["v"], lengths, window=layout.window,
+        ring=layout.ring, softmax_scale=softmax_scale,
+        block_k=layout.block_k, interpret=interp)
+
+
 @partial(jax.jit, static_argnames=("window", "ring", "softmax_scale",
                                    "block_k", "impl"))
 def flash_decode(q, k_cache, v_cache, lengths, *, window=0, ring=False,

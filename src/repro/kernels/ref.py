@@ -94,6 +94,37 @@ def decode_attention_quant(q, k_q, k_s, v_q, v_s, lengths, *,
     return pv.reshape(B, 1, H, D).astype(q.dtype)
 
 
+def paged_gather(pool, table):
+    """Gather a slot-contiguous view out of a shared block pool.
+
+    pool (N, bs, ...) + table (B, nb) int32 -> (B, nb*bs, ...): the dense-
+    layout cache the paged layout virtualizes (dead entries gather the null
+    block's rows, which every consumer masks by length)."""
+    B, nb = table.shape
+    bs = pool.shape[1]
+    return pool[table.reshape(-1)].reshape((B, nb * bs) + pool.shape[2:])
+
+
+def decode_attention_paged(q, k_pool, v_pool, block_tables, lengths, *,
+                           window=0, ring=False, softmax_scale=None):
+    """Paged oracle: gather pool blocks into the dense layout, then attend."""
+    return decode_attention(q, paged_gather(k_pool, block_tables),
+                            paged_gather(v_pool, block_tables), lengths,
+                            window=window, ring=ring,
+                            softmax_scale=softmax_scale)
+
+
+def decode_attention_paged_quant(q, k_q_pool, k_s_pool, v_q_pool, v_s_pool,
+                                 block_tables, lengths, *,
+                                 softmax_scale=None):
+    return decode_attention_quant(
+        q, paged_gather(k_q_pool, block_tables),
+        paged_gather(k_s_pool, block_tables),
+        paged_gather(v_q_pool, block_tables),
+        paged_gather(v_s_pool, block_tables), lengths,
+        softmax_scale=softmax_scale)
+
+
 # ---------------------------------------------------------------------------
 # MoE router: softmax + top-k (first-occurrence argmax tie-break)
 # ---------------------------------------------------------------------------

@@ -24,6 +24,18 @@ chunk N`` streams uniform-family prompts through prefill in fixed chunks:
   PYTHONPATH=src python -m repro.launch.serve --reduced --arch olmo-1b \\
       --decode-impl flash --prefill-chunk 8 --kv int8
 
+``--cache-layout paged`` switches the KV cache to the shared block pool
+with prefix sharing and copy-on-write (``--block-size`` rows per block,
+``--num-blocks`` to cap the pool below the dense footprint,
+``--no-prefix-sharing`` to disable prompt dedup).  All the cache knobs —
+paging, int8, decode impl — are one :class:`repro.cache_layout.CacheLayout`
+under the hood:
+
+  PYTHONPATH=src python -m repro.launch.serve --reduced --arch olmo-1b \\
+      --cache-layout paged --block-size 16 --decode-impl flash
+  PYTHONPATH=src python -m repro.launch.serve --reduced --arch gemma3-1b \\
+      --cache-layout paged --kv int8
+
 ``--mode raw`` keeps the original fixed-batch decode-loop microbenchmark:
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \\
@@ -37,6 +49,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.cache_layout import CacheLayout
 from repro.config import get_arch, list_archs, reduced
 from repro.models import transformer as tf
 from repro.models.transformer import ModelCtx
@@ -68,12 +81,20 @@ def run_engine(args) -> int:
         image_grid=(2, 2) if cfg.pos_type == "mrope" else ())
     requests = generate(tcfg)
 
+    # every cache knob (paging, precision, decode impl) folds into one
+    # CacheLayout; the legacy --kv/--decode-impl flags map onto it
+    layout = CacheLayout(kind=args.cache_layout,
+                         kv_bits=8 if args.kv == "int8" else 16,
+                         impl=args.decode_impl,
+                         block_size=args.block_size,
+                         num_blocks=args.num_blocks,
+                         prefix_sharing=not args.no_prefix_sharing)
     ecfg = EngineConfig(n_slots=args.slots, max_len=args.max_len,
                         queue_capacity=args.queue_capacity,
-                        refill=args.refill, sample_seed=args.seed)
+                        refill=args.refill, sample_seed=args.seed,
+                        layout=layout, prefill_chunk=args.prefill_chunk)
     try:
-        backend = make_backend(cfg, params, kv=args.kv,
-                               decode_impl=args.decode_impl,
+        backend = make_backend(cfg, params, layout=layout,
                                prefill_chunk=args.prefill_chunk)
     except ValueError as e:
         raise SystemExit(str(e))
@@ -83,7 +104,8 @@ def run_engine(args) -> int:
         ServingEngine(backend, ecfg).run(requests)
     outputs, records, summary = ServingEngine(backend, ecfg).run(requests)
 
-    title = (f"{cfg.name} kv={args.kv} refill={args.refill} "
+    title = (f"{cfg.name} {args.cache_layout} kv={args.kv} "
+             f"refill={args.refill} "
              f"slots={args.slots} {args.process}@{args.rate:g}req/s")
     print(format_report(summary, title))
     if args.json:
@@ -139,6 +161,21 @@ def main(argv=None) -> int:
     ap.add_argument("--process", default="poisson",
                     choices=("poisson", "bursty"))
     ap.add_argument("--kv", default="native", choices=("native", "int8"))
+    ap.add_argument("--cache-layout", default="dense",
+                    choices=("dense", "paged"),
+                    help="KV cache layout: dense per-slot (B, S, ...) rows "
+                         "or the shared block pool with per-slot block "
+                         "tables, prefix sharing and copy-on-write")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged layout: KV rows per physical block")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="paged layout: pool size in blocks (0 = auto: one "
+                         "dense footprint, slots*max_len/block_size); set "
+                         "below auto to oversubscribe and exercise "
+                         "admission queueing")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="paged layout: disable content-hash prompt-prefix "
+                         "block sharing")
     ap.add_argument("--decode-impl", default="dense",
                     choices=("dense", "flash"),
                     help="decode-attention hot path: dense XLA einsum over "

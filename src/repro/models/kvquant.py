@@ -74,6 +74,16 @@ def cache_insert(cache_q, cache_s, pos, k_new):
     return cache_q, cache_s
 
 
+def cache_insert_paged(pool_q, pool_s, phys, off, k_new):
+    """Paged twin of :func:`cache_insert`: pools (N, bs, Hk, D) / (N, bs,
+    Hk); ``phys``/``off`` (B,) physical block and in-block row per slot
+    (write-table resolved — unowned slots target the null block 0)."""
+    q, s = quantize_kv(k_new)
+    pool_q = pool_q.at[phys, off].set(q)
+    pool_s = pool_s.at[phys, off].set(s)
+    return pool_q, pool_s
+
+
 def init_model_quant_cache(cfg, batch: int, max_len: int) -> Dict:
     """Quantized decode cache shaped for an ArchConfig (uniform family:
     stacked per-layer K/V, the layout serving's Int8KVBackend scatters
@@ -86,6 +96,31 @@ def init_model_quant_cache(cfg, batch: int, max_len: int) -> Dict:
                             cfg.num_layers)
 
 
+def init_paged_quant_cache(cfg, n_slots: int, max_len: int, *,
+                           num_blocks: int, block_size: int) -> Dict:
+    """Paged int8 decode cache (uniform family): pooled quantized values
+    ``(L, num_blocks, block_size, Hk, D)`` int8 + pooled scales
+    ``(L, num_blocks, block_size, Hk)`` f32, with the same read/write block
+    tables as :func:`transformer.init_paged_slots`."""
+    from repro.models import transformer as tf
+    if tf.family(cfg) != "uniform":
+        raise NotImplementedError(
+            f"int8 KV cache supports the uniform family, not {tf.family(cfg)}")
+    if max_len % block_size:
+        raise ValueError(f"max_len={max_len} not a multiple of "
+                         f"block_size={block_size}")
+    L, Hk, D = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    tbl = jnp.zeros((n_slots, max_len // block_size), jnp.int32)
+    return {
+        "k_q": jnp.zeros((L, num_blocks, block_size, Hk, D), jnp.int8),
+        "k_s": jnp.zeros((L, num_blocks, block_size, Hk), jnp.float32),
+        "v_q": jnp.zeros((L, num_blocks, block_size, Hk, D), jnp.int8),
+        "v_s": jnp.zeros((L, num_blocks, block_size, Hk), jnp.float32),
+        "block_table": tbl, "write_table": tbl,
+        "len": jnp.zeros((n_slots,), jnp.int32),
+    }
+
+
 def quant_decode_step(cfg, params, cache: Dict, tokens, ctx=None):
     """One decode step against the int8 cache — the quantized twin of
     ``transformer.decode_step`` for the uniform family.
@@ -93,7 +128,9 @@ def quant_decode_step(cfg, params, cache: Dict, tokens, ctx=None):
     tokens (B, 1) -> (logits (B, 1, V), new_cache).  Per-layer K/V for the
     incoming token are quantized on insert; attention runs via
     :func:`decode_attention_quant` so the cache is never dequantized in
-    full."""
+    full.  A paged cache (``"block_table"`` present — built by
+    :func:`init_paged_quant_cache`) inserts through the write table and
+    attends through the read table via the unified layout dispatch."""
     from repro.models import layers
     from repro.models import transformer as tf
     if tf.family(cfg) != "uniform":
@@ -103,16 +140,34 @@ def quant_decode_step(cfg, params, cache: Dict, tokens, ctx=None):
     B = tokens.shape[0]
     pos = cache["len"]                              # (B,) per-row lengths
     h = layers.embed_tokens(params["embed"], tokens)
+    paged = "block_table" in cache
+    if paged:
+        from repro.cache_layout import CacheLayout
+        from repro.kernels import ops
+        bs = cache["k_q"].shape[2]
+        S = cache["block_table"].shape[1] * bs
+        phys = cache["write_table"][jnp.arange(B), pos // bs]
+        off = pos % bs
+        layout = CacheLayout(kind="paged", kv_bits=8, impl=ctx.decode_impl,
+                             block_size=bs)
 
     def body(x, inp):
         blk, k_q, k_s, v_q, v_s = inp
         hn = layers.apply_norm(cfg, blk["attn"]["norm"], x)
         q, k, v = tf._qkv(cfg, blk["attn"], hn, pos[:, None], ctx)
-        k_q, k_s = cache_insert(k_q, k_s, pos, k[:, 0])
-        v_q, v_s = cache_insert(v_q, v_s, pos, v[:, 0])
-        o = decode_attention_quant(q, k_q, k_s, v_q, v_s, pos + 1,
-                                   impl=ctx.decode_impl,
-                                   block_k=ctx.decode_block_k)
+        if paged:
+            k_q, k_s = cache_insert_paged(k_q, k_s, phys, off, k[:, 0])
+            v_q, v_s = cache_insert_paged(v_q, v_s, phys, off, v[:, 0])
+            o = ops.decode_attention(
+                q, {"k_q": k_q, "k_s": k_s, "v_q": v_q, "v_s": v_s,
+                    "block_table": cache["block_table"]},
+                jnp.minimum(pos + 1, S), layout=layout)
+        else:
+            k_q, k_s = cache_insert(k_q, k_s, pos, k[:, 0])
+            v_q, v_s = cache_insert(v_q, v_s, pos, v[:, 0])
+            o = decode_attention_quant(q, k_q, k_s, v_q, v_s, pos + 1,
+                                       impl=ctx.decode_impl,
+                                       block_k=ctx.decode_block_k)
         x = x + o.reshape(B, 1, cfg.q_dim) @ blk["attn"]["wo"]
         f_out, _ = tf.ffn_apply(cfg, blk["ffn"], x, ctx)
         x = x + f_out
@@ -123,8 +178,12 @@ def quant_decode_step(cfg, params, cache: Dict, tokens, ctx=None):
                   cache["v_q"], cache["v_s"]))
     h = layers.apply_norm(cfg, params["final_norm"], h)
     logits = layers.lm_logits(cfg, params, h)
-    return logits, {"k_q": kqs, "k_s": kss, "v_q": vqs, "v_s": vss,
-                    "len": cache["len"] + 1}
+    out = {"k_q": kqs, "k_s": kss, "v_q": vqs, "v_s": vss,
+           "len": cache["len"] + 1}
+    if paged:
+        out["block_table"] = cache["block_table"]
+        out["write_table"] = cache["write_table"]
+    return logits, out
 
 
 def quant_prefill_kv(cfg, params, batch: Dict, ctx=None):

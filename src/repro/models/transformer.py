@@ -131,6 +131,42 @@ def attn_decode(cfg: ArchConfig, p: Dict, x, position, ctx: ModelCtx,
     return out, k_cache, v_cache
 
 
+def attn_decode_paged(cfg: ArchConfig, p: Dict, x, position, ctx: ModelCtx,
+                      k_pool, v_pool, read_table, write_table, cache_len):
+    """One-token decode against a paged cache.  x (B,1,d); pools
+    (N, bs, Hk, D) shared across slots; tables (B, nb) int32; cache_len (B,).
+
+    The new K/V row lands at physical block ``write_table[b, len//bs]``,
+    row ``len % bs`` — the *write* table, so slots that do not own their
+    frontier block (shared prefix tails awaiting copy-on-write, or retired
+    slots with zeroed tables) scatter into the reserved null block 0
+    instead of corrupting a neighbour.  The engine guarantees every
+    *active* slot's frontier is exclusively owned (read == write) before
+    the step, so live tokens always land in readable rows.  Attention then
+    reads through the *read* table via the unified layout dispatch."""
+    from repro.cache_layout import CacheLayout
+    from repro.kernels import ops
+    B = x.shape[0]
+    bs = k_pool.shape[1]
+    S = read_table.shape[1] * bs                 # virtual position space
+    h = layers.apply_norm(cfg, p["norm"], x)
+    q, k, v = _qkv(cfg, p, h,
+                   position[:, None] if position.ndim == 1 else position,
+                   ctx)
+    blk = cache_len // bs
+    off = cache_len % bs
+    phys = write_table[jnp.arange(B), blk]
+    k_pool = k_pool.at[phys, off].set(k[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[phys, off].set(v[:, 0].astype(v_pool.dtype))
+    layout = CacheLayout(kind="paged", impl=ctx.decode_impl, block_size=bs)
+    valid = jnp.minimum(cache_len + 1, S)
+    o = ops.decode_attention(q, {"k": k_pool, "v": v_pool,
+                                 "block_table": read_table}, valid,
+                             layout=layout)
+    out = o.reshape(B, 1, cfg.q_dim) @ p["wo"]
+    return out, k_pool, v_pool
+
+
 def init_cross_attn(key, cfg: ArchConfig) -> Dict:
     return init_attn_block(key, cfg, cross=True)
 
@@ -327,6 +363,26 @@ def _uniform_decode(cfg, params, h, position, ctx, cache):
     h, (kcs, vcs) = jax.lax.scan(body, h, (params["blocks"],
                                            cache["k"], cache["v"]))
     return h, {"k": kcs, "v": vcs, "len": cache["len"] + 1}
+
+
+def _uniform_decode_paged(cfg, params, h, position, ctx, cache):
+    read_t = cache["block_table"]
+    write_t = cache["write_table"]
+
+    def body(x, inp):
+        blk, kp, vp = inp
+        a_out, kp, vp = attn_decode_paged(cfg, blk["attn"], x, position, ctx,
+                                          kp, vp, read_t, write_t,
+                                          cache["len"])
+        x = x + a_out
+        f_out, _ = ffn_apply(cfg, blk["ffn"], x, ctx)
+        x = x + f_out
+        return x, (kp, vp)
+
+    h, (kps, vps) = jax.lax.scan(body, h, (params["blocks"],
+                                           cache["k"], cache["v"]))
+    return h, {"k": kps, "v": vps, "block_table": read_t,
+               "write_table": write_t, "len": cache["len"] + 1}
 
 
 # --- rwkv forward ------------------------------------------------------------
@@ -1024,6 +1080,33 @@ def init_slots(cfg: ArchConfig, n_slots: int, max_len: int) -> Dict:
     return init_cache(cfg, n_slots, max_len)
 
 
+def init_paged_slots(cfg: ArchConfig, n_slots: int, max_len: int, *,
+                     num_blocks: int, block_size: int) -> Dict:
+    """Paged decode state for the uniform family: per-layer KV lives in one
+    shared pool ``(L, num_blocks, block_size, Hk, D)`` instead of per-slot
+    padded rows; slots hold only block tables.  ``block_table`` is what
+    attention *reads* through, ``write_table`` is where appends land
+    (entries the slot does not own point at the null block 0).  Both start
+    all-null: the serving engine's :class:`~repro.serving.block_pool`
+    machinery populates them at admission.  Other families page through the
+    generic pooled-leaf composition in :mod:`repro.serving.engine`."""
+    if family(cfg) != "uniform":
+        raise ValueError("init_paged_slots is the uniform-family native "
+                         f"path, not {family(cfg)!r}")
+    if max_len % block_size:
+        raise ValueError(f"max_len={max_len} not a multiple of "
+                         f"block_size={block_size}")
+    dtype = jnp.dtype(cfg.dtype)
+    Hk, D = cfg.num_kv_heads, cfg.head_dim
+    L = cfg.num_layers
+    nb = max_len // block_size
+    tbl = jnp.zeros((n_slots, nb), jnp.int32)
+    return {"k": jnp.zeros((L, num_blocks, block_size, Hk, D), dtype),
+            "v": jnp.zeros((L, num_blocks, block_size, Hk, D), dtype),
+            "block_table": tbl, "write_table": tbl,
+            "len": jnp.zeros((n_slots,), jnp.int32)}
+
+
 def _ring_rows(x, true_len, window: int):
     """Gather a prompt's K or V rows (x: (S, Hk, D), absolute positions)
     into ring-buffer layout: row ``r`` holds the *latest* position
@@ -1059,6 +1142,40 @@ def _uniform_prefill_slot(cfg, params, cache, tokens, true_len, slot, ctx,
     cache = dict(cache)
     cache["k"] = _scatter_kv(cache, "k", k, slot)
     cache["v"] = _scatter_kv(cache, "v", v, slot)
+    cache["len"] = cache["len"].at[slot].set(true_len)
+    return logits[0, true_len - 1], cache
+
+
+def _uniform_prefill_slot_paged(cfg, params, cache, tokens, true_len, slot,
+                                ctx, grid=None):
+    """Paged twin of :func:`_uniform_prefill_slot`: the same whole-prompt
+    forward, with the per-layer K/V rows scattered block-by-block through
+    the slot's *write* table.  Virtual blocks the slot does not own (shared
+    sealed prefix blocks, or table entries past the mapped span) have write
+    entry 0, so their recomputed rows land in the null block — storage is
+    deduplicated while prefill compute stays a pure function of the
+    request.  Pad rows inside owned blocks are dead by the slot length and
+    are overwritten in place by decode appends before the length reaches
+    them (the same argument as the dense layout's bucket padding)."""
+    batch = {"tokens": tokens}
+    if cfg.pos_type == "mrope":
+        batch["positions"] = mrope_prompt_positions(cfg, tokens.shape[1],
+                                                    grid)
+    logits, _, (k, v) = forward(cfg, params, batch, ctx,
+                                collect_kv=True, true_len=true_len)
+    L, _, S_p, Hk, D = k.shape
+    bs = cache["k"].shape[2]
+    pad = (-S_p) % bs
+    if pad:
+        grow = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+        k, v = jnp.pad(k, grow), jnp.pad(v, grow)
+    nbp = (S_p + pad) // bs
+    wt = cache["write_table"][slot][:nbp]                    # (nbp,)
+    cache = dict(cache)
+    cache["k"] = cache["k"].at[:, wt].set(
+        k[:, 0].reshape(L, nbp, bs, Hk, D).astype(cache["k"].dtype))
+    cache["v"] = cache["v"].at[:, wt].set(
+        v[:, 0].reshape(L, nbp, bs, Hk, D).astype(cache["v"].dtype))
     cache["len"] = cache["len"].at[slot].set(true_len)
     return logits[0, true_len - 1], cache
 
@@ -1282,6 +1399,14 @@ def prefill_into_slot(cfg: ArchConfig, params: Dict, cache: Dict, tokens,
     :func:`_uniform_prefill_slot_chunked`)."""
     fam = family(cfg)
     if fam == "uniform":
+        if "block_table" in cache:
+            if chunk > 0:
+                raise ValueError("streaming (chunked) prefill is not "
+                                 "supported on the native paged path; use "
+                                 "the pooled-leaf composition backend")
+            return _uniform_prefill_slot_paged(cfg, params, cache, tokens,
+                                               true_len, slot, ctx,
+                                               grid=grid)
         if chunk > 0 and cfg.pos_type != "mrope":
             # streaming prefill: fixed chunks through the decode
             # cache-append path (mrope prompts keep the monolithic
@@ -1320,7 +1445,10 @@ def decode_step(cfg: ArchConfig, params: Dict, cache: Dict, tokens,
         h = h + jnp.take(params["dec_pos"], cache["len"], axis=0)[:, None]
     pos = positions if positions is not None else cache["len"]
     if fam == "uniform":
-        h, cache = _uniform_decode(cfg, params, h, pos, ctx, cache)
+        if "block_table" in cache:
+            h, cache = _uniform_decode_paged(cfg, params, h, pos, ctx, cache)
+        else:
+            h, cache = _uniform_decode(cfg, params, h, pos, ctx, cache)
     elif fam == "rwkv6":
         h, cache = _rwkv_decode(cfg, params, h, ctx, cache)
     elif fam == "jamba":

@@ -14,24 +14,39 @@ package promotes the `examples/serve_lm.py` toy into a first-class engine:
 * :mod:`repro.serving.traffic` — reproducible request workloads: Poisson or
   bursty arrivals, Zipfian users and prompt lengths, per-request SLO tiers,
   encoder frames for enc-dec families.
+* :mod:`repro.serving.block_pool` — the paged cache layout's host half:
+  refcounted shared block pool, per-slot read/write block tables, chained
+  prefix hashing for prompt sharing, lazy copy-on-write.  Selected (with
+  everything else about the cache) by one
+  :class:`repro.cache_layout.CacheLayout` on ``EngineConfig.layout``.
 * :mod:`repro.serving.metrics` — throughput, TTFT, per-output-token latency,
   p50/p95/p99, and SLO attainment.
 * :mod:`repro.serving.roofline` — modeled TPU-scale decode roofline terms
-  (compute vs resident-state memory) for the full architectures.
+  (compute vs resident-state memory) for the full architectures, including
+  the dense-vs-paged admission-capacity model.
 """
+from repro.cache_layout import CacheLayout
+from repro.serving.block_pool import BlockPool, SlotTables, prefix_keys
 from repro.serving.engine import (EngineConfig, Int8KVBackend, Int8KVSlots,
-                                  NativeBackend, ServingEngine, SlotBackend,
-                                  make_backend)
+                                  NativeBackend, PagedInt8Backend,
+                                  PagedNativeBackend, PagedSlots,
+                                  ServingEngine, SlotBackend, make_backend,
+                                  serve)
 from repro.serving.metrics import RequestRecord, percentile, summarize
-from repro.serving.roofline import decode_state_bytes, modeled_decode_step
+from repro.serving.roofline import (decode_state_bytes, kv_block_bytes,
+                                    max_concurrent_slots,
+                                    modeled_decode_step, resident_kv_bytes)
 from repro.serving.traffic import (BATCH_TIER, INTERACTIVE_TIER, Clock,
                                    Request, SLOTier, TrafficConfig, generate)
 
 __all__ = [
-    "EngineConfig", "ServingEngine", "SlotBackend", "NativeBackend",
-    "Int8KVBackend", "Int8KVSlots", "make_backend",
+    "CacheLayout", "EngineConfig", "ServingEngine", "SlotBackend",
+    "NativeBackend", "Int8KVBackend", "Int8KVSlots", "PagedNativeBackend",
+    "PagedInt8Backend", "PagedSlots", "make_backend", "serve",
+    "BlockPool", "SlotTables", "prefix_keys",
     "RequestRecord", "percentile", "summarize",
-    "decode_state_bytes", "modeled_decode_step",
+    "decode_state_bytes", "modeled_decode_step", "kv_block_bytes",
+    "resident_kv_bytes", "max_concurrent_slots",
     "Request", "SLOTier", "TrafficConfig", "generate", "Clock",
     "INTERACTIVE_TIER", "BATCH_TIER",
 ]

@@ -31,12 +31,30 @@ through the same engine: uniform decoders (stacked KV rows), gemma
 rows), rwkv6 (wkv state rows), whisper (self-KV + per-slot cross-KV from
 each request's encoder frames).
 
-KV precision composes orthogonally: ``kv="int8"`` uses the fused
-int8-attention path for the uniform family (:class:`Int8KVBackend`, via
-``models.kvquant``) and the generic :class:`Int8KVSlots` composition —
-int8 values + per-(position, head) scales around any KV-bearing family's
-state — everywhere else (half the cache bytes; the decode roofline's
-memory term).
+The cache layout is one explicit spec — :class:`repro.cache_layout
+.CacheLayout` on :class:`EngineConfig` — consumed by :func:`make_backend`,
+the kernels, and the launch flags alike.  Precision (``kv_bits=8``: fused
+int8 attention for uniform via ``models.kvquant``, the generic
+:class:`Int8KVSlots` composition elsewhere) and placement (``kind="paged"``:
+a shared block pool + per-slot block tables instead of per-slot padded
+rows) compose orthogonally.  The legacy ``kv=`` / ``decode_impl=`` /
+``prefill_chunk=`` kwargs keep working for one release through deprecation
+shims that fold into a layout.
+
+Paged serving adds three scheduler-side pieces (see
+:mod:`repro.serving.block_pool`): admission maps a request's virtual
+blocks onto pooled physical blocks — adopting hash-matched *sealed* prefix
+blocks from earlier identical prompts instead of allocating; decode
+guarantees every active slot's frontier block is exclusively owned before
+the step (**copy-on-write** at the first divergent token of a shared
+tail); retirement releases refcounts, returning blocks to the free list.
+Pool exhaustion degrades to queueing: a request that cannot map its span
+goes back to the head of the admission queue and waits for retirements.
+All five families page: attention KV rows move into the pool (uniform and
+jamba stacked rows, whisper self-KV, gemma global layers), while per-slot
+recurrent and ring state (mamba, wkv, gemma sliding-window rings, whisper
+cross-KV) stays slot-resident — it is already live-bounded, which is the
+entire point of paging the linearly growing rows.
 
 Time is kept on a :class:`~repro.serving.traffic.Clock`: each model call
 advances it by measured wall time (or a pinned per-call cost in tests), and
@@ -46,7 +64,10 @@ plays out faithfully without real sleeping.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import math
 import time
+import warnings
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence
 
@@ -54,9 +75,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache_layout import (CacheLayout, blocks_per_slot,
+                                layout_from_legacy, resolved_num_blocks)
 from repro.models import kvquant
 from repro.models import transformer as tf
 from repro.serving import metrics as metrics_lib
+from repro.serving.block_pool import BlockPool, SlotTables, prefix_keys
 from repro.serving.traffic import Clock, Request
 
 
@@ -70,6 +94,8 @@ class EngineConfig:
                                         # the number of prefill recompiles)
     pad_id: int = 0
     sample_seed: int = 0                # base of the per-request RNG keys
+    layout: CacheLayout = CacheLayout()  # cache layout spec (kind/bits/impl)
+    prefill_chunk: int = 0              # uniform streaming prefill chunk
 
 
 def _bucket(n: int, quantum: int, cap: int) -> int:
@@ -152,6 +178,12 @@ class AdmissionQueue:
         """Evict and return the newest batch-tier entry (None if none)."""
         return self._tiers[False].pop() if self._tiers[False] else None
 
+    def pushback(self, item) -> None:
+        """Return an item to the *head* of its tier — used when paged
+        admission fails on pool exhaustion: the request keeps its place in
+        line and retries after retirements free blocks."""
+        self._tiers[self._interactive(item[0])].appendleft(item)
+
 
 # Which slot-state entries hold scatterable KV rows, per family (the int8
 # composition quantizes exactly these; rwkv6 carries no KV at all).
@@ -212,6 +244,12 @@ class SlotBackend:
         # static arg, one compile per distinct grid — like prompt buckets
         self._prefill = jax.jit(self._prefill_impl, static_argnames="grid",
                                 donate_argnums=donate)
+        # the layout this backend realizes (paged backends overwrite it
+        # with the full spec; make_backend stamps the resolved one)
+        if not hasattr(self, "layout"):
+            self.layout = CacheLayout(impl=self.ctx.decode_impl)
+        if hasattr(self, "_copy_impl"):
+            self._copy = jax.jit(self._copy_impl)
 
     def kv_keys(self) -> tuple:
         return KV_KEYS[self.family]
@@ -289,6 +327,11 @@ class Int8KVBackend(SlotBackend):
 
     families = ("uniform",)
 
+    def __init__(self, cfg, params, ctx: Optional[tf.ModelCtx] = None,
+                 decode_impl: Optional[str] = None):
+        super().__init__(cfg, params, ctx, decode_impl)
+        self.layout = self.layout.replace(kv_bits=8)
+
     def init_slots(self, n_slots: int, max_len: int) -> Dict:
         return kvquant.init_model_quant_cache(self.cfg, n_slots, max_len)
 
@@ -332,6 +375,7 @@ class Int8KVSlots(SlotBackend):
     def __init__(self, inner: SlotBackend):
         self.inner = inner
         super().__init__(inner.cfg, inner.params, inner.ctx)
+        self.layout = self.layout.replace(kv_bits=8)
 
     def kv_keys(self) -> tuple:
         return self.inner.kv_keys()
@@ -364,40 +408,366 @@ class Int8KVSlots(SlotBackend):
         return logits, self._quant(cache)
 
 
-def make_backend(cfg, params, ctx: Optional[tf.ModelCtx] = None,
-                 kv: str = "native", decode_impl: Optional[str] = None,
-                 prefill_chunk: int = 0):
-    """Family-registry dispatch: the backend for ``tf.family(cfg)``, with
-    the int8-KV composition applied on request (fused path for uniform,
-    :class:`Int8KVSlots` for any other KV-bearing family).
+_TABLE_KEYS = ("block_table", "write_table")
 
-    ``decode_impl`` overrides the decode-attention hot path on the
-    backend's :class:`~repro.models.transformer.ModelCtx` (``"dense"`` |
-    ``"flash"``); ``prefill_chunk > 0`` enables streaming prefill for
-    uniform-family prompts (and routes uniform int8 through the
-    :class:`Int8KVSlots` composition, whose inner native prefill chunks)."""
+
+class _PagedBackendMixin:
+    """Shared device-side plumbing of the paged backends.
+
+    ``supports_prefix_sharing`` marks backends whose prompt block content
+    is a pure function of (prompt, engine constants) — the precondition
+    for the hash index being sound.  ``set_tables`` uploads the host
+    read/write tables; ``copy_block`` is the device half of copy-on-write
+    (duplicate one physical block's rows across every pooled leaf)."""
+
+    supports_prefix_sharing = True
+
+    def set_tables(self, cache: Dict, read: np.ndarray,
+                   write: np.ndarray) -> Dict:
+        cache = dict(cache)
+        cache["block_table"] = jnp.asarray(read, jnp.int32)
+        cache["write_table"] = jnp.asarray(write, jnp.int32)
+        return cache
+
+    def copy_block(self, cache: Dict, src: int, dst: int) -> Dict:
+        return self._copy(cache, jnp.int32(src), jnp.int32(dst))
+
+
+class PagedNativeBackend(_PagedBackendMixin, SlotBackend):
+    """Native paged path for the uniform family: stacked per-layer KV in a
+    shared pool ``(L, N, bs, Hk, D)``; decode appends through the write
+    table and attends through the read table with the paged flash-decode
+    kernel (or its dense-gather twin) — see
+    :func:`transformer.init_paged_slots` / :func:`attn_decode_paged`."""
+
+    families = ("uniform",)
+
+    def __init__(self, cfg, params, ctx: Optional[tf.ModelCtx] = None,
+                 layout: CacheLayout = CacheLayout(kind="paged")):
+        self.layout = layout
+        super().__init__(cfg, params, ctx, layout.impl)
+
+    def init_slots(self, n_slots: int, max_len: int) -> Dict:
+        return tf.init_paged_slots(
+            self.cfg, n_slots, max_len,
+            num_blocks=resolved_num_blocks(self.layout, n_slots, max_len),
+            block_size=self.layout.block_size)
+
+    def _decode_impl(self, params, cache, tokens, positions=None):
+        return tf.decode_step(self.cfg, params, cache, tokens, self.ctx,
+                              positions=positions)
+
+    def _prefill_impl(self, params, cache, tokens, true_len, slot,
+                      frames=None, grid=None):
+        return tf.prefill_into_slot(self.cfg, params, cache, tokens,
+                                    true_len, slot, self.ctx, frames=frames,
+                                    grid=grid)
+
+    def _copy_impl(self, cache, src, dst):
+        cache = dict(cache)
+        for name in ("k", "v"):
+            cache[name] = cache[name].at[:, dst].set(cache[name][:, src])
+        return cache
+
+
+class PagedInt8Backend(_PagedBackendMixin, SlotBackend):
+    """Fused paged int8 path (uniform family): pooled int8 values + pooled
+    per-(position, head) scales, in-kernel tile dequantization through the
+    block-table index map (``models.kvquant`` paged twins)."""
+
+    families = ("uniform",)
+
+    def __init__(self, cfg, params, ctx: Optional[tf.ModelCtx] = None,
+                 layout: CacheLayout = CacheLayout(kind="paged", kv_bits=8)):
+        self.layout = layout
+        super().__init__(cfg, params, ctx, layout.impl)
+
+    def init_slots(self, n_slots: int, max_len: int) -> Dict:
+        return kvquant.init_paged_quant_cache(
+            self.cfg, n_slots, max_len,
+            num_blocks=resolved_num_blocks(self.layout, n_slots, max_len),
+            block_size=self.layout.block_size)
+
+    def _decode_impl(self, params, cache, tokens, positions=None):
+        if positions is not None:
+            raise NotImplementedError(
+                "fused int8 decode has no mrope positions path; "
+                "make_backend routes mrope archs through the composition")
+        return kvquant.quant_decode_step(self.cfg, params, cache, tokens,
+                                         self.ctx)
+
+    def _prefill_impl(self, params, cache, tokens, true_len, slot,
+                      frames=None, grid=None):
+        logits, (k_q, k_s, v_q, v_s) = kvquant.quant_prefill_kv(
+            self.cfg, params, {"tokens": tokens}, self.ctx)
+        bs = self.layout.block_size
+        S_p = tokens.shape[1]
+        pad = (-S_p) % bs
+        nbp = (S_p + pad) // bs
+        wt = cache["write_table"][slot][:nbp]
+        cache = dict(cache)
+        for name, upd in (("k_q", k_q), ("k_s", k_s),
+                          ("v_q", v_q), ("v_s", v_s)):
+            if pad:
+                upd = jnp.pad(upd, ((0, 0), (0, 0), (0, pad))
+                              + ((0, 0),) * (upd.ndim - 3))
+            vals = upd[:, 0].reshape((upd.shape[0], nbp, bs)
+                                     + upd.shape[3:])
+            cache[name] = cache[name].at[:, wt].set(
+                vals.astype(cache[name].dtype))
+        cache["len"] = cache["len"].at[slot].set(true_len)
+        return logits[0, true_len - 1], cache
+
+    def _copy_impl(self, cache, src, dst):
+        cache = dict(cache)
+        for name in ("k_q", "k_s", "v_q", "v_s"):
+            cache[name] = cache[name].at[:, dst].set(cache[name][:, src])
+        return cache
+
+
+class PagedSlots(_PagedBackendMixin, SlotBackend):
+    """Generic paged composition over ANY family backend — how gemma,
+    jamba, rwkv6, whisper (and compositions like int8-over-native) page
+    without family-specific pool code.
+
+    At ``init_slots`` the inner backend's dense slot state is used as a
+    *template*: every array leaf under a self-attention KV key ("k"/"v",
+    including gemma's per-layer tuple elements and the int8 composition's
+    ``kv_q``/``kv_s`` subtrees) whose per-slot length dimension equals
+    ``max_len`` is replaced by a shared pool ``(..., N, bs, ...)``.
+    Everything else — mamba conv/ssm rows, wkv state, gemma sliding-window
+    rings shorter than the serving window, whisper cross-KV — stays
+    slot-resident: that state is already live-bounded (O(1) or
+    O(window)), so paging it would add indirection without reclaiming
+    memory.  rwkv6 pages zero leaves and degenerates to the identity
+    composition (block tables exist but no pool), which keeps the five
+    families behind one code path.
+
+    Each traced step *gathers* pooled leaves into the inner backend's
+    dense layout through the read table, runs the inner family step
+    unchanged, and *scatters* updated rows back through the write table
+    (rows of shared or unmapped blocks land in the null block 0).  The
+    gather/scatter round trip is pure data movement — bit-exact — so
+    paged serving is token-exact against the dense backend by
+    construction; for the int8 composition, exact requantization of
+    untouched rows (:func:`kvquant.quantize_kv_tree`) preserves the same
+    guarantee.  On an accelerator the gathered working set is a per-step
+    activation; the *resident* state is the pool, which is what the
+    admission model prices."""
+
+    def __init__(self, inner: SlotBackend, layout: CacheLayout):
+        self.inner = inner
+        self.layout = layout
+        self._specs = None
+        super().__init__(inner.cfg, inner.params, inner.ctx)
+
+    def kv_keys(self) -> tuple:
+        return self.inner.kv_keys()
+
+    def init_slots(self, n_slots: int, max_len: int) -> Dict:
+        template = self.inner.init_slots(n_slots, max_len)
+        bs = self.layout.block_size
+        nb = blocks_per_slot(self.layout, max_len)
+        num_blocks = resolved_num_blocks(self.layout, n_slots, max_len)
+        paths, leaves = zip(*jax.tree_util.tree_flatten_with_path(
+            template)[0])
+        specs, pooled = [], []
+        for path, leaf in zip(paths, leaves):
+            ax = self._slot_axis(path, leaf, n_slots, max_len)
+            specs.append(ax)
+            if ax is None:
+                pooled.append(leaf)
+            else:
+                shape = list(leaf.shape)
+                shape[ax], shape[ax + 1] = num_blocks, bs
+                pooled.append(jnp.zeros(tuple(shape), leaf.dtype))
+        self._specs = tuple(specs)
+        state = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(template), pooled)
+        state = dict(state)
+        tbl = jnp.zeros((n_slots, nb), jnp.int32)
+        state["block_table"] = tbl
+        state["write_table"] = tbl
+        return state
+
+    @staticmethod
+    def _slot_axis(path, leaf, n_slots: int, max_len: int):
+        """Slot axis of a pageable leaf, or None.  Pageable = an array
+        under a "k"/"v" path key (self-attention KV; excludes cross_k/v,
+        mamba, wkv) whose length dim is exactly ``max_len`` — linear
+        append-at-``len`` semantics.  Shorter ring buffers stay resident.
+        Slot axis is 0 for per-layer tuple elements (n, S, ...) and 1 for
+        stacked (L, n, S, ...) entries."""
+        keyed = any(getattr(p, "key", None) in ("k", "v") for p in path)
+        if not keyed or not hasattr(leaf, "ndim"):
+            return None
+        if leaf.ndim >= 2 and leaf.shape[0] == n_slots \
+                and leaf.shape[1] == max_len:
+            return 0
+        if leaf.ndim >= 3 and leaf.shape[1] == n_slots \
+                and leaf.shape[2] == max_len:
+            return 1
+        return None
+
+    def _split(self, cache: Dict):
+        inner = {k: v for k, v in cache.items() if k not in _TABLE_KEYS}
+        flat, treedef = jax.tree_util.tree_flatten(inner)
+        return flat, treedef
+
+    def _gather(self, cache: Dict) -> Dict:
+        """Pooled state -> the inner backend's dense slot layout."""
+        rt = cache["block_table"]
+        n, nb = rt.shape
+        bs = self.layout.block_size
+        flat, treedef = self._split(cache)
+        idx = rt.reshape(-1)
+        out = []
+        for leaf, ax in zip(flat, self._specs):
+            if ax is None:
+                out.append(leaf)
+            elif ax == 0:
+                g = leaf[idx].reshape((n, nb * bs) + leaf.shape[2:])
+                out.append(g)
+            else:
+                g = leaf[:, idx].reshape(
+                    (leaf.shape[0], n, nb * bs) + leaf.shape[3:])
+                out.append(g)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def _repool(self, cache: Dict, dense: Dict) -> Dict:
+        """Scatter an updated dense state back into the pools (write
+        table: shared/unmapped rows -> null block), keep non-paged leaves
+        from the inner result, carry the tables through."""
+        wt = cache["write_table"]
+        n, nb = wt.shape
+        bs = self.layout.block_size
+        pooled_flat, _ = self._split(cache)
+        dense_flat, treedef = jax.tree_util.tree_flatten(
+            {k: v for k, v in dense.items() if k not in _TABLE_KEYS})
+        idx = wt.reshape(-1)
+        out = []
+        for pool, leaf, ax in zip(pooled_flat, dense_flat, self._specs):
+            if ax is None:
+                out.append(leaf)
+            elif ax == 0:
+                vals = leaf.reshape((n * nb, bs) + leaf.shape[2:])
+                out.append(pool.at[idx].set(vals.astype(pool.dtype)))
+            else:
+                vals = leaf.reshape((leaf.shape[0], n * nb, bs)
+                                    + leaf.shape[3:])
+                out.append(pool.at[:, idx].set(vals.astype(pool.dtype)))
+        state = dict(jax.tree_util.tree_unflatten(treedef, out))
+        state["block_table"] = cache["block_table"]
+        state["write_table"] = cache["write_table"]
+        return state
+
+    def _decode_impl(self, params, cache, tokens, positions=None):
+        logits, dense = self.inner._decode_impl(params, self._gather(cache),
+                                                tokens, positions)
+        return logits, self._repool(cache, dense)
+
+    def _prefill_impl(self, params, cache, tokens, true_len, slot,
+                      frames=None, grid=None):
+        logits, dense = self.inner._prefill_impl(
+            params, self._gather(cache), tokens, true_len, slot, frames,
+            grid=grid)
+        return logits, self._repool(cache, dense)
+
+    def _copy_impl(self, cache, src, dst):
+        flat, treedef = self._split(cache)
+        out = []
+        for leaf, ax in zip(flat, self._specs):
+            if ax is None:
+                out.append(leaf)
+            elif ax == 0:
+                out.append(leaf.at[dst].set(leaf[src]))
+            else:
+                out.append(leaf.at[:, dst].set(leaf[:, src]))
+        state = dict(jax.tree_util.tree_unflatten(treedef, out))
+        state["block_table"] = cache["block_table"]
+        state["write_table"] = cache["write_table"]
+        return state
+
+
+def _deprecated_kwargs_layout(kv, decode_impl, layout):
+    """One-release shim: fold the legacy ``kv=`` / ``decode_impl=`` kwargs
+    into a :class:`CacheLayout` (with a DeprecationWarning)."""
+    if kv is None and decode_impl is None:
+        return layout
+    warnings.warn(
+        "make_backend(kv=..., decode_impl=...) is deprecated; pass "
+        "layout=CacheLayout(kv_bits=..., impl=...) (or set it on "
+        "EngineConfig.layout) instead",
+        DeprecationWarning, stacklevel=3)
+    return layout_from_legacy(kv, decode_impl,
+                              base=layout if layout is not None
+                              else CacheLayout())
+
+
+def make_backend(cfg, params, ctx: Optional[tf.ModelCtx] = None,
+                 kv: Optional[str] = None,
+                 decode_impl: Optional[str] = None,
+                 prefill_chunk: int = 0, *,
+                 layout: Optional[CacheLayout] = None):
+    """Family-registry dispatch keyed off one :class:`CacheLayout`.
+
+    The layout picks the whole backend matrix: dense/bf16 ->
+    :class:`NativeBackend`; dense/int8 -> fused :class:`Int8KVBackend`
+    (uniform, whole-prompt prefill) or the :class:`Int8KVSlots`
+    composition; paged/bf16 -> native :class:`PagedNativeBackend`
+    (uniform) or the generic :class:`PagedSlots` composition; paged/int8
+    -> fused :class:`PagedInt8Backend` (uniform) or
+    ``PagedSlots(Int8KVSlots(native))``.  ``layout.impl`` overrides the
+    decode-attention hot path on the backend's ModelCtx when it differs
+    from the default.  ``prefill_chunk > 0`` enables streaming prefill for
+    uniform-family prompts (which forces composition backends — the fused
+    paths need the whole-prompt forward).
+
+    ``kv=`` / ``decode_impl=`` are the deprecated pre-layout kwargs; they
+    keep working for one release via :func:`_deprecated_kwargs_layout`."""
+    explicit = layout is not None or kv is not None or decode_impl is not None
+    layout = _deprecated_kwargs_layout(kv, decode_impl, layout)
+    if layout is None:
+        layout = CacheLayout()
     fam = tf.family(cfg)
     if fam not in FAMILY_BACKENDS:
         raise NotImplementedError(
             f"no serving backend registered for family {fam!r} "
             f"(have {sorted(FAMILY_BACKENDS)})")
-    if kv == "native":
-        return FAMILY_BACKENDS[fam](cfg, params, ctx, decode_impl,
-                                    prefill_chunk)
-    if kv == "int8":
+    if layout.quantized and not KV_KEYS[fam]:
+        raise ValueError(
+            f"family {fam!r} carries no KV cache; int8 KV does not "
+            f"apply (its recurrent state is O(1) per slot already)")
+    # only override a caller-supplied ModelCtx's decode impl when the
+    # layout (or legacy kwarg) explicitly asked for one
+    impl = layout.impl if explicit else None
+    if not layout.paged:
+        if not layout.quantized:
+            return FAMILY_BACKENDS[fam](cfg, params, ctx, impl,
+                                        prefill_chunk)
         if fam == "uniform" and cfg.pos_type != "mrope" and not prefill_chunk:
             # fused int8 path (whole-prompt quantized prefill).  mrope
             # archs need explicit decode positions and chunked prefill
             # needs the native cache-append path: both take the generic
             # composition below
-            return Int8KVBackend(cfg, params, ctx, decode_impl)
-        if not KV_KEYS[fam]:
-            raise ValueError(
-                f"family {fam!r} carries no KV cache; kv='int8' does not "
-                f"apply (its recurrent state is O(1) per slot already)")
-        return Int8KVSlots(FAMILY_BACKENDS[fam](cfg, params, ctx,
-                                                decode_impl, prefill_chunk))
-    raise ValueError(f"unknown kv backend {kv!r}")
+            backend = Int8KVBackend(cfg, params, ctx, impl)
+        else:
+            backend = Int8KVSlots(FAMILY_BACKENDS[fam](
+                cfg, params, ctx, impl, prefill_chunk))
+        backend.layout = layout.replace(kv_bits=8)
+        return backend
+    if fam == "uniform" and not prefill_chunk:
+        if layout.quantized:
+            if cfg.pos_type != "mrope":
+                return PagedInt8Backend(cfg, params, ctx, layout)
+        else:
+            return PagedNativeBackend(cfg, params, ctx, layout)
+    if layout.quantized:
+        inner = Int8KVSlots(FAMILY_BACKENDS[fam](cfg, params, ctx, impl,
+                                                 prefill_chunk))
+    else:
+        inner = FAMILY_BACKENDS[fam](cfg, params, ctx, impl, prefill_chunk)
+    return PagedSlots(inner, layout)
 
 
 class ServingEngine:
@@ -405,13 +775,31 @@ class ServingEngine:
 
     The scheduler never looks inside the slot state — family layout
     (stacked KV, ring buffers, recurrent rows, cross-KV) is entirely the
-    backend's business."""
+    backend's business.  With a paged backend the engine additionally owns
+    the host-side block accounting: a :class:`BlockPool` +
+    :class:`SlotTables` pair whose read/write tables it uploads to the
+    cache whenever they change, prefix-sharing admission keyed by
+    :func:`prefix_keys`, and the per-step copy-on-write walk
+    (:meth:`SlotTables.ensure_writable` -> ``backend.copy_block``)."""
 
     def __init__(self, backend, ecfg: EngineConfig = EngineConfig(),
                  clock: Optional[Clock] = None):
         self.backend, self.ecfg = backend, ecfg
         self.clock = clock if clock is not None else Clock()
         n = ecfg.n_slots
+        self.layout = getattr(backend, "layout", None) or ecfg.layout
+        self.pool: Optional[BlockPool] = None
+        self.tables: Optional[SlotTables] = None
+        self.prefix_sharing = False
+        if self.layout.paged and hasattr(backend, "set_tables"):
+            self.pool = BlockPool(
+                resolved_num_blocks(self.layout, n, ecfg.max_len),
+                self.layout.block_size)
+            self.tables = SlotTables(
+                self.pool, n, blocks_per_slot(self.layout, ecfg.max_len))
+            self.prefix_sharing = (
+                self.layout.prefix_sharing
+                and getattr(backend, "supports_prefix_sharing", False))
         init = getattr(backend, "init_slots", None) or backend.init_cache
         self.cache = init(n, ecfg.max_len)
         self.queue = AdmissionQueue()
@@ -432,8 +820,55 @@ class ServingEngine:
         self.records: List[metrics_lib.RequestRecord] = []
         self.decode_steps = 0
         self.prefills = 0
+        # KV frontier per slot (= rows filled: prompt + generated so far);
+        # the paged write path makes position _slot_len[s] writable before
+        # each decode step lands a token there
+        self._slot_len = np.zeros(n, np.int64)
+        # serve-artifact metrics: peak batch occupancy and resident KV
+        # bytes integrated over decode steps (modeled via roofline)
+        self.max_concurrent = 0
+        self._kv_bytes_sum = 0.0
 
     # -- bookkeeping helpers -------------------------------------------------
+
+    def _sync_tables(self) -> None:
+        if self.tables is not None and self.tables.dirty:
+            self.cache = self.backend.set_tables(
+                self.cache, self.tables.read, self.tables.write)
+            self.tables.dirty = False
+
+    def _share_seed(self, req: Request):
+        """Cache-namespace seed for prefix hashing: everything besides the
+        prompt tokens that shapes a prompt's KV rows (model + backend +
+        numerics config; encoder frames and the vlm patch grid for the
+        families whose self-KV depends on them)."""
+        parts: List = [getattr(self.backend.cfg, "name", ""),
+                       self.layout.kv_bits,
+                       type(self.backend).__name__,
+                       type(getattr(self.backend, "inner", None)).__name__,
+                       repr(getattr(self.backend, "ctx", None)),
+                       self.ecfg.prefill_chunk]
+        if req.frames is not None:
+            fb = np.ascontiguousarray(np.asarray(req.frames, np.float32))
+            parts.append(hashlib.blake2b(fb.tobytes(),
+                                         digest_size=8).hexdigest())
+        if req.grid is not None:
+            parts.append(tuple(req.grid))
+        return tuple(parts)
+
+    def _resident_kv_bytes(self) -> float:
+        """Modeled resident decode-state bytes right now (paged: pool
+        occupancy; dense: every slot pinned at max_len)."""
+        cfg = getattr(self.backend, "cfg", None)
+        if cfg is None or not hasattr(cfg, "layer_kinds"):
+            return 0.0
+        from repro.serving import roofline
+        if self.pool is not None:
+            return roofline.resident_kv_bytes(
+                cfg, self.ecfg.n_slots, self.ecfg.max_len, self.layout,
+                used_blocks=self.pool.used_blocks)
+        return self.ecfg.n_slots * roofline.decode_state_bytes(
+            cfg, self.ecfg.max_len, kv_bits=self.layout.kv_bits)
 
     @property
     def n_active(self) -> int:
@@ -485,11 +920,25 @@ class ServingEngine:
             jax.random.PRNGKey(self.ecfg.sample_seed), req.rid)
 
     def _start(self, slot: int, req: Request,
-               rec: metrics_lib.RequestRecord) -> None:
+               rec: metrics_lib.RequestRecord) -> bool:
         """Prefill-on-arrival into one slot; the first generated token falls
-        out of the prefill logits."""
-        rec.admitted = self.clock.now
+        out of the prefill logits.  Returns False — request untouched — when
+        the block pool cannot map the request yet (paged admission): the
+        caller requeues it behind the blocks that retiring slots free."""
         prompt = np.asarray(req.prompt, np.int32)
+        if self.tables is not None:
+            bs = self.layout.block_size
+            span = -(-min(len(prompt) + req.max_new_tokens,
+                          self.ecfg.max_len) // bs)
+            if self.prefix_sharing:
+                keys, tail = prefix_keys(req.prompt, bs,
+                                         self._share_seed(req))
+            else:
+                keys, tail = [], None
+            if not self.tables.admit(slot, keys, tail, span):
+                return False
+            self._sync_tables()
+        rec.admitted = self.clock.now
         s_pad = _bucket(len(prompt), self.ecfg.prompt_quantum,
                         self.ecfg.max_len)
         padded = np.full((1, s_pad), self.ecfg.pad_id, np.int32)
@@ -504,6 +953,10 @@ class ServingEngine:
             lambda: self.backend.prefill(self.cache, padded,
                                          len(prompt), slot, **kwargs))
         self.prefills += 1
+        if self.tables is not None:
+            # publish this prompt's self-computed blocks for later sharers
+            self.tables.seal_prompt(slot)
+            self._slot_len[slot] = len(prompt)
         key = self._request_key(req)
         first = sample_token(logits_row, req.temperature, req.top_k,
                              jax.random.fold_in(key, 0))
@@ -513,7 +966,9 @@ class ServingEngine:
         budget = min(req.max_new_tokens, self.ecfg.max_len - len(prompt))
         if first == req.eos_id or budget <= 1:
             rec.finished = self.clock.now       # slot never occupied
-            return
+            if self.tables is not None:
+                self.tables.release(slot)
+            return True
         self.slot_req[slot] = req
         self.slot_rec[slot] = rec
         self.slot_remaining[slot] = budget - 1
@@ -525,6 +980,7 @@ class ServingEngine:
             # prompt's layout (text continues all three components)
             self.slot_pos[slot] = tf.mrope_next_position(len(prompt),
                                                          req.grid)
+        return True
 
     def _refill(self) -> None:
         free = [s for s in range(self.ecfg.n_slots)
@@ -534,9 +990,33 @@ class ServingEngine:
         for s in free:
             while self.queue and self.slot_req[s] is None:
                 req, rec = self.queue.popleft()
-                self._start(s, req, rec)        # may finish instantly (EOS)
+                if self._start(s, req, rec):    # may finish instantly (EOS)
+                    continue
+                # paged admission failed: not enough free blocks.  An empty
+                # pool that still can't cover the request never will —
+                # reject; otherwise park it at the queue head until
+                # retiring slots return their blocks (graceful queueing,
+                # never corruption)
+                if self.pool is not None and self.pool.used_blocks == 0:
+                    rec.rejected = True
+                    continue
+                self.queue.pushback((req, rec))
+                self.max_concurrent = max(self.max_concurrent, self.n_active)
+                return
+        self.max_concurrent = max(self.max_concurrent, self.n_active)
 
     def _decode_once(self) -> None:
+        if self.tables is not None:
+            # make every active slot's KV frontier exclusively owned before
+            # the step writes there: COW off shared tails, claim sole-owner
+            # sealed blocks, then upload the changed tables once
+            for s in range(self.ecfg.n_slots):
+                if self.slot_req[s] is None:
+                    continue
+                cow = self.tables.ensure_writable(s, int(self._slot_len[s]))
+                if cow is not None:
+                    self.cache = self.backend.copy_block(self.cache, *cow)
+            self._sync_tables()
         positions = None
         if getattr(self.backend, "needs_positions", False):
             # (n, 1, 3): text decode advances t/h/w together per token
@@ -555,6 +1035,7 @@ class ServingEngine:
                 self.cache, tokens, positions)
         logits, self.cache = self._timed(self.clock.fixed_decode_s, call)
         self.decode_steps += 1
+        self._kv_bytes_sum += self._resident_kv_bytes()
         self.slot_pos += 1
         n = self.ecfg.n_slots
         any_sampled = any(r is not None and r.temperature > 0.0
@@ -594,11 +1075,14 @@ class ServingEngine:
             rec.tokens_out += 1
             self.slot_remaining[s] -= 1
             self.slot_tokens[s, 0] = tok
+            self._slot_len[s] += 1          # this step's token landed
             if tok == req.eos_id or self.slot_remaining[s] <= 0:
                 rec.finished = self.clock.now
                 self.slot_req[s] = None
                 self.slot_rec[s] = None
                 self.slot_key[s] = None
+                if self.tables is not None:
+                    self.tables.release(s)  # refcounts back to the pool
 
     # -- driver --------------------------------------------------------------
 
@@ -626,13 +1110,43 @@ class ServingEngine:
         summary = metrics_lib.summarize(self.records, self.clock.now)
         summary["decode_steps"] = self.decode_steps
         summary["prefills"] = self.prefills
+        summary["max_concurrent_slots"] = self.max_concurrent
+        summary["kv_bytes_per_step"] = (
+            self._kv_bytes_sum / max(self.decode_steps, 1))
+        if self.pool is not None:
+            summary["paged"] = {
+                "num_blocks": self.pool.num_blocks,
+                "block_size": self.pool.block_size,
+                "peak_used_blocks": self.pool.peak_used,
+                "shared_hits": self.pool.shared_hits,
+                "cow_events": self.pool.cow_events,
+                "seal_count": self.pool.seal_count,
+            }
         return self.outputs, self.records, summary
 
 
 def serve(cfg, params, requests: Sequence[Request],
           ecfg: EngineConfig = EngineConfig(),
-          ctx: Optional[tf.ModelCtx] = None, kv: str = "native",
+          ctx: Optional[tf.ModelCtx] = None, kv: Optional[str] = None,
           clock: Optional[Clock] = None):
-    """One-call convenience wrapper: build backend + engine, run, report."""
-    engine = ServingEngine(make_backend(cfg, params, ctx, kv), ecfg, clock)
+    """One-call convenience wrapper: build backend + engine, run, report.
+
+    The cache layout comes from ``ecfg.layout`` (dense/paged, bf16/int8,
+    decode impl); ``ecfg.prefill_chunk`` selects streaming prefill.  The
+    legacy ``kv=`` kwarg still works for one release (DeprecationWarning,
+    folded into the layout)."""
+    layout = ecfg.layout
+    if kv is not None:
+        warnings.warn(
+            "serve(kv=...) is deprecated; set EngineConfig.layout="
+            "CacheLayout(kv_bits=8) instead", DeprecationWarning,
+            stacklevel=2)
+        layout = layout_from_legacy(kv, None, base=layout)
+    # only hand make_backend an explicit layout when one was actually
+    # chosen — a default layout must not override a caller ctx's decode_impl
+    explicit = kv is not None or layout != CacheLayout()
+    backend = make_backend(cfg, params, ctx,
+                           layout=layout if explicit else None,
+                           prefill_chunk=ecfg.prefill_chunk)
+    engine = ServingEngine(backend, ecfg, clock)
     return engine.run(requests)

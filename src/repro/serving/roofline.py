@@ -63,6 +63,69 @@ def decode_state_bytes(cfg: ArchConfig, cache_len: int,
     return total
 
 
+def _paged_split_bytes(cfg: ArchConfig, max_len: int, kv_bits: int):
+    """(bytes per pooled KV *position*, per-slot bytes of state that stays
+    slot-resident under the paged layout).
+
+    Only full-cache self-attention rows page (linear append-at-``len``
+    semantics); window-bounded rings, recurrent rows and whisper's
+    cross-KV stay slot-resident — they are already live-bounded, so the
+    paged layout leaves them dense (see ``serving.engine.PagedSlots``)."""
+    kv_pos = _kv_pos_bytes(cfg.head_dim, cfg.num_kv_heads, kv_bits)
+    n_full_attn = sum(1 for kind in cfg.layer_kinds() if kind == "attn")
+    paged_pos = n_full_attn * kv_pos
+    resident = decode_state_bytes(cfg, max_len, kv_bits) \
+        - max_len * paged_pos
+    return paged_pos, resident
+
+
+def kv_block_bytes(cfg: ArchConfig, layout) -> float:
+    """Bytes one physical pool block holds across the paged layers."""
+    paged_pos, _ = _paged_split_bytes(cfg, layout.block_size,
+                                      layout.kv_bits)
+    return layout.block_size * paged_pos
+
+
+def resident_kv_bytes(cfg: ArchConfig, n_slots: int, max_len: int,
+                      layout, used_blocks=None) -> float:
+    """Resident decode-state bytes of a serving batch under ``layout``.
+
+    Dense: every slot pins ``max_len`` KV rows whether live or not.
+    Paged: the pooled layers cost only the blocks actually mapped
+    (``used_blocks``; the whole pool when None — the allocation
+    footprint), plus the per-slot resident remainder."""
+    if not getattr(layout, "paged", False):
+        return n_slots * decode_state_bytes(cfg, max_len, layout.kv_bits)
+    paged_pos, resident = _paged_split_bytes(cfg, max_len, layout.kv_bits)
+    if used_blocks is None:
+        from repro.cache_layout import resolved_num_blocks
+        used_blocks = resolved_num_blocks(layout, n_slots, max_len) - 1
+    return (used_blocks * layout.block_size * paged_pos
+            + n_slots * resident)
+
+
+def max_concurrent_slots(cfg: ArchConfig, hbm_budget_bytes: float,
+                         max_len: int, mean_live_len: int,
+                         layout) -> int:
+    """How many slots one HBM budget admits under ``layout`` — the
+    admission-capacity model the serve artifact and the CI paged gate
+    compare across layouts.
+
+    Dense reserves ``max_len`` rows per slot up front; paged maps only the
+    blocks a request's live prefix needs (``ceil(mean_live_len /
+    block_size)`` blocks), so the same budget admits more concurrent
+    requests whenever prompts run shorter than the serving window —
+    exactly the fragmentation the block pool reclaims."""
+    if not getattr(layout, "paged", False):
+        per_slot = decode_state_bytes(cfg, max_len, layout.kv_bits)
+        return int(hbm_budget_bytes // max(per_slot, 1.0))
+    paged_pos, resident = _paged_split_bytes(cfg, max_len, layout.kv_bits)
+    live = max(1, min(int(mean_live_len), max_len))
+    blocks = math.ceil(live / layout.block_size)
+    per_slot = blocks * layout.block_size * paged_pos + resident
+    return int(hbm_budget_bytes // max(per_slot, 1.0))
+
+
 def decode_attn_read_bytes(cfg: ArchConfig, lengths: Sequence[int],
                            s_max: int, impl: str = "dense",
                            kv_bits: int = 16,

@@ -1,0 +1,211 @@
+"""Host-side paged-cache accounting: BlockPool refcounts, SlotTables
+prefix-sharing admission, copy-on-write, exhaustion behaviour.
+
+Pure Python/numpy — no jax.  The device-facing guarantees (paged kernels,
+engine token parity) live in test_decode_kernel.py / test_paged_serving.py.
+"""
+import numpy as np
+import pytest
+
+from repro.cache_layout import (CacheLayout, blocks_per_slot,
+                                layout_from_legacy, resolved_num_blocks)
+from repro.serving.block_pool import (NULL_BLOCK, BlockPool, SlotTables,
+                                      prefix_keys)
+
+
+# ---------------------------------------------------------------------------
+# CacheLayout spec
+# ---------------------------------------------------------------------------
+
+def test_cache_layout_validation_and_helpers():
+    lay = CacheLayout(kind="paged", block_size=8)
+    assert lay.paged and not lay.quantized
+    assert blocks_per_slot(lay, 64) == 8
+    # +1: block 0 is the reserved null sink
+    assert resolved_num_blocks(lay, n_slots=4, max_len=64) == 4 * 8 + 1
+    assert resolved_num_blocks(lay.replace(num_blocks=12), 4, 64) == 13
+    with pytest.raises(ValueError):
+        CacheLayout(kind="pooled")
+    with pytest.raises(ValueError):
+        CacheLayout(kv_bits=4)
+    with pytest.raises(ValueError):
+        blocks_per_slot(lay, 60)        # not a block multiple
+
+
+def test_layout_from_legacy_folds_kwargs():
+    lay = layout_from_legacy(kv="int8", decode_impl="flash")
+    assert lay.quantized and lay.impl == "flash" and not lay.paged
+    base = CacheLayout(kind="paged", block_size=8)
+    lay2 = layout_from_legacy(kv="native", base=base)
+    assert lay2.paged and lay2.kv_bits == 16 and lay2.block_size == 8
+    with pytest.raises(ValueError):
+        layout_from_legacy(kv="fp4")
+
+
+# ---------------------------------------------------------------------------
+# prefix keys: chained content hash
+# ---------------------------------------------------------------------------
+
+def test_prefix_keys_chain_and_tail():
+    keys_a, tail_a = prefix_keys([1, 2, 3, 4, 5, 6, 7], 4, seed="m")
+    keys_b, tail_b = prefix_keys([1, 2, 3, 4, 9, 9, 9], 4, seed="m")
+    assert len(keys_a) == len(keys_b) == 1
+    assert keys_a[0] == keys_b[0]           # identical first block
+    assert tail_a != tail_b                 # divergent partial tails
+    # chaining: a different block 0 changes block 1's key too
+    keys_c, _ = prefix_keys([9, 2, 3, 4, 5, 6, 7, 8], 4, seed="m")
+    keys_d, _ = prefix_keys([1, 2, 3, 4, 5, 6, 7, 8], 4, seed="m")
+    assert keys_c[1] != keys_d[1]
+    # the namespace seed partitions caches
+    assert prefix_keys([1, 2, 3, 4], 4, seed="m")[0] != \
+        prefix_keys([1, 2, 3, 4], 4, seed="n")[0]
+    # exact block boundary: no tail
+    assert prefix_keys([1, 2, 3, 4], 4)[1] is None
+
+
+# ---------------------------------------------------------------------------
+# BlockPool allocator
+# ---------------------------------------------------------------------------
+
+def test_pool_alloc_free_refcount_roundtrip():
+    pool = BlockPool(num_blocks=5, block_size=4)
+    assert pool.free_blocks == 4 and pool.used_blocks == 0
+    a, b = pool.alloc(), pool.alloc()
+    assert a != NULL_BLOCK and b != NULL_BLOCK and a != b
+    pool.incref(a)
+    pool.decref(a)
+    assert pool.used_blocks == 2            # still referenced
+    pool.decref(a)
+    pool.decref(b)
+    assert pool.used_blocks == 0 and pool.free_blocks == 4
+    assert pool.peak_used == 2
+    with pytest.raises(RuntimeError):
+        pool.decref(a)                      # underflow detected
+
+
+def test_pool_seal_lookup_and_unseal_on_free():
+    pool = BlockPool(num_blocks=4, block_size=4)
+    b = pool.alloc()
+    pool.seal(b, key=123)
+    assert pool.lookup(123) == b and pool.is_sealed(b)
+    pool.decref(b)                          # last ref: freed AND unpublished
+    assert pool.lookup(123) is None and not pool.is_sealed(b)
+
+
+# ---------------------------------------------------------------------------
+# SlotTables: admission, sharing, COW, exhaustion, release
+# ---------------------------------------------------------------------------
+
+def _tables(num_blocks=9, n_slots=3, bpslot=4, bs=4):
+    pool = BlockPool(num_blocks, bs)
+    return pool, SlotTables(pool, n_slots, bpslot)
+
+
+def test_admit_owns_then_shares_prefix():
+    pool, tables = _tables()
+    prompt = [1, 2, 3, 4, 5, 6, 7, 8]       # two complete blocks
+    keys, tail = prefix_keys(prompt, 4)
+    assert tables.admit(0, keys, tail, span_blocks=3)
+    # nothing sealed yet: slot 0 owns all three blocks (write == read)
+    assert (tables.write[0][:3] == tables.read[0][:3]).all()
+    tables.seal_prompt(0)
+    assert tables.admit(1, keys, tail, span_blocks=3)
+    # the two complete prompt blocks are shared read-only
+    assert (tables.read[1][:2] == tables.read[0][:2]).all()
+    assert (tables.write[1][:2] == NULL_BLOCK).all()
+    assert pool.refcount[tables.read[0][0]] == 2
+    assert pool.shared_hits == 2
+    # block 2 (first decode block) is private to each slot
+    assert tables.read[1][2] != tables.read[0][2]
+
+
+def test_shared_tail_cow_on_first_divergent_token():
+    pool, tables = _tables()
+    prompt = [1, 2, 3, 4, 5, 6]             # one full block + 2-token tail
+    keys, tail = prefix_keys(prompt, 4)
+    assert tables.admit(0, keys, tail, span_blocks=2)
+    tables.seal_prompt(0)
+    assert tables.admit(1, keys, tail, span_blocks=2)
+    shared_tail = int(tables.read[1][1])
+    assert shared_tail == int(tables.read[0][1])
+    assert pool.cow_debt == 1               # one deferred private copy
+    # slot 1 writes its first generated token at position 6 -> COW
+    cow = tables.ensure_writable(1, 6)
+    assert cow is not None
+    src, dst = cow
+    assert src == shared_tail and dst != shared_tail
+    assert int(tables.read[1][1]) == dst
+    assert int(tables.write[1][1]) == dst
+    assert pool.cow_debt == 0 and pool.cow_events == 1
+    # slot 0 is now the sole owner: claims its tail in place, no copy
+    assert tables.ensure_writable(0, 6) is None
+    assert int(tables.write[0][1]) == int(tables.read[0][1])
+
+
+def test_exhaustion_admission_fails_without_mutation():
+    pool, tables = _tables(num_blocks=4)    # 3 usable blocks
+    keys, tail = prefix_keys(list(range(12)), 4)
+    assert tables.admit(0, keys, tail, span_blocks=3)
+    before = (tables.read.copy(), tables.write.copy(),
+              pool.refcount.copy(), pool.cow_debt, pool.free_blocks)
+    keys2, tail2 = prefix_keys(list(range(100, 112)), 4)
+    assert not tables.admit(1, keys2, tail2, span_blocks=3)
+    after = (tables.read, tables.write, pool.refcount, pool.cow_debt,
+             pool.free_blocks)
+    assert (before[0] == after[0]).all() and (before[1] == after[1]).all()
+    assert (before[2] == after[2]).all()
+    assert before[3] == after[3] and before[4] == after[4]
+    # blocks come back at release; the queued request then fits
+    tables.release(0)
+    assert tables.admit(1, keys2, tail2, span_blocks=3)
+
+
+def test_cow_reservation_blocks_unsafe_admission():
+    # a shared-tail adoption must hold one block back for its deferred COW:
+    # a later admission cannot eat the reserve
+    pool, tables = _tables(num_blocks=5, n_slots=3, bpslot=2)
+    prompt = [1, 2, 3, 4, 5, 6]
+    keys, tail = prefix_keys(prompt, 4)
+    assert tables.admit(0, keys, tail, span_blocks=2)       # 2 blocks
+    tables.seal_prompt(0)
+    assert tables.admit(1, keys, tail, span_blocks=2)       # shares both
+    assert pool.cow_debt == 1 and pool.free_blocks == 2
+    # 2 free - 1 reserved = 1 usable: a 2-block request must wait
+    keys2, tail2 = prefix_keys([7, 8, 9, 10, 11], 4)
+    assert not tables.admit(2, keys2, tail2, span_blocks=2)
+    # ... and the reserved COW then always succeeds
+    assert tables.ensure_writable(1, 6) is not None
+
+
+def test_release_returns_refcounts_to_zero():
+    pool, tables = _tables()
+    prompt = [1, 2, 3, 4, 5, 6, 7]
+    keys, tail = prefix_keys(prompt, 4)
+    for s in range(3):
+        assert tables.admit(s, keys, tail, span_blocks=3)
+        tables.seal_prompt(s)
+    for s in range(3):
+        tables.ensure_writable(s, 7)        # resolve pending tails
+    for s in range(3):
+        tables.release(s)
+    assert pool.refcount[NULL_BLOCK] == 1   # the permanent null sink
+    assert (pool.refcount[1:] == 0).all()
+    assert pool.used_blocks == 0 and pool.cow_debt == 0
+    assert (tables.read == NULL_BLOCK).all()
+    assert (tables.write == NULL_BLOCK).all()
+
+
+def test_resealed_prefix_is_shared_after_full_drain():
+    # sharing survives a drain only via re-seal: blocks free at refcount 0,
+    # so a later identical prompt re-admits privately and re-publishes
+    pool, tables = _tables()
+    keys, tail = prefix_keys([1, 2, 3, 4, 5], 4)
+    assert tables.admit(0, keys, tail, 2)
+    tables.seal_prompt(0)
+    tables.release(0)
+    assert pool.lookup(keys[0]) is None     # unpublished with the free
+    assert tables.admit(1, keys, tail, 2)
+    assert pool.shared_hits == 0            # nothing to share: recomputed
+    tables.seal_prompt(1)
+    assert tables.admit(2, keys, tail, 2)
+    assert pool.shared_hits > 0

@@ -192,3 +192,122 @@ def test_quant_decode_step_flash_matches_dense():
         cfg, params, cache, toks,
         tf.ModelCtx(attn_chunk=8, decode_impl="flash", decode_block_k=8))
     assert_allclose(np.asarray(lf), np.asarray(ld), atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# paged variants: pool + block-table addressing must be a pure relabeling of
+# the dense cache — same outputs under scrambled physical block placement
+# ---------------------------------------------------------------------------
+
+def _paged_from_dense(k, v, bs, num_extra=3, seed=11):
+    """Scatter a dense (B, S, Hk, D) cache into a shuffled block pool.
+
+    Physical block ids are a random permutation (never 0: the null sink),
+    interleaved across slots, with spare blocks left as garbage — the
+    adversarial layout a busy pool produces."""
+    b, s = k.shape[0], k.shape[1]
+    nb = s // bs
+    total = b * nb + 1 + num_extra
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(np.arange(1, total))[:b * nb]
+    tables = jnp.asarray(perm.reshape(b, nb), jnp.int32)
+    kp = (jax.random.normal(jax.random.PRNGKey(99),
+                            (total, bs) + k.shape[2:]) * 10
+          ).astype(k.dtype)                             # garbage everywhere
+    vp = (jax.random.normal(jax.random.PRNGKey(98),
+                            (total, bs) + v.shape[2:]) * 10
+          ).astype(v.dtype)
+    kp = kp.at[perm].set(k.reshape(b * nb, bs, *k.shape[2:]))
+    vp = vp.at[perm].set(v.reshape(b * nb, bs, *v.shape[2:]))
+    return kp, vp, tables
+
+
+@pytest.mark.parametrize("lengths", RAGGED)
+@pytest.mark.parametrize("bs", [8, 16])
+def test_paged_flash_decode_matches_dense(lengths, bs):
+    q, k, v = _qkv_cache(seed=8)
+    kp, vp, tables = _paged_from_dense(k, v, bs)
+    lens = jnp.asarray(lengths, jnp.int32)
+    from repro.kernels import decode_attention as dk
+    out = dk.flash_decode_attention_paged(q, kp, vp, tables, lens,
+                                          interpret=True)
+    want = ref.decode_attention_paged(q, kp, vp, tables, lens)
+    assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+    dense = ops.flash_decode(q, k, v, lens, block_k=bs)
+    assert_allclose(np.asarray(out), np.asarray(dense), atol=2e-5,
+                    rtol=2e-5)
+
+
+@pytest.mark.parametrize("window,ring", [(12, False), (7, True)])
+def test_paged_flash_decode_window_and_ring(window, ring):
+    s = 16 if ring else S
+    q, k, v = _qkv_cache(seed=9, s=s)
+    kp, vp, tables = _paged_from_dense(k, v, bs=8)
+    lens = jnp.asarray([0, 3, s, 37 if ring else s - 1], jnp.int32)
+    from repro.kernels import decode_attention as dk
+    out = dk.flash_decode_attention_paged(q, kp, vp, tables, lens,
+                                          window=window, ring=ring,
+                                          interpret=True)
+    want = ref.decode_attention(q, k, v, lens, window=window, ring=ring)
+    assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("lengths", RAGGED)
+def test_paged_flash_decode_quant_matches_dense(lengths):
+    q, k, v = _qkv_cache(seed=10)
+    k_q, k_s = kq.quantize_kv(k)
+    v_q, v_s = kq.quantize_kv(v)
+    bs = 16
+    kqp, vqp, tables = _paged_from_dense(k_q, v_q, bs)
+    ksp, vsp, _ = _paged_from_dense(k_s.astype(jnp.float32)[..., None],
+                                    v_s[..., None], bs)
+    ksp, vsp = ksp[..., 0], vsp[..., 0]
+    lens = jnp.asarray(lengths, jnp.int32)
+    from repro.kernels import decode_attention as dk
+    out = dk.flash_decode_attention_paged_quant(
+        q, kqp, ksp, vqp, vsp, tables, lens, interpret=True)
+    dense = ops.flash_decode_quant(q, k_q, k_s, v_q, v_s, lens, block_k=bs)
+    assert_allclose(np.asarray(out), np.asarray(dense), atol=2e-5,
+                    rtol=2e-5)
+
+
+def test_unified_decode_attention_dispatch():
+    """ops.decode_attention: one entry point, every cell of the
+    (dense|paged) x (bf16|int8) x (ref|dense|flash) matrix agrees."""
+    from repro.cache_layout import CacheLayout
+    q, k, v = _qkv_cache(seed=12)
+    k_q, k_s = kq.quantize_kv(k)
+    v_q, v_s = kq.quantize_kv(v)
+    bs = 16
+    kp, vp, tables = _paged_from_dense(k, v, bs)
+    kqp, vqp, _ = _paged_from_dense(k_q, v_q, bs)
+    ksp, vsp, _ = _paged_from_dense(k_s[..., None], v_s[..., None], bs)
+    ksp, vsp = ksp[..., 0], vsp[..., 0]
+    lens = jnp.asarray([5, 0, 40, S], jnp.int32)
+    golden = ref.decode_attention(q, k, v, lens)
+    golden_q = ref.decode_attention_quant(q, k_q, k_s, v_q, v_s, lens)
+    for impl in ("ref", "dense", "flash"):
+        lay = CacheLayout(impl=impl, block_size=bs)
+        out = ops.decode_attention(q, {"k": k, "v": v}, lens, layout=lay)
+        assert_allclose(np.asarray(out), np.asarray(golden), atol=2e-5,
+                        rtol=2e-5, err_msg=f"dense16 {impl}")
+        out = ops.decode_attention(
+            q, {"k": kp, "v": vp, "block_table": tables}, lens,
+            layout=lay.replace(kind="paged"))
+        assert_allclose(np.asarray(out), np.asarray(golden), atol=2e-5,
+                        rtol=2e-5, err_msg=f"paged16 {impl}")
+        out = ops.decode_attention(
+            q, {"k_q": k_q, "k_s": k_s, "v_q": v_q, "v_s": v_s}, lens,
+            layout=lay.replace(kv_bits=8))
+        assert_allclose(np.asarray(out), np.asarray(golden_q), atol=2e-5,
+                        rtol=2e-5, err_msg=f"dense8 {impl}")
+        out = ops.decode_attention(
+            q, {"k_q": kqp, "k_s": ksp, "v_q": vqp, "v_s": vsp,
+                "block_table": tables}, lens,
+            layout=lay.replace(kind="paged", kv_bits=8))
+        assert_allclose(np.asarray(out), np.asarray(golden_q), atol=2e-5,
+                        rtol=2e-5, err_msg=f"paged8 {impl}")
+    with pytest.raises(ValueError):
+        ops.decode_attention(q, {"k_q": k_q, "k_s": k_s, "v_q": v_q,
+                                 "v_s": v_s}, lens,
+                             layout=CacheLayout(kv_bits=8, window=8))
