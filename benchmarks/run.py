@@ -159,6 +159,35 @@ def train_parallel(rows):
               c["bubble_frac"] * 100, "derived")
         _emit(rows, f"train_parallel.stash.{sched}", c["stash_micros"],
               "derived")
+
+    # -- observability: synthesize the 1F1B tick timeline (one track per
+    # stage) from the measured pp host step, Perfetto-openable.  The
+    # timeline's makespan-derived bubble is reported next to the
+    # schedule_cost model's — the timeline prices every tick at the max
+    # active-unit cost (lock-step stages), so its bubble is an upper
+    # bound on the per-unit cost model's
+    from repro.obs import Tracer, synthesize_pipeline_ticks, \
+        write_chrome_trace
+    n_stages, n_micro = 4, 8
+    step_s = out["measured"]["pp"]["host_step_ms"] / 1e3
+    stage_times = [step_s / (3 * n_micro + 2 * (n_stages - 1))] * n_stages
+    tr = Tracer()
+    end = synthesize_pipeline_ticks(tr, "1f1b", n_stages, n_micro,
+                                    stage_times, bwd_cost_ratio=2.0)
+    useful = n_micro * stage_times[0] * 3.0          # fwd + 2x bwd
+    timeline_path = os.path.join(RESULTS_DIR, "train_timeline.json")
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    n_ev = write_chrome_trace(timeline_path, tr)
+    out["obs"] = {
+        "timeline_file": os.path.relpath(timeline_path, ROOT),
+        "timeline_events": n_ev,
+        "makespan_s": end,
+        "bubble_frac_timeline": 1.0 - useful / end,
+        "bubble_frac_model": out["bubble"]["1f1b"]["bubble_frac"],
+    }
+    _emit(rows, "train_parallel.obs.timeline_events", n_ev, "derived")
+    _emit(rows, "train_parallel.obs.bubble_pct_timeline",
+          out["obs"]["bubble_frac_timeline"] * 100, "derived")
     _save("train_parallel", out)
 
 
@@ -403,6 +432,7 @@ def serve(rows):
     # its resident KV bytes track live blocks instead of slots*max_len
     out["layouts"] = {}
     layout_outputs = {}
+    paged_setup = None
     for name, lay in (("dense", CacheLayout()),
                       ("paged", CacheLayout(kind="paged", block_size=8)),
                       ("paged_int8", CacheLayout(kind="paged", kv_bits=8,
@@ -413,6 +443,8 @@ def serve(rows):
         o, _, s = ServingEngine(backend, vcfg).run(requests)
         layout_outputs[name] = o
         out["layouts"][name] = s
+        if name == "paged":
+            paged_setup = (backend, vcfg)
         _emit(rows, f"serve.layout.{name}.tok_s", s["throughput_tok_s"],
               "measured")
         _emit(rows, f"serve.layout.{name}.max_concurrent_slots",
@@ -423,6 +455,49 @@ def serve(rows):
         layout_outputs["paged"] == layout_outputs["dense"])
     _emit(rows, "serve.layout.paged_token_exact",
           int(out["layouts"]["paged_token_exact"]), "measured")
+
+    # -- observability: the paged run again with tracing + metrics on.
+    # Throughput runs on the simulated clock, so tracing must not perturb
+    # the measured number (the CI gate holds the ratio within 5%); the
+    # per-request spans must reconcile with the records' TTFT/TPOT
+    from repro.obs import MetricsRegistry, Tracer, write_trace
+    tbackend, tvcfg = paged_setup
+    untraced = out["layouts"]["paged"]["throughput_tok_s"]
+    tracer, registry = Tracer(), MetricsRegistry()
+    _, trecs, ts = ServingEngine(tbackend, tvcfg, tracer=tracer,
+                                 metrics=registry).run(requests)
+    spans = {}                    # rid -> {span name: dur}
+    for e in tracer.events:
+        if e["ph"] == "X" and e["name"].startswith("req."):
+            spans.setdefault(e["args"]["rid"], {})[e["name"]] = e
+    reconciled = True
+    for r in trecs:
+        if r.finished is None:
+            continue
+        sp = spans.get(r.rid, {})
+        ttft_tr = (sp["req.queue_wait"]["dur"] + sp["req.prefill"]["dur"])
+        ok = abs(ttft_tr - r.ttft) < 1e-9
+        if r.tpot is not None:
+            ok = ok and abs(sp["req.decode"]["dur"] / (r.tokens_out - 1)
+                            - r.tpot) < 1e-9
+        reconciled = reconciled and ok
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    trace_path = os.path.join(RESULTS_DIR, "serve_trace.json")
+    n_events = write_trace(trace_path, tracer, registry)
+    out["obs"] = {
+        "trace_file": os.path.relpath(trace_path, ROOT),
+        "trace_events": n_events,
+        "span_counts": ts["obs"]["span_counts"],
+        "metrics": ts["obs"]["metrics"],
+        "ttft_reconciled": bool(reconciled),
+        "untraced_tok_s": untraced,
+        "traced_tok_s": ts["throughput_tok_s"],
+        "traced_over_untraced": ts["throughput_tok_s"] / untraced,
+    }
+    _emit(rows, "serve.obs.ttft_reconciled", int(reconciled), "measured")
+    _emit(rows, "serve.obs.traced_over_untraced",
+          out["obs"]["traced_over_untraced"], "measured")
+    _emit(rows, "serve.obs.trace_events", n_events, "measured")
 
     # -- per-family sweep: host-CPU reduced archs measure the engine; the
     # roofline terms model the FULL arch's TPU decode step (compute vs

@@ -16,6 +16,7 @@ import dataclasses
 
 import jax
 
+from repro.cache_layout import CacheLayout
 from repro.config import get_arch, list_archs, reduced
 from repro.models import transformer as tf
 from repro.serving import (EngineConfig, ServingEngine, TrafficConfig,
@@ -41,7 +42,8 @@ def main():
         new_tokens_max=16, vocab_size=cfg.vocab_size,
         encoder_frames=cfg.encoder_frames,
         frame_dim=cfg.d_model if cfg.encoder_layers else 0))
-    engine = ServingEngine(make_backend(cfg, params, kv=args.kv),
+    layout = CacheLayout(kv_bits=8 if args.kv == "int8" else 16)
+    engine = ServingEngine(make_backend(cfg, params, layout=layout),
                            EngineConfig(n_slots=args.slots, max_len=64))
     outputs, records, summary = engine.run(requests)
 

@@ -48,8 +48,7 @@ from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["CacheLayout", "resolved_num_blocks", "blocks_per_slot",
-           "layout_from_legacy"]
+__all__ = ["CacheLayout", "resolved_num_blocks", "blocks_per_slot"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,18 +109,3 @@ def resolved_num_blocks(layout: CacheLayout, n_slots: int,
     nb = blocks_per_slot(layout, max_len)
     cap = layout.num_blocks if layout.num_blocks > 0 else n_slots * nb
     return cap + 1
-
-
-def layout_from_legacy(kv=None, decode_impl=None,
-                       base: CacheLayout = None) -> CacheLayout:
-    """Fold the deprecated ``make_backend(kv=..., decode_impl=...)`` /
-    ``--kv`` / ``--decode-impl`` knobs into a :class:`CacheLayout` (the
-    one-release compatibility shim's translation table)."""
-    lay = base if base is not None else CacheLayout()
-    if kv is not None:
-        if kv not in ("native", "int8"):
-            raise ValueError(f"unknown kv backend {kv!r}")
-        lay = lay.replace(kv_bits=8 if kv == "int8" else 16)
-    if decode_impl is not None:
-        lay = lay.replace(impl=decode_impl)
-    return lay

@@ -125,6 +125,21 @@ def rebalance_stages(stage_times: Sequence[float], bounds: Sequence[int],
     return balance_stages(costs, n_stages)
 
 
+def rebalance_from_trace(events, bounds: Sequence[int],
+                         n_stages: int = 0) -> List[int]:
+    """:func:`rebalance_stages` fed straight from the observability
+    timeline: per-stage times are the medians of ``stage_tick`` span
+    durations (:func:`repro.obs.timeline.stage_tick_times` — the same
+    sort-then-middle reduction ``probe_stage_times`` applies), so a
+    recorded trace can drive the rebalance decision in place of a live
+    probe."""
+    from repro.obs.timeline import stage_tick_times
+    bounds = list(bounds)
+    n_stages = n_stages or len(bounds) - 1
+    times = stage_tick_times(events, n_stages)
+    return rebalance_stages(times, bounds, n_stages)
+
+
 def adaptive_batch_allocation(worker_speeds: Sequence[float],
                               global_batch: int,
                               min_per_worker: int = 1) -> np.ndarray:

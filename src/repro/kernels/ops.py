@@ -58,8 +58,65 @@ def flash_attention(q, k, v, *, causal=True, window=0, softmax_scale=None,
 
 # -- flash-decode attention ---------------------------------------------------
 
-@partial(jax.jit, static_argnames=("layout", "softmax_scale"))
+# Optional observability hook: a callable fed one record dict per
+# decode_attention *dispatch* with the kernel route and roofline-modeled
+# bytes/FLOPs from the argument shapes.  The body of the jitted entry point
+# only runs at trace time (the engine calls it from inside jitted model
+# code), so this fires per trace/compile — the honest granularity for a
+# dispatch-level hook; per-step utilization is stamped on the engine's
+# ``decode_step`` spans from the live lengths instead.
+_dispatch_recorder = None
+
+
+def set_dispatch_recorder(fn):
+    """Install (or clear, fn=None) the dispatch recorder; returns the
+    previous one so callers can restore it."""
+    global _dispatch_recorder
+    prev = _dispatch_recorder
+    _dispatch_recorder = fn
+    return prev
+
+
+def _nbytes(x) -> int:
+    return int(x.size) * jnp.dtype(x.dtype).itemsize
+
+
+def _record_decode_dispatch(q, cache, layout) -> None:
+    if _dispatch_recorder is None:
+        return
+    kv_keys = [k for k in ("k", "v", "k_q", "k_s", "v_q", "v_s")
+               if k in cache]
+    kv_bytes = sum(_nbytes(cache[k]) for k in kv_keys)
+    B, _, H, D = q.shape
+    # cache positions per slot: pool blocks * block_size when paged, else
+    # the padded row length
+    if layout.paged:
+        pool = cache["k" if "k" in cache else "k_q"]
+        S = int(cache["block_table"].shape[1]) * layout.block_size
+    else:
+        S = int(cache["k" if "k" in cache else "k_q"].shape[-3])
+    _dispatch_recorder({
+        "op": "decode_attention", "impl": layout.impl,
+        "kind": layout.kind, "kv_bits": layout.kv_bits,
+        "batch": int(B), "heads": int(H), "head_dim": int(D),
+        "s_max": S,
+        "kv_resident_bytes": kv_bytes,
+        # qk^T + attn@v over the padded span (upper bound; the
+        # length-aware kernel streams less — see serving.roofline)
+        "modeled_flops": 4.0 * B * H * D * S,
+    })
+
+
 def decode_attention(q, cache, lengths, *, layout, softmax_scale=None):
+    """Dispatch-recording wrapper over :func:`_decode_attention_jit` —
+    the public entry point every model/backend calls."""
+    _record_decode_dispatch(q, cache, layout)
+    return _decode_attention_jit(q, cache, lengths, layout=layout,
+                                 softmax_scale=softmax_scale)
+
+
+@partial(jax.jit, static_argnames=("layout", "softmax_scale"))
+def _decode_attention_jit(q, cache, lengths, *, layout, softmax_scale=None):
     """THE decode-attention entry point, keyed off one
     :class:`repro.cache_layout.CacheLayout` instead of four separate
     wrappers.  ``cache`` is a dict whose keys the layout determines:

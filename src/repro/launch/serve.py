@@ -53,6 +53,7 @@ from repro.cache_layout import CacheLayout
 from repro.config import get_arch, list_archs, reduced
 from repro.models import transformer as tf
 from repro.models.transformer import ModelCtx
+from repro.obs import MetricsRegistry, Tracer, write_trace
 from repro.serving import (EngineConfig, ServingEngine, TrafficConfig,
                            generate)
 from repro.serving.engine import make_backend
@@ -102,12 +103,20 @@ def run_engine(args) -> int:
         # compile every prefill bucket + the decode step outside the
         # measured run, as a resident production server would be
         ServingEngine(backend, ecfg).run(requests)
-    outputs, records, summary = ServingEngine(backend, ecfg).run(requests)
+    # tracing is scoped to the measured run only, never the warmup
+    tracer = Tracer() if args.trace_out else None
+    metrics = MetricsRegistry() if args.trace_out else None
+    outputs, records, summary = ServingEngine(
+        backend, ecfg, tracer=tracer, metrics=metrics).run(requests)
 
     title = (f"{cfg.name} {args.cache_layout} kv={args.kv} "
              f"refill={args.refill} "
              f"slots={args.slots} {args.process}@{args.rate:g}req/s")
     print(format_report(summary, title))
+    if args.trace_out:
+        n = write_trace(args.trace_out, tracer, metrics)
+        print(f"trace: {n} events -> {args.trace_out} "
+              f"(open at https://ui.perfetto.dev)")
     if args.json:
         print(json.dumps(summary, indent=1))
     return 0
@@ -195,6 +204,10 @@ def main(argv=None) -> int:
                     help="restrict sampling to the k best logits (0 = off)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-warmup", action="store_true")
+    ap.add_argument("--trace-out", default="",
+                    help="write the measured run's span timeline + metrics "
+                         "here: .jsonl for raw events, anything else for "
+                         "Chrome-trace/Perfetto JSON")
     ap.add_argument("--json", action="store_true")
     # raw mode
     ap.add_argument("--batch", type=int, default=8)

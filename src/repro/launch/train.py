@@ -51,6 +51,12 @@ def main(argv=None) -> int:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--trace-out", default="",
+                    help="write the training span timeline here (train_step "
+                         "/ rebalance.probe / checkpoint spans, plus "
+                         "per-stage stage_tick spans from rebalance probes "
+                         "on the pipelined path): .jsonl for raw events, "
+                         "anything else for Chrome-trace/Perfetto JSON")
     args = ap.parse_args(argv)
 
     if args.host_devices:
@@ -67,6 +73,7 @@ def main(argv=None) -> int:
     from repro.data import pipeline
     from repro.launch.mesh import make_host_mesh
     from repro.models import transformer as tf
+    from repro.obs import Tracer, write_trace
     from repro.optimizer import adamw
     from repro.runtime import trainer
 
@@ -88,6 +95,7 @@ def main(argv=None) -> int:
                        checkpoint_dir=args.ckpt_dir,
                        checkpoint_every=max(args.steps // 4, 10))
 
+    tracer = Tracer() if args.trace_out else None
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
     n = sum(x.size for x in jax.tree.leaves(params))
     print(f"{cfg.name}: {n/1e6:.1f}M params on mesh "
@@ -140,12 +148,12 @@ def main(argv=None) -> int:
         if args.pp_rebalance_every:
             rebal = trainer.PPRebalancer(
                 cfg, mesh, tcfg, bounds, n_micro=args.pp_micro,
-                pp_schedule=args.pp_schedule, scfg=scfg)
+                pp_schedule=args.pp_schedule, scfg=scfg, tracer=tracer)
         res_run = trainer.train_loop(
             state, gen(start), step_fn, tcfg, start_step=start,
             samples_per_batch=args.batch, verbose=True,
             rebalance_every=args.pp_rebalance_every, rebalance_fn=rebal,
-            log_every=max(args.steps // 10, 1))
+            log_every=max(args.steps // 10, 1), tracer=tracer)
         if rebal is not None and len(rebal.history) > 1:
             print(f"stage bounds rebalanced {len(rebal.history) - 1}x: "
                   f"{rebal.history[0]} -> {rebal.history[-1]}")
@@ -162,10 +170,14 @@ def main(argv=None) -> int:
         res_run = trainer.train_loop(
             state, gen(start), fn, tcfg, start_step=start,
             samples_per_batch=args.batch, verbose=True,
-            log_every=max(args.steps // 10, 1))
+            log_every=max(args.steps // 10, 1), tracer=tracer)
     print(f"done: {res_run.steps_run} steps, host throughput "
           f"{res_run.throughput:.1f} samples/s, final loss "
           f"{res_run.losses[-1]:.4f}")
+    if args.trace_out:
+        nev = write_trace(args.trace_out, tracer)
+        print(f"trace: {nev} events -> {args.trace_out} "
+              f"(open at https://ui.perfetto.dev)")
     return 0
 
 

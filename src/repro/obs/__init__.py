@@ -1,0 +1,18 @@
+"""Unified observability: tracing spans, metrics registry, exporters.
+
+See README "Observability" for the span taxonomy and metric names.
+"""
+from repro.obs.export import (chrome_trace, write_chrome_trace, write_jsonl,
+                              write_trace)
+from repro.obs.metrics import (DEFAULT_BOUNDS, Counter, Gauge, Histogram,
+                               MetricsRegistry, percentile)
+from repro.obs.timeline import stage_tick_times, synthesize_pipeline_ticks
+from repro.obs.trace import NULL_TRACER, ManualClock, Tracer, or_null
+
+__all__ = [
+    "Tracer", "ManualClock", "NULL_TRACER", "or_null",
+    "MetricsRegistry", "Counter", "Gauge", "Histogram", "percentile",
+    "DEFAULT_BOUNDS",
+    "chrome_trace", "write_chrome_trace", "write_jsonl", "write_trace",
+    "stage_tick_times", "synthesize_pipeline_ticks",
+]

@@ -7,6 +7,12 @@ Policies over a step with per-worker speeds s_p (samples/sec):
   (paper's adaptive batch sizing): step time = max_p(b_p/s_p).
 * ``dropk``    — uniform batches but the slowest k workers' gradients are
   dropped (backup-worker semantics); effective samples shrink accordingly.
+
+The accumulators live on a :class:`repro.obs.metrics.MetricsRegistry`
+(a private one per call when none is handed in): a step-time histogram,
+useful-samples counter, and per-step gauges — the simulated step clock is
+an injectable :class:`repro.obs.trace.ManualClock`, so the gauge series
+advance on simulation time, not wall time.
 """
 from __future__ import annotations
 
@@ -16,6 +22,8 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core import load_balance
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import ManualClock
 
 
 @dataclasses.dataclass
@@ -38,11 +46,25 @@ class StragglerSim:
 
 def run_policy(sim: StragglerSim, global_batch: int, steps: int,
                policy: str = "uniform", drop_k: int = 1,
-               realloc_every: int = 10) -> Dict[str, float]:
-    """Returns effective throughput (useful samples/sec) and step stats."""
+               realloc_every: int = 10,
+               metrics: Optional[MetricsRegistry] = None,
+               clock: Optional[ManualClock] = None) -> Dict[str, float]:
+    """Returns effective throughput (useful samples/sec) and step stats.
+
+    ``metrics``: obs registry the per-step accumulators live on —
+    ``straggler.step_time_s`` histogram, ``straggler.useful_samples``
+    counter, ``straggler.slowest_worker_t`` gauge (timestamped by
+    ``clock``, the simulated step clock, which ends at the total simulated
+    duration).  The returned dict reads back out of the registry, so an
+    attached caller sees exactly the reported numbers."""
+    metrics = metrics if metrics is not None else MetricsRegistry()
+    clock = clock if clock is not None else ManualClock()
+    metrics.clock = clock
+    hist = metrics.histogram("straggler.step_time_s")
+    useful_c = metrics.counter("straggler.useful_samples")
+    gauge = metrics.gauge("straggler.slowest_worker_t")
     speeds = sim.speeds(steps)
     P = sim.n_workers
-    times, useful = [], []
     alloc = np.full(P, global_batch // P)
     for t in range(steps):
         s = speeds[t]
@@ -58,15 +80,17 @@ def run_policy(sim: StragglerSim, global_batch: int, steps: int,
             finish = np.sort(per_worker_t)
             t_step = finish[P - 1 - drop_k]
             done = per_worker_t <= t_step + 1e-12
-            useful.append(alloc[done].sum())
+            useful_c.inc(float(alloc[done].sum()))
         else:
             t_step = per_worker_t.max()
-            useful.append(alloc.sum())
-        times.append(t_step)
-    total_t = float(np.sum(times))
-    return {"throughput": float(np.sum(useful) / total_t),
+            useful_c.inc(float(alloc.sum()))
+        clock.advance(float(t_step))        # simulated step clock
+        hist.observe(float(t_step))
+        gauge.set(float(per_worker_t.max()))
+    total_t = hist.total
+    return {"throughput": float(useful_c.value / total_t),
             "mean_step_time": total_t / steps,
-            "useful_frac": float(np.sum(useful) / (global_batch * steps))}
+            "useful_frac": float(useful_c.value / (global_batch * steps))}
 
 
 def compare_policies(sim: StragglerSim, global_batch: int = 1024,

@@ -34,6 +34,8 @@ from repro.core.hybrid import Plan
 from repro.embeddings import update as embed_update
 from repro.models import layers, transformer as tf
 from repro.models.transformer import ModelCtx
+from repro.obs import timeline as obs_timeline
+from repro.obs.trace import Tracer, or_null
 from repro.optimizer import adamw, schedule
 
 
@@ -546,7 +548,8 @@ def make_pp_train_step(cfg: ArchConfig, mesh: Mesh, tcfg: TrainConfig,
 
 def probe_stage_times(cfg: ArchConfig, pp_params, bounds, ctx=None,
                       batch: int = 2, seq: int = 16, iters: int = 3,
-                      jit_cache: Optional[Dict] = None):
+                      jit_cache: Optional[Dict] = None,
+                      tracer: Optional[Tracer] = None):
     """Host-measured per-stage forward times over each stage's REAL
     (unpadded) layers — the observe half of the observe->rebalance loop.
 
@@ -560,7 +563,15 @@ def probe_stage_times(cfg: ArchConfig, pp_params, bounds, ctx=None,
     :class:`PPRebalancer`'s): reuses one jitted stage program across
     probes, so repeated probing only compiles when a stage's layer count
     first appears — a converged partition probes compile-free.
+
+    ``tracer``: every timed call lands as one ``stage_tick`` span on track
+    ``stage{s}`` (args ``stage``/``phase``/``iter``), with the *exact*
+    measured duration the returned medians reduce over — so
+    :func:`repro.obs.timeline.stage_tick_times` (and
+    :func:`repro.core.load_balance.rebalance_from_trace`) recover the
+    same per-stage times from the timeline.
     """
+    tracer = or_null(tracer)
     ctx = ctx if ctx is not None else ModelCtx(attn_chunk=8)
     bounds = list(bounds)
     blocks = tf.unstack_stage_params(pp_params["stage"], bounds)
@@ -579,10 +590,13 @@ def probe_stage_times(cfg: ArchConfig, pp_params, bounds, ctx=None,
         p = {"blocks": sl, "mask": jnp.ones((n,), jnp.float32)}
         jax.block_until_ready(fn(p, x))                      # compile+warm
         samples = []
-        for _ in range(iters):
+        for it in range(iters):
             t0 = time.perf_counter()
             jax.block_until_ready(fn(p, x))
-            samples.append(time.perf_counter() - t0)
+            t1 = time.perf_counter()
+            samples.append(t1 - t0)
+            tracer.complete("stage_tick", t0, t1, track=f"stage{s}",
+                            stage=s, phase="fwd", iter=it)
         samples.sort()
         times.append(samples[len(samples) // 2])
     return times
@@ -607,7 +621,8 @@ class PPRebalancer:
     def __init__(self, cfg: ArchConfig, mesh: Mesh, tcfg: TrainConfig,
                  bounds, n_micro: int = 4, pp_schedule: str = "1f1b",
                  scfg: DPSyncConfig = DPSyncConfig(), ctx=None,
-                 probe_batch: int = 2, probe_seq: int = 16):
+                 probe_batch: int = 2, probe_seq: int = 16,
+                 tracer: Optional[Tracer] = None):
         self.cfg, self.mesh, self.tcfg = cfg, mesh, tcfg
         self.bounds = list(bounds)
         self.n_micro, self.pp_schedule, self.scfg = n_micro, pp_schedule, scfg
@@ -616,6 +631,7 @@ class PPRebalancer:
         self.history = [list(bounds)]
         self.last_stage_times = None
         self._probe_jit: Dict = {}      # shared stage program across probes
+        self.tracer = or_null(tracer)
 
     def _remap_blocks(self, blocks_tree, new_bounds):
         return tf.remap_stage_params({"blocks": blocks_tree}, self.bounds,
@@ -623,12 +639,31 @@ class PPRebalancer:
 
     def __call__(self, state, step_fn):
         from repro.core import load_balance
-        times = probe_stage_times(self.cfg, state["params"], self.bounds,
-                                  self.ctx, self.probe_batch,
-                                  self.probe_seq,
-                                  jit_cache=self._probe_jit)
+        n_stages = len(self.bounds) - 1
+        if self.tracer.enabled:
+            # with a tracer the rebalancer is a *timeline consumer*: the
+            # probe emits stage_tick spans into a probe-local tracer (its
+            # own clock domain), the session trace absorbs them, and the
+            # stage times come back OUT of the trace — the rebalance
+            # decision and the visualized timeline cannot disagree
+            probe_tr = Tracer(capacity=4096)
+            probe_stage_times(self.cfg, state["params"], self.bounds,
+                              self.ctx, self.probe_batch, self.probe_seq,
+                              jit_cache=self._probe_jit, tracer=probe_tr)
+            self.tracer.extend(probe_tr.events)
+            times = obs_timeline.stage_tick_times(probe_tr.events, n_stages)
+        else:
+            times = probe_stage_times(self.cfg, state["params"], self.bounds,
+                                      self.ctx, self.probe_batch,
+                                      self.probe_seq,
+                                      jit_cache=self._probe_jit)
         self.last_stage_times = times
         new_bounds = load_balance.rebalance_stages(times, self.bounds)
+        self.tracer.instant(
+            "rebalance.decision", track="train",
+            old_bounds=list(self.bounds), new_bounds=list(new_bounds),
+            stage_times=[float(t) for t in times],
+            changed=new_bounds != self.bounds)
         if new_bounds == self.bounds:
             return None
         params = dict(state["params"])
@@ -703,7 +738,8 @@ def train_loop(state: Dict[str, Any], batches: Iterator, step_fn: Callable,
                fail_at: Optional[int] = None,
                rebalance_every: int = 0,
                rebalance_fn: Optional[Callable] = None,
-               log_every: int = 10, verbose: bool = False) -> TrainResult:
+               log_every: int = 10, verbose: bool = False,
+               tracer: Optional[Tracer] = None) -> TrainResult:
     """Generic loop: state = {'params', 'opt', ['residual']}.
 
     ``fail_at``: inject a simulated node failure (raises RuntimeError) after
@@ -716,7 +752,13 @@ def train_loop(state: Dict[str, Any], batches: Iterator, step_fn: Callable,
     :class:`PPRebalancer`, which re-carves the pipeline's layer->stage
     bounds from measured per-stage times — replaces both for the steps
     that follow.
+
+    ``tracer``: per-step ``train_step`` spans (host wall clock, args
+    ``step``/``loss``), ``rebalance.probe`` spans around each rebalance
+    hook, and ``checkpoint`` spans — the training half of the unified
+    timeline (``launch/train.py --trace-out``).
     """
+    tr = or_null(tracer)
     losses = []
     t0 = time.perf_counter()
     step = start_step
@@ -724,34 +766,41 @@ def train_loop(state: Dict[str, Any], batches: Iterator, step_fn: Callable,
     for batch in batches:
         if rebalance_every and rebalance_fn is not None and n > 0 \
                 and n % rebalance_every == 0:
-            new = rebalance_fn(state, step_fn)
+            with tr.span("rebalance.probe", track="train", step=step):
+                new = rebalance_fn(state, step_fn)
             if new is not None:
                 state, step_fn = new
                 if verbose:
                     print(f"step {step}: rebalanced "
                           f"(bounds {getattr(rebalance_fn, 'bounds', '?')})")
-        if "residual" in state:
-            state["params"], state["opt"], state["residual"], loss = step_fn(
-                state["params"], state["opt"], state["residual"], batch)
-            metrics = {"loss": loss}
-        else:
-            state["params"], state["opt"], metrics = step_fn(
-                state["params"], state["opt"], batch)
+        with tr.span("train_step", track="train", step=step) as sp:
+            if "residual" in state:
+                state["params"], state["opt"], state["residual"], loss = \
+                    step_fn(state["params"], state["opt"],
+                            state["residual"], batch)
+                metrics = {"loss": loss}
+            else:
+                state["params"], state["opt"], metrics = step_fn(
+                    state["params"], state["opt"], batch)
+            losses.append(float(metrics["loss"]))
+            if tr.enabled:
+                sp.args["loss"] = losses[-1]
         step += 1
         n += 1
-        losses.append(float(metrics["loss"]))
         if verbose and step % log_every == 0:
             print(f"step {step}: loss {losses[-1]:.4f}")
         if tcfg.checkpoint_every and step % tcfg.checkpoint_every == 0:
-            ckpt.save(tcfg.checkpoint_dir, step,
-                      {"params": state["params"], "opt": state["opt"],
-                       **({"residual": state["residual"]}
-                          if "residual" in state else {}),
-                       # a rebalanced pipeline's carve points must ride
-                       # along: restore rebuilds the step at THESE bounds
-                       **({"stage_bounds": state["stage_bounds"]}
-                          if "stage_bounds" in state else {})},
-                      keep=tcfg.keep_checkpoints)
+            with tr.span("checkpoint", track="train", step=step):
+                ckpt.save(tcfg.checkpoint_dir, step,
+                          {"params": state["params"], "opt": state["opt"],
+                           **({"residual": state["residual"]}
+                              if "residual" in state else {}),
+                           # a rebalanced pipeline's carve points must ride
+                           # along: restore rebuilds the step at THESE
+                           # bounds
+                           **({"stage_bounds": state["stage_bounds"]}
+                              if "stage_bounds" in state else {})},
+                          keep=tcfg.keep_checkpoints)
         if fail_at is not None and step >= fail_at:
             raise RuntimeError(f"injected failure at step {step}")
     dt = time.perf_counter() - t0

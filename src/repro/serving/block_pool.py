@@ -97,6 +97,35 @@ class BlockPool:
         self.shared_hits = 0
         self.cow_events = 0
         self.seal_count = 0
+        # optional obs registry mirror (attach_metrics)
+        self._metrics = None
+        self._mprefix = "pool"
+
+    def attach_metrics(self, registry, prefix: str = "pool") -> None:
+        """Mirror pool occupancy and sharing stats into an obs
+        :class:`~repro.obs.metrics.MetricsRegistry`: a ``{prefix}.used_blocks``
+        gauge (its ``peak`` tracks ``peak_used``) plus
+        ``shared_hits`` / ``cow_events`` / ``seal_count`` counters.  The
+        gauge series is stamped by the registry's clock — the engine pins
+        that to its simulated clock, so the occupancy timeline aligns with
+        the request spans."""
+        self._metrics = registry
+        self._mprefix = prefix
+        self._sync_metrics()
+
+    def _sync_metrics(self) -> None:
+        m, p = self._metrics, self._mprefix
+        if m is None:
+            return
+        m.gauge(f"{p}.used_blocks").set(self.used_blocks)
+        m.counter(f"{p}.shared_hits").value = float(self.shared_hits)
+        m.counter(f"{p}.cow_events").value = float(self.cow_events)
+        m.counter(f"{p}.seal_count").value = float(self.seal_count)
+
+    def note_shared_hit(self) -> None:
+        """One prefix-share adoption (called by :class:`SlotTables`)."""
+        self.shared_hits += 1
+        self._sync_metrics()
 
     @property
     def used_blocks(self) -> int:
@@ -119,6 +148,7 @@ class BlockPool:
         self.peak_used = max(self.peak_used, self.used_blocks)
         if for_cow:
             self.cow_events += 1
+        self._sync_metrics()
         return b
 
     def incref(self, b: int) -> None:
@@ -136,6 +166,7 @@ class BlockPool:
             if key is not None and self._by_hash.get(key) == b:
                 del self._by_hash[key]
             self._free.append(b)
+            self._sync_metrics()
 
     def seal(self, b: int, key: int) -> None:
         """Publish block ``b`` under content ``key`` (first writer wins;
@@ -144,6 +175,7 @@ class BlockPool:
             self._by_hash[key] = b
             self._hash_of[b] = key
             self.seal_count += 1
+            self._sync_metrics()
 
     def lookup(self, key: int) -> Optional[int]:
         return self._by_hash.get(key)
@@ -207,14 +239,14 @@ class SlotTables:
             b = self.pool.lookup(full_keys[i])
             self.pool.incref(b)
             row_r[i], row_w[i] = b, NULL_BLOCK
-            self.pool.shared_hits += 1
+            self.pool.note_shared_hit()
         nxt = shared
         if tail_block is not None:
             self.pool.incref(tail_block)
             row_r[nxt], row_w[nxt] = tail_block, NULL_BLOCK
             self._pending_tail[slot] = nxt
             self.pool.cow_debt += 1
-            self.pool.shared_hits += 1
+            self.pool.note_shared_hit()
             nxt += 1
         for i in range(nxt, span_blocks):
             b = self.pool.alloc()

@@ -37,9 +37,20 @@ the kernels, and the launch flags alike.  Precision (``kv_bits=8``: fused
 int8 attention for uniform via ``models.kvquant``, the generic
 :class:`Int8KVSlots` composition elsewhere) and placement (``kind="paged"``:
 a shared block pool + per-slot block tables instead of per-slot padded
-rows) compose orthogonally.  The legacy ``kv=`` / ``decode_impl=`` /
-``prefill_chunk=`` kwargs keep working for one release through deprecation
-shims that fold into a layout.
+rows) compose orthogonally.  The layout IS the spec — the pre-layout
+``kv=`` / ``decode_impl=`` kwargs were removed after their one-release
+deprecation window and now raise ``TypeError``.
+
+The engine is instrumented (see :mod:`repro.obs` and README
+"Observability"): hand :class:`ServingEngine` a ``tracer`` and/or
+``metrics`` registry and it pins both to its simulated clock, emits
+per-request phase spans (``req.queue_wait`` / ``req.prefill`` /
+``req.decode`` on one track per slot) built from the *same*
+:class:`~repro.serving.metrics.RequestRecord` timestamps the TTFT/TPOT
+report reads, per-step ``decode_step`` spans carrying modeled
+bytes/FLOPs/utilization from the roofline models, scheduler instants
+(``sched.admit`` / ``sched.reject`` / ``sched.shed`` /
+``sched.pushback``), and live block-pool gauges/counters.
 
 Paged serving adds three scheduler-side pieces (see
 :mod:`repro.serving.block_pool`): admission maps a request's virtual
@@ -67,7 +78,6 @@ import dataclasses
 import hashlib
 import math
 import time
-import warnings
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence
 
@@ -76,9 +86,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cache_layout import (CacheLayout, blocks_per_slot,
-                                layout_from_legacy, resolved_num_blocks)
+                                resolved_num_blocks)
 from repro.models import kvquant
 from repro.models import transformer as tf
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer, or_null
 from repro.serving import metrics as metrics_lib
 from repro.serving.block_pool import BlockPool, SlotTables, prefix_keys
 from repro.serving.traffic import Clock, Request
@@ -689,24 +701,7 @@ class PagedSlots(_PagedBackendMixin, SlotBackend):
         return state
 
 
-def _deprecated_kwargs_layout(kv, decode_impl, layout):
-    """One-release shim: fold the legacy ``kv=`` / ``decode_impl=`` kwargs
-    into a :class:`CacheLayout` (with a DeprecationWarning)."""
-    if kv is None and decode_impl is None:
-        return layout
-    warnings.warn(
-        "make_backend(kv=..., decode_impl=...) is deprecated; pass "
-        "layout=CacheLayout(kv_bits=..., impl=...) (or set it on "
-        "EngineConfig.layout) instead",
-        DeprecationWarning, stacklevel=3)
-    return layout_from_legacy(kv, decode_impl,
-                              base=layout if layout is not None
-                              else CacheLayout())
-
-
 def make_backend(cfg, params, ctx: Optional[tf.ModelCtx] = None,
-                 kv: Optional[str] = None,
-                 decode_impl: Optional[str] = None,
                  prefill_chunk: int = 0, *,
                  layout: Optional[CacheLayout] = None):
     """Family-registry dispatch keyed off one :class:`CacheLayout`.
@@ -723,10 +718,10 @@ def make_backend(cfg, params, ctx: Optional[tf.ModelCtx] = None,
     uniform-family prompts (which forces composition backends — the fused
     paths need the whole-prompt forward).
 
-    ``kv=`` / ``decode_impl=`` are the deprecated pre-layout kwargs; they
-    keep working for one release via :func:`_deprecated_kwargs_layout`."""
-    explicit = layout is not None or kv is not None or decode_impl is not None
-    layout = _deprecated_kwargs_layout(kv, decode_impl, layout)
+    The pre-layout ``kv=`` / ``decode_impl=`` kwargs were removed (PR-6
+    deprecation window closed); passing them raises ``TypeError`` — use
+    ``layout=CacheLayout(kv_bits=8, impl="flash")``."""
+    explicit = layout is not None
     if layout is None:
         layout = CacheLayout()
     fam = tf.family(cfg)
@@ -783,9 +778,19 @@ class ServingEngine:
     (:meth:`SlotTables.ensure_writable` -> ``backend.copy_block``)."""
 
     def __init__(self, backend, ecfg: EngineConfig = EngineConfig(),
-                 clock: Optional[Clock] = None):
+                 clock: Optional[Clock] = None,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.backend, self.ecfg = backend, ecfg
         self.clock = clock if clock is not None else Clock()
+        # observability: spans/instants + pool gauges, both pinned to the
+        # engine's (simulated) clock so per-request span durations reconcile
+        # with the TTFT/TPOT report by construction
+        self.tracer = or_null(tracer)
+        self.tracer.clock = lambda: self.clock.now
+        self.metrics = metrics
+        if metrics is not None:
+            metrics.clock = lambda: self.clock.now
         n = ecfg.n_slots
         self.layout = getattr(backend, "layout", None) or ecfg.layout
         self.pool: Optional[BlockPool] = None
@@ -800,6 +805,8 @@ class ServingEngine:
             self.prefix_sharing = (
                 self.layout.prefix_sharing
                 and getattr(backend, "supports_prefix_sharing", False))
+            if metrics is not None:
+                self.pool.attach_metrics(metrics)
         init = getattr(backend, "init_slots", None) or backend.init_cache
         self.cache = init(n, ecfg.max_len)
         self.queue = AdmissionQueue()
@@ -870,6 +877,49 @@ class ServingEngine:
         return self.ecfg.n_slots * roofline.decode_state_bytes(
             cfg, self.ecfg.max_len, kv_bits=self.layout.kv_bits)
 
+    def _trace_request(self, rec: metrics_lib.RequestRecord,
+                       slot: int) -> None:
+        """Retroactive per-request phase spans on track ``slot{N}``, built
+        from the exact RequestRecord timestamps the metrics report reads:
+        ``ttft == queue_wait.dur + prefill.dur`` and
+        ``tpot == decode.dur / (tokens_out - 1)`` hold identically."""
+        tr = self.tracer
+        if not tr.enabled or rec.finished is None:
+            return
+        track = f"slot{slot}"
+        tr.complete("req.queue_wait", rec.arrival, rec.admitted, track=track,
+                    rid=rec.rid, slo=rec.slo_name)
+        tr.complete("req.prefill", rec.admitted, rec.first_token, track=track,
+                    rid=rec.rid, prompt_len=rec.prompt_len)
+        tr.complete("req.decode", rec.first_token, rec.finished, track=track,
+                    rid=rec.rid, tokens_out=rec.tokens_out)
+
+    def _decode_model_args(self) -> Dict:
+        """Modeled bytes/FLOPs/utilization for one decode step (roofline
+        models over the live per-slot lengths) — the args a traced
+        ``decode_step`` span carries so the timeline shows utilization,
+        not just wall time.  Empty for toy/test backends without a full
+        ArchConfig."""
+        cfg = getattr(self.backend, "cfg", None)
+        if cfg is None or not hasattr(cfg, "layer_kinds"):
+            return {}
+        from repro.core.hybrid import decode_model_flops
+        from repro.serving import roofline
+        lengths = [int(self._slot_len[s]) for s in range(self.ecfg.n_slots)
+                   if self.slot_req[s] is not None]
+        if not lengths:
+            return {}
+        rb = roofline.decode_attn_read_bytes(
+            cfg, lengths, self.ecfg.max_len,
+            impl=self.layout.impl or "dense", kv_bits=self.layout.kv_bits)
+        return {
+            "n_active": len(lengths),
+            "attn_read_bytes": rb["attn_read_bytes_per_step"],
+            "mean_utilization": rb["mean_utilization"],
+            "model_flops": decode_model_flops(
+                cfg, max(lengths), len(lengths)),
+        }
+
     @property
     def n_active(self) -> int:
         return sum(1 for r in self.slot_req if r is not None)
@@ -896,6 +946,8 @@ class ServingEngine:
         self.records.append(rec)
         if len(req.prompt) >= self.ecfg.max_len:
             rec.rejected = True
+            self.tracer.instant("sched.reject", track="sched", rid=req.rid,
+                                reason="prompt_too_long")
             return False
         if req.grid is not None and \
                 req.grid[0] * req.grid[1] >= len(req.prompt):
@@ -903,14 +955,20 @@ class ServingEngine:
             # spilling into pad positions would silently corrupt the
             # request's mrope layout (see mrope_prompt_positions)
             rec.rejected = True
+            self.tracer.instant("sched.reject", track="sched", rid=req.rid,
+                                reason="grid_overflow")
             return False
         if len(self.queue) >= self.ecfg.queue_capacity:
             shed = (self.queue.shed_batch()
                     if req.slo.name == "interactive" else None)
             if shed is None:
                 rec.rejected = True
+                self.tracer.instant("sched.reject", track="sched",
+                                    rid=req.rid, reason="queue_full")
                 return False
             shed[1].rejected = True         # the batch-tier request it evicts
+            self.tracer.instant("sched.shed", track="sched",
+                                rid=shed[0].rid, for_rid=req.rid)
         self.queue.append((req, rec))
         return True
 
@@ -939,6 +997,8 @@ class ServingEngine:
                 return False
             self._sync_tables()
         rec.admitted = self.clock.now
+        self.tracer.instant("sched.admit", track="sched", rid=req.rid,
+                            slot=slot, queue_wait=rec.admitted - rec.arrival)
         s_pad = _bucket(len(prompt), self.ecfg.prompt_quantum,
                         self.ecfg.max_len)
         padded = np.full((1, s_pad), self.ecfg.pad_id, np.int32)
@@ -968,6 +1028,7 @@ class ServingEngine:
             rec.finished = self.clock.now       # slot never occupied
             if self.tables is not None:
                 self.tables.release(slot)
+            self._trace_request(rec, slot)
             return True
         self.slot_req[slot] = req
         self.slot_rec[slot] = rec
@@ -999,11 +1060,23 @@ class ServingEngine:
                 # never corruption)
                 if self.pool is not None and self.pool.used_blocks == 0:
                     rec.rejected = True
+                    self.tracer.instant("sched.reject", track="sched",
+                                        rid=req.rid, reason="pool_too_small")
                     continue
                 self.queue.pushback((req, rec))
-                self.max_concurrent = max(self.max_concurrent, self.n_active)
+                self.tracer.instant("sched.pushback", track="sched",
+                                    rid=req.rid,
+                                    free_blocks=self.pool.free_blocks
+                                    if self.pool is not None else 0)
+                self._note_occupancy()
                 return
-        self.max_concurrent = max(self.max_concurrent, self.n_active)
+        self._note_occupancy()
+
+    def _note_occupancy(self) -> None:
+        active = self.n_active
+        self.max_concurrent = max(self.max_concurrent, active)
+        if self.metrics is not None:
+            self.metrics.gauge("engine.active_slots").set(active)
 
     def _decode_once(self) -> None:
         if self.tables is not None:
@@ -1016,6 +1089,8 @@ class ServingEngine:
                 cow = self.tables.ensure_writable(s, int(self._slot_len[s]))
                 if cow is not None:
                     self.cache = self.backend.copy_block(self.cache, *cow)
+                    self.tracer.instant("pool.cow", track="pool", slot=s,
+                                        src=cow[0], dst=cow[1])
             self._sync_tables()
         positions = None
         if getattr(self.backend, "needs_positions", False):
@@ -1033,7 +1108,15 @@ class ServingEngine:
         else:
             call = lambda: self.backend.decode(  # noqa: E731
                 self.cache, tokens, positions)
+        # span args (roofline-modeled bytes/FLOPs) are only computed when
+        # the tracer is live — the disabled path stays one attribute check
+        step_t0 = self.clock.now
+        step_args = self._decode_model_args() if self.tracer.enabled else None
         logits, self.cache = self._timed(self.clock.fixed_decode_s, call)
+        if step_args is not None:
+            self.tracer.complete("decode_step", step_t0, self.clock.now,
+                                 track="engine", step=self.decode_steps,
+                                 **step_args)
         self.decode_steps += 1
         self._kv_bytes_sum += self._resident_kv_bytes()
         self.slot_pos += 1
@@ -1083,6 +1166,7 @@ class ServingEngine:
                 self.slot_key[s] = None
                 if self.tables is not None:
                     self.tables.release(s)  # refcounts back to the pool
+                self._trace_request(rec, s)
 
     # -- driver --------------------------------------------------------------
 
@@ -1122,31 +1206,37 @@ class ServingEngine:
                 "cow_events": self.pool.cow_events,
                 "seal_count": self.pool.seal_count,
             }
+        if self.tracer.enabled or self.metrics is not None:
+            obs: Dict = {}
+            if self.tracer.enabled:
+                obs["span_counts"] = self.tracer.span_names()
+                obs["trace_events"] = len(self.tracer.events)
+            if self.metrics is not None:
+                obs["metrics"] = self.metrics.snapshot()
+            summary["obs"] = obs
         return self.outputs, self.records, summary
 
 
 def serve(cfg, params, requests: Sequence[Request],
           ecfg: EngineConfig = EngineConfig(),
-          ctx: Optional[tf.ModelCtx] = None, kv: Optional[str] = None,
-          clock: Optional[Clock] = None):
+          ctx: Optional[tf.ModelCtx] = None,
+          clock: Optional[Clock] = None,
+          tracer: Optional[Tracer] = None,
+          metrics: Optional[MetricsRegistry] = None):
     """One-call convenience wrapper: build backend + engine, run, report.
 
     The cache layout comes from ``ecfg.layout`` (dense/paged, bf16/int8,
-    decode impl); ``ecfg.prefill_chunk`` selects streaming prefill.  The
-    legacy ``kv=`` kwarg still works for one release (DeprecationWarning,
-    folded into the layout)."""
+    decode impl); ``ecfg.prefill_chunk`` selects streaming prefill.
+    ``tracer`` / ``metrics`` flow through to :class:`ServingEngine`.  The
+    legacy ``kv=`` kwarg was removed with the PR-6 deprecation shims —
+    set ``EngineConfig.layout=CacheLayout(kv_bits=8)``."""
     layout = ecfg.layout
-    if kv is not None:
-        warnings.warn(
-            "serve(kv=...) is deprecated; set EngineConfig.layout="
-            "CacheLayout(kv_bits=8) instead", DeprecationWarning,
-            stacklevel=2)
-        layout = layout_from_legacy(kv, None, base=layout)
     # only hand make_backend an explicit layout when one was actually
     # chosen — a default layout must not override a caller ctx's decode_impl
-    explicit = kv is not None or layout != CacheLayout()
+    explicit = layout != CacheLayout()
     backend = make_backend(cfg, params, ctx,
                            layout=layout if explicit else None,
                            prefill_chunk=ecfg.prefill_chunk)
-    engine = ServingEngine(backend, ecfg, clock)
+    engine = ServingEngine(backend, ecfg, clock, tracer=tracer,
+                           metrics=metrics)
     return engine.run(requests)

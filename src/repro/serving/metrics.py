@@ -14,6 +14,8 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence
 
+from repro.obs import metrics as obs_metrics
+
 
 @dataclasses.dataclass
 class RequestRecord:
@@ -54,26 +56,18 @@ class RequestRecord:
         return bool(ok)
 
 
-def percentile(xs: Sequence[float], q: float) -> float:
-    """Linearly-interpolated percentile (numpy's default method), q in
-    [0, 100].  NaN for an empty sample."""
-    xs = sorted(float(x) for x in xs)
-    if not xs:
-        return float("nan")
-    if len(xs) == 1:
-        return xs[0]
-    rank = (q / 100.0) * (len(xs) - 1)
-    lo = min(int(math.floor(rank)), len(xs) - 2)
-    frac = rank - lo
-    return xs[lo] * (1.0 - frac) + xs[lo + 1] * frac
+# Percentile math lives in repro.obs.metrics now; re-exported here because
+# serving callers and tests address it as serving.metrics.percentile.
+percentile = obs_metrics.percentile
 
 
 def _dist(xs: List[float]) -> Dict[str, float]:
-    if not xs:
-        return {"mean": float("nan"), "p50": float("nan"),
-                "p95": float("nan"), "p99": float("nan")}
-    return {"mean": sum(xs) / len(xs), "p50": percentile(xs, 50),
-            "p95": percentile(xs, 95), "p99": percentile(xs, 99)}
+    """Distribution summary via the obs histogram readout — exact while the
+    sample window holds everything, which it always does for serve runs."""
+    h = obs_metrics.Histogram()
+    for x in xs:
+        h.observe(x)
+    return h.summary()
 
 
 def summarize(records: Sequence[RequestRecord],

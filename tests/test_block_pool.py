@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.cache_layout import (CacheLayout, blocks_per_slot,
-                                layout_from_legacy, resolved_num_blocks)
+                                resolved_num_blocks)
 from repro.serving.block_pool import (NULL_BLOCK, BlockPool, SlotTables,
                                       prefix_keys)
 
@@ -32,14 +32,11 @@ def test_cache_layout_validation_and_helpers():
         blocks_per_slot(lay, 60)        # not a block multiple
 
 
-def test_layout_from_legacy_folds_kwargs():
-    lay = layout_from_legacy(kv="int8", decode_impl="flash")
-    assert lay.quantized and lay.impl == "flash" and not lay.paged
-    base = CacheLayout(kind="paged", block_size=8)
-    lay2 = layout_from_legacy(kv="native", base=base)
-    assert lay2.paged and lay2.kv_bits == 16 and lay2.block_size == 8
-    with pytest.raises(ValueError):
-        layout_from_legacy(kv="fp4")
+def test_legacy_shim_is_gone():
+    # the PR-6 one-release deprecation window closed: the translation
+    # helper is deleted outright
+    import repro.cache_layout as cl
+    assert not hasattr(cl, "layout_from_legacy")
 
 
 # ---------------------------------------------------------------------------

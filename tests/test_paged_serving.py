@@ -3,7 +3,6 @@ architecture family, prefix sharing, copy-on-write, pool exhaustion, and
 the CacheLayout dispatch in make_backend/serve.
 """
 import dataclasses
-import warnings
 
 import jax
 import numpy as np
@@ -224,21 +223,23 @@ def test_summary_reports_occupancy_and_kv_bytes():
     assert 0 < sp["kv_bytes_per_step"] < sd["kv_bytes_per_step"]
 
 
-def test_legacy_kwargs_warn_and_map_to_layout():
+def test_legacy_kwargs_removed_raise_type_error():
+    """The PR-6 deprecation window closed: kv=/decode_impl= are gone and
+    raise a clear TypeError; the layout path is the only spelling."""
     cfg, params, reqs = _family_setup("uniform", n=2)
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        b = eng.make_backend(cfg, params, kv="int8", decode_impl="flash")
-    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    with pytest.raises(TypeError):
+        eng.make_backend(cfg, params, kv="int8", decode_impl="flash")
+    with pytest.raises(TypeError):
+        eng.make_backend(cfg, params, kv="int8")
+    ecfg = eng.EngineConfig(n_slots=2, max_len=64)
+    with pytest.raises(TypeError):
+        eng.serve(cfg, params, reqs, ecfg, kv="int8")
+    # the layout spelling serves fine
+    b = eng.make_backend(cfg, params,
+                         layout=CacheLayout(kv_bits=8, impl="flash"))
     assert isinstance(b, eng.Int8KVBackend)
     assert b.layout.quantized and b.layout.impl == "flash"
-    # serve(kv=...) keeps working against the layout path
-    ecfg = eng.EngineConfig(n_slots=2, max_len=64)
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        legacy, _, _ = eng.serve(cfg, params, reqs, ecfg, kv="int8")
-    assert any(issubclass(x.category, DeprecationWarning) for x in w)
-    new, _, _ = eng.serve(
+    out, _, summary = eng.serve(
         cfg, params, reqs,
         dataclasses.replace(ecfg, layout=CacheLayout(kv_bits=8)))
-    assert legacy == new
+    assert summary["finished"] >= 1 and out

@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.cache_layout import CacheLayout
 from repro.config import get_arch, reduced
 from repro.models import transformer as tf
 from repro.serving import engine as eng
@@ -400,12 +401,13 @@ def test_family_registry_and_int8_gating():
     assert isinstance(eng.make_backend(cfg, params), eng.NativeBackend)
     with pytest.raises(NotImplementedError):
         eng.Int8KVBackend(cfg, params)       # fused path is uniform-only
-    with pytest.raises(ValueError):
-        eng.make_backend(cfg, params, kv="int8")   # rwkv6 has no KV
+    with pytest.raises(ValueError):     # rwkv6 has no KV
+        eng.make_backend(cfg, params, layout=CacheLayout(kv_bits=8))
     cfg_g = dataclasses.replace(reduced(get_arch("gemma3-1b")),
                                 dtype="float32")
     params_g = tf.init_params(jax.random.PRNGKey(0), cfg_g)
-    assert isinstance(eng.make_backend(cfg_g, params_g, kv="int8"),
+    assert isinstance(eng.make_backend(cfg_g, params_g,
+                                       layout=CacheLayout(kv_bits=8)),
                       eng.Int8KVSlots)
 
 
@@ -576,7 +578,8 @@ def test_int8_slots_composition_tracks_native():
     for fam in ("gemma", "whisper"):
         cfg, params, reqs = _family_setup(fam, seed=3)
         native = eng.make_backend(cfg, params)
-        quant = eng.make_backend(cfg, params, kv="int8")
+        quant = eng.make_backend(cfg, params,
+                                 layout=CacheLayout(kv_bits=8))
         frames = (np.asarray(reqs[0].frames, np.float32)
                   if reqs[0].frames is not None else None)
         cache_n = native.init_slots(2, 64)
@@ -727,7 +730,9 @@ def test_qwen2_vl_engine_matches_mrope_reference(grid, kv):
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
     prompt = tuple(int(x) for x in rng.integers(3, 200, 10))
-    backend = eng.make_backend(cfg, params, kv=kv)
+    backend = eng.make_backend(
+        cfg, params,
+        layout=CacheLayout(kv_bits=8) if kv == "int8" else None)
     assert backend.needs_positions
     engine = eng.ServingEngine(backend, eng.EngineConfig(n_slots=2,
                                                          max_len=64),
@@ -788,8 +793,8 @@ def test_engine_flash_decode_token_exact_vs_dense():
     dense, _, _ = eng.ServingEngine(
         eng.make_backend(cfg, params), ecfg, clock()).run(reqs)
     flash, _, s = eng.ServingEngine(
-        eng.make_backend(cfg, params, decode_impl="flash"), ecfg,
-        clock()).run(reqs)
+        eng.make_backend(cfg, params, layout=CacheLayout(impl="flash")),
+        ecfg, clock()).run(reqs)
     assert s["finished"] == len(reqs)
     assert flash == dense
 
@@ -816,8 +821,8 @@ def test_engine_gemma_ring_wraparound_flash_regression():
     dense, _, _ = eng.ServingEngine(
         eng.make_backend(cfg, params), ecfg, traffic.Clock(0.0, 0.0)).run(reqs)
     flash, _, s = eng.ServingEngine(
-        eng.make_backend(cfg, params, decode_impl="flash"), ecfg,
-        traffic.Clock(0.0, 0.0)).run(reqs)
+        eng.make_backend(cfg, params, layout=CacheLayout(impl="flash")),
+        ecfg, traffic.Clock(0.0, 0.0)).run(reqs)
     assert s["finished"] == len(reqs)
     assert flash == dense
     # the streams really ran past the window (wraparound exercised)
@@ -942,7 +947,8 @@ def test_engine_chunked_prefill_token_exact():
         traffic.Clock(0.0, 0.0)).run(reqs)
     assert s["finished"] == len(reqs)
     assert chunked == whole
-    b = eng.make_backend(cfg, params, kv="int8", prefill_chunk=8)
+    b = eng.make_backend(cfg, params, prefill_chunk=8,
+                         layout=CacheLayout(kv_bits=8))
     assert isinstance(b, eng.Int8KVSlots)       # fused path can't chunk
     out_i8, _, s8 = eng.ServingEngine(b, ecfg,
                                       traffic.Clock(0.0, 0.0)).run(reqs)
