@@ -52,6 +52,22 @@ kernel; only *where a block's rows live* changes.  Dead table entries point
 at the reserved null block 0 and are never touched (the clamp keeps ``ki``
 inside the live range).
 
+**Speculative multi-token verification** generalizes every variant from one
+query row to ``Sq = k`` draft rows per slot, folded into the kernel's row
+axis: q ``(B, Sq, H, D)`` becomes ``(B, Hk, Sq*G_pad, D)`` so draft row
+``j`` of KV head ``h`` occupies kernel rows ``[j*G_pad, (j+1)*G_pad)`` and
+one grid cell still computes every row of one KV head against one KV
+block.  A second scalar-prefetched vector ``q_lens`` (B,) carries the live
+draft length per slot — speculation is ragged under continuous batching —
+and the in-kernel masks become per-row: row ``j`` attends with *effective
+length* ``lengths + j`` (the committed cache, draft rows ``< j``, and its
+own freshly written position — the causal intra-draft mask), while rows
+``>= q_lens`` attend nothing and produce exactly-zero outputs.  The live-
+block clamp extends to ``lengths + q_lens - 1``, so a slot still fetches
+only ``ceil((len+k)/block_k)`` blocks.  With ``Sq == 1`` the row index is
+identically zero and every variant reduces bit-for-bit to the single-step
+kernel above.
+
 Empty slots (``len == 0``) produce exactly-zero outputs in every variant —
 the semantics the pure-jnp oracle in :mod:`repro.kernels.ref` pins and the
 dense paths in :mod:`repro.models.attention` / :mod:`repro.models.kvquant`
@@ -79,15 +95,20 @@ def _sublanes(dtype) -> int:
 
 
 def _live_block_bounds(length, block_k: int, S: int, window: int,
-                       ring: bool):
+                       ring: bool, q_len=None):
     """(lo, hi) inclusive block-index range holding live KV positions.
 
-    Degenerate slots (length == 0) return (0, 0): block 0 is the one block
-    that gets (re-)mapped — fetched at most once — and compute is skipped.
+    With ``q_len`` draft rows the last live position is row ``q_len-1``'s
+    effective length ``length + q_len - 1``; ``q_len=None`` is the
+    single-row decode (identical to ``q_len == 1``).  Degenerate slots
+    (no attendable position) return (0, 0): block 0 is the one block that
+    gets (re-)mapped — fetched at most once — and compute is skipped.
     """
-    eff = jnp.minimum(length, S) if ring else length
+    last = length if q_len is None else length + q_len - 1
+    eff = jnp.minimum(last, S) if ring else last
     hi = jnp.maximum(pl.cdiv(eff, block_k) - 1, 0)
     if window > 0 and not ring:
+        # row 0's band starts lowest: pos > length - 1 - window
         lo = jnp.clip(length - window, 0, None) // block_k
         lo = jnp.minimum(lo, hi)
     else:
@@ -95,13 +116,14 @@ def _live_block_bounds(length, block_k: int, S: int, window: int,
     return lo, hi
 
 
-def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
+def _decode_kernel(lens_ref, qlens_ref, q_ref, k_ref, v_ref, o_ref,
                    m_scr, l_scr, acc_scr, *, scale: float, window: int,
-                   ring: bool, block_k: int, n_kv: int, S: int,
+                   ring: bool, block_k: int, n_kv: int, S: int, g_pad: int,
                    quant: bool = False, ks_ref=None, vs_ref=None):
     b = pl.program_id(0)
     ki = pl.program_id(2)
     length = lens_ref[b]
+    q_len = qlens_ref[b]
 
     @pl.when(ki == 0)
     def _init():
@@ -109,32 +131,38 @@ def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    lo, hi = _live_block_bounds(length, block_k, S, window, ring)
-    live = (ki >= lo) & (ki <= hi) & (length > 0)
+    lo, hi = _live_block_bounds(length, block_k, S, window, ring, q_len)
+    # single-step (q_len == 1) this is the old ``length > 0`` guard; with
+    # drafts, row j > 0 can attend even from an empty cache (eff = j > 0)
+    live = (ki >= lo) & (ki <= hi) & (length + q_len > 1)
 
     @pl.when(live)
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)                  # (G_pad, D)
+        q = q_ref[0, 0].astype(jnp.float32)                  # (rows, D)
         k = k_ref[0, :, 0, :].astype(jnp.float32)            # (block_k, D)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         if quant:                                            # fold k scales
             s = s * ks_ref[0, 0][None, :]
-        s = s * scale                                        # (G_pad, bk)
+        s = s * scale                                        # (rows, bk)
 
-        g_pad = q.shape[0]
+        rows = q.shape[0]                                    # Sq * g_pad
+        row_j = jax.lax.broadcasted_iota(                    # draft index
+            jnp.int32, (rows, block_k), 0) // g_pad
         pos_k = ki * block_k + jax.lax.broadcasted_iota(
-            jnp.int32, (g_pad, block_k), 1)
+            jnp.int32, (rows, block_k), 1)
+        eff = length + row_j                         # causal intra-draft
         if ring and window > 0:
-            mask = pos_k < jnp.minimum(length, S)
-            mask &= jnp.mod(length - 1 - pos_k, S) < window
+            mask = pos_k < jnp.minimum(eff, S)
+            mask &= jnp.mod(eff - 1 - pos_k, S) < window
         else:
-            mask = pos_k < length
+            mask = pos_k < eff
             if window > 0:
-                mask &= pos_k > length - 1 - window
+                mask &= pos_k > eff - 1 - window
+        mask &= row_j < q_len                        # ragged draft padding
         s = jnp.where(mask, s, NEG_INF)
 
-        m_prev = m_scr[:, 0]                                 # (G_pad,)
+        m_prev = m_scr[:, 0]                                 # (rows,)
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[:, None])
         p = jnp.where(mask, p, 0.0)
@@ -151,21 +179,36 @@ def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(ki == n_kv - 1)
     def _done():
-        l = jnp.maximum(l_scr[:, 0], 1e-30)                  # len==0 -> 0/1
+        l = jnp.maximum(l_scr[:, 0], 1e-30)            # dead rows -> 0/1
         o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
 
 
 def _prep_q(q, Hk: int):
-    """(B, 1, H, D) -> padded (B, Hk, G_pad, D); returns (qg, G, G_pad)."""
-    B, one, H, D = q.shape
-    assert one == 1, f"decode takes one query token, got Sq={one}"
+    """(B, Sq, H, D) -> padded (B, Hk, Sq*G_pad, D); returns
+    (qg, Sq, G, G_pad).  Draft row ``j`` lands on kernel rows
+    ``[j*G_pad, (j+1)*G_pad)`` — the row axis folds drafts and query-head
+    groups so one grid cell computes every draft row of one KV head."""
+    B, Sq, H, D = q.shape
     G = H // Hk
-    qg = q.reshape(B, Hk, G, D)
+    qg = q.reshape(B, Sq, Hk, G, D).transpose(0, 2, 1, 3, 4)
     sub = _sublanes(q.dtype)
     G_pad = max(sub, ((G + sub - 1) // sub) * sub)
     if G_pad != G:
-        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, G_pad - G), (0, 0)))
-    return qg, G, G_pad
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, G_pad - G), (0, 0)))
+    return qg.reshape(B, Hk, Sq * G_pad, D), Sq, G, G_pad
+
+
+def _unprep_out(out, B: int, Sq: int, H: int, D: int, G: int, G_pad: int,
+                Hk: int):
+    """(B, Hk, Sq*G_pad, D) kernel output -> (B, Sq, H, D)."""
+    out = out.reshape(B, Hk, Sq, G_pad, D)[:, :, :, :G]
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, Sq, H, D)
+
+
+def _q_lens_or_full(q_lens, B: int, Sq: int):
+    if q_lens is None:
+        return jnp.full((B,), Sq, jnp.int32)
+    return q_lens.astype(jnp.int32)
 
 
 def _pad_kv_len(x, block_k: int):
@@ -177,69 +220,78 @@ def _pad_kv_len(x, block_k: int):
 
 def flash_decode_attention(q, k_cache, v_cache, lengths, *, window: int = 0,
                            ring: bool = False, softmax_scale=None,
-                           block_k: int = 128, interpret: bool = False):
-    """q (B, 1, H, D); k/v (B, S, Hk, D); lengths (B,) int32 live prefix.
+                           block_k: int = 128, interpret: bool = False,
+                           q_lens=None):
+    """q (B, Sq, H, D); k/v (B, S, Hk, D); lengths (B,) int32 live prefix
+    for row 0; q_lens (B,) int32 live draft rows (None = all Sq rows).
 
-    Returns (B, 1, H, D) in q.dtype.  ``window``/``ring`` select the
-    masking variant (see module docstring)."""
-    B, _, H, D = q.shape
+    Returns (B, Sq, H, D) in q.dtype.  ``window``/``ring`` select the
+    masking variant; draft row ``j`` attends with effective length
+    ``lengths + j`` (see module docstring)."""
+    B, Sq, H, D = q.shape
     S = k_cache.shape[1]
     Hk = k_cache.shape[2]
     scale = softmax_scale if softmax_scale is not None else D ** -0.5
     block_k = min(block_k, S)
-    qg, G, G_pad = _prep_q(q, Hk)
+    qg, Sq, G, G_pad = _prep_q(q, Hk)
     k_cache = _pad_kv_len(k_cache, block_k)
     v_cache = _pad_kv_len(v_cache, block_k)
     S_pad = k_cache.shape[1]
     n_kv = S_pad // block_k
     lengths = lengths.astype(jnp.int32)
+    q_lens = _q_lens_or_full(q_lens, B, Sq)
 
-    def kv_map(b, h, ki, lens):
-        lo, hi = _live_block_bounds(lens[b], block_k, S, window, ring)
+    def kv_map(b, h, ki, lens, qlens):
+        lo, hi = _live_block_bounds(lens[b], block_k, S, window, ring,
+                                    qlens[b])
         return (b, jnp.clip(ki, lo, hi), h, 0)
 
     kernel = functools.partial(
         _decode_kernel, scale=scale, window=window, ring=ring,
-        block_k=block_k, n_kv=n_kv, S=S)
+        block_k=block_k, n_kv=n_kv, S=S, g_pad=G_pad)
+    rows = Sq * G_pad
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(B, Hk, n_kv),
         in_specs=[
-            pl.BlockSpec((1, 1, G_pad, D), lambda b, h, ki, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, rows, D),
+                         lambda b, h, ki, lens, qlens: (b, h, 0, 0)),
             pl.BlockSpec((1, block_k, 1, D), kv_map),
             pl.BlockSpec((1, block_k, 1, D), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, 1, G_pad, D),
-                               lambda b, h, ki, lens: (b, h, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, rows, D),
+                               lambda b, h, ki, lens, qlens: (b, h, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((G_pad, LANES), jnp.float32),
-            pltpu.VMEM((G_pad, LANES), jnp.float32),
-            pltpu.VMEM((G_pad, D), jnp.float32),
+            pltpu.VMEM((rows, LANES), jnp.float32),
+            pltpu.VMEM((rows, LANES), jnp.float32),
+            pltpu.VMEM((rows, D), jnp.float32),
         ],
     )
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hk, G_pad, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Hk, rows, D), q.dtype),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(lengths, qg, k_cache, v_cache)
-    return out[:, :, :G].reshape(B, 1, H, D)
+    )(lengths, q_lens, qg, k_cache, v_cache)
+    return _unprep_out(out, B, Sq, H, D, G, G_pad, Hk)
 
 
 def flash_decode_attention_quant(q, k_q, k_s, v_q, v_s, lengths, *,
                                  softmax_scale=None, block_k: int = 128,
-                                 interpret: bool = False):
+                                 interpret: bool = False, q_lens=None):
     """Int8 fused variant: k_q/v_q (B, S, Hk, D) int8; k_s/v_s (B, S, Hk)
     f32 per-(position, head) scales; attends the quantized cache directly
-    (tile dequantization inside the kernel, full-cache masking only)."""
-    B, _, H, D = q.shape
+    (tile dequantization inside the kernel, full-cache masking only).
+    ``q_lens`` enables k-row speculative verification as in
+    :func:`flash_decode_attention`."""
+    B, Sq, H, D = q.shape
     S = k_q.shape[1]
     Hk = k_q.shape[2]
     scale = softmax_scale if softmax_scale is not None else D ** -0.5
     block_k = min(block_k, S)
-    qg, G, G_pad = _prep_q(q, Hk)
+    qg, Sq, G, G_pad = _prep_q(q, Hk)
     k_q = _pad_kv_len(k_q, block_k)
     v_q = _pad_kv_len(v_q, block_k)
     # scales travel as (B, Hk, S): lane-major along the blocked axis
@@ -248,168 +300,184 @@ def flash_decode_attention_quant(q, k_q, k_s, v_q, v_s, lengths, *,
     S_pad = k_q.shape[1]
     n_kv = S_pad // block_k
     lengths = lengths.astype(jnp.int32)
+    q_lens = _q_lens_or_full(q_lens, B, Sq)
 
-    def kv_map(b, h, ki, lens):
-        lo, hi = _live_block_bounds(lens[b], block_k, S, 0, False)
+    def kv_map(b, h, ki, lens, qlens):
+        lo, hi = _live_block_bounds(lens[b], block_k, S, 0, False, qlens[b])
         return (b, jnp.clip(ki, lo, hi), h, 0)
 
-    def scale_map(b, h, ki, lens):
-        lo, hi = _live_block_bounds(lens[b], block_k, S, 0, False)
+    def scale_map(b, h, ki, lens, qlens):
+        lo, hi = _live_block_bounds(lens[b], block_k, S, 0, False, qlens[b])
         return (b, h, jnp.clip(ki, lo, hi))
 
-    def kernel(lens_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref, o_ref,
-               m_scr, l_scr, acc_scr):
-        _decode_kernel(lens_ref, q_ref, kq_ref, vq_ref, o_ref,
+    def kernel(lens_ref, qlens_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref,
+               o_ref, m_scr, l_scr, acc_scr):
+        _decode_kernel(lens_ref, qlens_ref, q_ref, kq_ref, vq_ref, o_ref,
                        m_scr, l_scr, acc_scr, scale=scale, window=0,
                        ring=False, block_k=block_k, n_kv=n_kv, S=S,
-                       quant=True, ks_ref=ks_ref, vs_ref=vs_ref)
+                       g_pad=G_pad, quant=True, ks_ref=ks_ref,
+                       vs_ref=vs_ref)
 
+    rows = Sq * G_pad
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(B, Hk, n_kv),
         in_specs=[
-            pl.BlockSpec((1, 1, G_pad, D), lambda b, h, ki, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, rows, D),
+                         lambda b, h, ki, lens, qlens: (b, h, 0, 0)),
             pl.BlockSpec((1, block_k, 1, D), kv_map),
             pl.BlockSpec((1, 1, block_k), scale_map),
             pl.BlockSpec((1, block_k, 1, D), kv_map),
             pl.BlockSpec((1, 1, block_k), scale_map),
         ],
-        out_specs=pl.BlockSpec((1, 1, G_pad, D),
-                               lambda b, h, ki, lens: (b, h, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, rows, D),
+                               lambda b, h, ki, lens, qlens: (b, h, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((G_pad, LANES), jnp.float32),
-            pltpu.VMEM((G_pad, LANES), jnp.float32),
-            pltpu.VMEM((G_pad, D), jnp.float32),
+            pltpu.VMEM((rows, LANES), jnp.float32),
+            pltpu.VMEM((rows, LANES), jnp.float32),
+            pltpu.VMEM((rows, D), jnp.float32),
         ],
     )
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hk, G_pad, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Hk, rows, D), q.dtype),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(lengths, qg, k_q, k_s, v_q, v_s)
-    return out[:, :, :G].reshape(B, 1, H, D)
+    )(lengths, q_lens, qg, k_q, k_s, v_q, v_s)
+    return _unprep_out(out, B, Sq, H, D, G, G_pad, Hk)
 
 
 def flash_decode_attention_paged(q, k_pool, v_pool, block_tables, lengths, *,
                                  window: int = 0, ring: bool = False,
                                  softmax_scale=None,
-                                 interpret: bool = False):
-    """Paged flash decode: q (B, 1, H, D); k/v pools (N, bs, Hk, D) shared
+                                 interpret: bool = False, q_lens=None):
+    """Paged flash decode: q (B, Sq, H, D); k/v pools (N, bs, Hk, D) shared
     across slots; block_tables (B, nb) int32 physical block ids; lengths
     (B,) live virtual prefix.  The KV tile is one pool block (``block_k ==
-    block_size``) and the index map dereferences the prefetched table."""
-    B, _, H, D = q.shape
+    block_size``) and the index map dereferences the prefetched table.
+    ``q_lens`` enables k-row speculative verification — the live-block
+    clamp covers the draft span, so a draft crossing a block boundary
+    fetches both touched blocks."""
+    B, Sq, H, D = q.shape
     N, bs, Hk, _ = k_pool.shape
     nb = block_tables.shape[1]
     S = nb * bs                              # virtual position space
     scale = softmax_scale if softmax_scale is not None else D ** -0.5
-    qg, G, G_pad = _prep_q(q, Hk)
+    qg, Sq, G, G_pad = _prep_q(q, Hk)
     lengths = lengths.astype(jnp.int32)
+    q_lens = _q_lens_or_full(q_lens, B, Sq)
     block_tables = block_tables.astype(jnp.int32)
 
-    def kv_map(b, h, ki, lens, tables):
-        lo, hi = _live_block_bounds(lens[b], bs, S, window, ring)
+    def kv_map(b, h, ki, lens, qlens, tables):
+        lo, hi = _live_block_bounds(lens[b], bs, S, window, ring, qlens[b])
         return (tables[b, jnp.clip(ki, lo, hi)], 0, h, 0)
 
     kernel_body = functools.partial(
         _decode_kernel, scale=scale, window=window, ring=ring,
-        block_k=bs, n_kv=nb, S=S)
+        block_k=bs, n_kv=nb, S=S, g_pad=G_pad)
 
-    def kernel(lens_ref, tables_ref, q_ref, k_ref, v_ref, o_ref,
+    def kernel(lens_ref, qlens_ref, tables_ref, q_ref, k_ref, v_ref, o_ref,
                m_scr, l_scr, acc_scr):
-        kernel_body(lens_ref, q_ref, k_ref, v_ref, o_ref,
+        kernel_body(lens_ref, qlens_ref, q_ref, k_ref, v_ref, o_ref,
                     m_scr, l_scr, acc_scr)
 
+    rows = Sq * G_pad
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(B, Hk, nb),
         in_specs=[
-            pl.BlockSpec((1, 1, G_pad, D),
-                         lambda b, h, ki, lens, tables: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, rows, D),
+                         lambda b, h, ki, lens, qlens, tables: (b, h, 0, 0)),
             pl.BlockSpec((1, bs, 1, D), kv_map),
             pl.BlockSpec((1, bs, 1, D), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, 1, G_pad, D),
-                               lambda b, h, ki, lens, tables: (b, h, 0, 0)),
+        out_specs=pl.BlockSpec(
+            (1, 1, rows, D),
+            lambda b, h, ki, lens, qlens, tables: (b, h, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((G_pad, LANES), jnp.float32),
-            pltpu.VMEM((G_pad, LANES), jnp.float32),
-            pltpu.VMEM((G_pad, D), jnp.float32),
+            pltpu.VMEM((rows, LANES), jnp.float32),
+            pltpu.VMEM((rows, LANES), jnp.float32),
+            pltpu.VMEM((rows, D), jnp.float32),
         ],
     )
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hk, G_pad, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Hk, rows, D), q.dtype),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(lengths, block_tables, qg, k_pool, v_pool)
-    return out[:, :, :G].reshape(B, 1, H, D)
+    )(lengths, q_lens, block_tables, qg, k_pool, v_pool)
+    return _unprep_out(out, B, Sq, H, D, G, G_pad, Hk)
 
 
 def flash_decode_attention_paged_quant(q, k_q_pool, k_s_pool, v_q_pool,
                                        v_s_pool, block_tables, lengths, *,
                                        softmax_scale=None,
-                                       interpret: bool = False):
+                                       interpret: bool = False,
+                                       q_lens=None):
     """Paged int8 fused variant: value pools (N, bs, Hk, D) int8, scale
     pools (N, bs, Hk) f32; in-kernel tile dequant exactly as the dense-
-    layout quant kernel, with the block-table index map of the paged one."""
-    B, _, H, D = q.shape
+    layout quant kernel, with the block-table index map of the paged one.
+    ``q_lens`` enables k-row speculative verification."""
+    B, Sq, H, D = q.shape
     N, bs, Hk, _ = k_q_pool.shape
     nb = block_tables.shape[1]
     S = nb * bs
     scale = softmax_scale if softmax_scale is not None else D ** -0.5
-    qg, G, G_pad = _prep_q(q, Hk)
+    qg, Sq, G, G_pad = _prep_q(q, Hk)
     lengths = lengths.astype(jnp.int32)
+    q_lens = _q_lens_or_full(q_lens, B, Sq)
     block_tables = block_tables.astype(jnp.int32)
     # scales travel as (N, Hk, bs): lane-major along the blocked axis
     k_s_pool = k_s_pool.transpose(0, 2, 1)
     v_s_pool = v_s_pool.transpose(0, 2, 1)
 
-    def kv_map(b, h, ki, lens, tables):
-        lo, hi = _live_block_bounds(lens[b], bs, S, 0, False)
+    def kv_map(b, h, ki, lens, qlens, tables):
+        lo, hi = _live_block_bounds(lens[b], bs, S, 0, False, qlens[b])
         return (tables[b, jnp.clip(ki, lo, hi)], 0, h, 0)
 
-    def scale_map(b, h, ki, lens, tables):
-        lo, hi = _live_block_bounds(lens[b], bs, S, 0, False)
+    def scale_map(b, h, ki, lens, qlens, tables):
+        lo, hi = _live_block_bounds(lens[b], bs, S, 0, False, qlens[b])
         return (tables[b, jnp.clip(ki, lo, hi)], h, 0)
 
-    def kernel(lens_ref, tables_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref,
-               o_ref, m_scr, l_scr, acc_scr):
-        _decode_kernel(lens_ref, q_ref, kq_ref, vq_ref, o_ref,
+    def kernel(lens_ref, qlens_ref, tables_ref, q_ref, kq_ref, ks_ref,
+               vq_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr):
+        _decode_kernel(lens_ref, qlens_ref, q_ref, kq_ref, vq_ref, o_ref,
                        m_scr, l_scr, acc_scr, scale=scale, window=0,
-                       ring=False, block_k=bs, n_kv=nb, S=S,
+                       ring=False, block_k=bs, n_kv=nb, S=S, g_pad=G_pad,
                        quant=True, ks_ref=ks_ref, vs_ref=vs_ref)
 
+    rows = Sq * G_pad
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(B, Hk, nb),
         in_specs=[
-            pl.BlockSpec((1, 1, G_pad, D),
-                         lambda b, h, ki, lens, tables: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, rows, D),
+                         lambda b, h, ki, lens, qlens, tables: (b, h, 0, 0)),
             pl.BlockSpec((1, bs, 1, D), kv_map),
             pl.BlockSpec((1, 1, bs), scale_map),
             pl.BlockSpec((1, bs, 1, D), kv_map),
             pl.BlockSpec((1, 1, bs), scale_map),
         ],
-        out_specs=pl.BlockSpec((1, 1, G_pad, D),
-                               lambda b, h, ki, lens, tables: (b, h, 0, 0)),
+        out_specs=pl.BlockSpec(
+            (1, 1, rows, D),
+            lambda b, h, ki, lens, qlens, tables: (b, h, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((G_pad, LANES), jnp.float32),
-            pltpu.VMEM((G_pad, LANES), jnp.float32),
-            pltpu.VMEM((G_pad, D), jnp.float32),
+            pltpu.VMEM((rows, LANES), jnp.float32),
+            pltpu.VMEM((rows, LANES), jnp.float32),
+            pltpu.VMEM((rows, D), jnp.float32),
         ],
     )
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hk, G_pad, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Hk, rows, D), q.dtype),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(lengths, block_tables, qg, k_q_pool, k_s_pool, v_q_pool, v_s_pool)
-    return out[:, :, :G].reshape(B, 1, H, D)
+    )(lengths, q_lens, block_tables, qg, k_q_pool, k_s_pool, v_q_pool,
+      v_s_pool)
+    return _unprep_out(out, B, Sq, H, D, G, G_pad, Hk)

@@ -107,16 +107,18 @@ def _record_decode_dispatch(q, cache, layout) -> None:
     })
 
 
-def decode_attention(q, cache, lengths, *, layout, softmax_scale=None):
+def decode_attention(q, cache, lengths, *, layout, softmax_scale=None,
+                     q_lens=None):
     """Dispatch-recording wrapper over :func:`_decode_attention_jit` —
     the public entry point every model/backend calls."""
     _record_decode_dispatch(q, cache, layout)
     return _decode_attention_jit(q, cache, lengths, layout=layout,
-                                 softmax_scale=softmax_scale)
+                                 softmax_scale=softmax_scale, q_lens=q_lens)
 
 
 @partial(jax.jit, static_argnames=("layout", "softmax_scale"))
-def _decode_attention_jit(q, cache, lengths, *, layout, softmax_scale=None):
+def _decode_attention_jit(q, cache, lengths, *, layout, softmax_scale=None,
+                          q_lens=None):
     """THE decode-attention entry point, keyed off one
     :class:`repro.cache_layout.CacheLayout` instead of four separate
     wrappers.  ``cache`` is a dict whose keys the layout determines:
@@ -128,9 +130,11 @@ def _decode_attention_jit(q, cache, lengths, *, layout, softmax_scale=None):
 
     ``layout.impl`` selects ref oracle / dense XLA einsum / Pallas flash
     kernel; ``layout.window`` / ``layout.ring`` the masking variant (int8
-    supports full-cache masking only, matching the fused kernels).  The
-    legacy ``flash_decode`` / ``flash_decode_quant`` wrappers below remain
-    as thin shims over the same kernels."""
+    supports full-cache masking only, matching the fused kernels).
+    ``q_lens`` (B,) carries live draft rows for speculative k-row
+    verification (q (B, Sq, H, D)); None keeps the single-step semantics.
+    The legacy ``flash_decode`` / ``flash_decode_quant`` wrappers below
+    remain as thin shims over the same kernels."""
     if layout.quantized and (layout.window or layout.ring):
         raise ValueError("int8 decode supports full-cache masking only")
     interp = _interpret()
@@ -140,85 +144,96 @@ def _decode_attention_jit(q, cache, lengths, *, layout, softmax_scale=None):
             args = (cache["k_q"], cache["k_s"], cache["v_q"], cache["v_s"])
             if layout.impl == "ref":
                 return ref.decode_attention_paged_quant(
-                    q, *args, table, lengths, softmax_scale=softmax_scale)
+                    q, *args, table, lengths, softmax_scale=softmax_scale,
+                    q_lens=q_lens)
             if layout.impl == "dense":
                 from repro.models import kvquant
                 return kvquant.decode_attention_quant(
                     q, *(ref.paged_gather(a, table) for a in args), lengths,
-                    softmax_scale=softmax_scale, impl="dense")
+                    softmax_scale=softmax_scale, impl="dense",
+                    q_lens=q_lens)
             return _decode.flash_decode_attention_paged_quant(
                 q, *args, table, lengths, softmax_scale=softmax_scale,
-                interpret=interp)
+                interpret=interp, q_lens=q_lens)
         if layout.impl == "ref":
             return ref.decode_attention_paged(
                 q, cache["k"], cache["v"], table, lengths,
                 window=layout.window, ring=layout.ring,
-                softmax_scale=softmax_scale)
+                softmax_scale=softmax_scale, q_lens=q_lens)
         if layout.impl == "dense":
             from repro.models import attention
             return attention.decode_attention(
                 q, ref.paged_gather(cache["k"], table),
                 ref.paged_gather(cache["v"], table), lengths,
                 window=layout.window, ring=layout.ring,
-                softmax_scale=softmax_scale, impl="dense")
+                softmax_scale=softmax_scale, impl="dense", q_lens=q_lens)
         return _decode.flash_decode_attention_paged(
             q, cache["k"], cache["v"], table, lengths, window=layout.window,
-            ring=layout.ring, softmax_scale=softmax_scale, interpret=interp)
+            ring=layout.ring, softmax_scale=softmax_scale, interpret=interp,
+            q_lens=q_lens)
     if layout.quantized:
         args = (cache["k_q"], cache["k_s"], cache["v_q"], cache["v_s"])
         if layout.impl == "ref":
             return ref.decode_attention_quant(q, *args, lengths,
-                                              softmax_scale=softmax_scale)
+                                              softmax_scale=softmax_scale,
+                                              q_lens=q_lens)
         if layout.impl == "dense":
             from repro.models import kvquant
             return kvquant.decode_attention_quant(
-                q, *args, lengths, softmax_scale=softmax_scale, impl="dense")
+                q, *args, lengths, softmax_scale=softmax_scale, impl="dense",
+                q_lens=q_lens)
         return _decode.flash_decode_attention_quant(
             q, *args, lengths, softmax_scale=softmax_scale,
-            block_k=layout.block_k, interpret=interp)
+            block_k=layout.block_k, interpret=interp, q_lens=q_lens)
     if layout.impl == "ref":
         return ref.decode_attention(q, cache["k"], cache["v"], lengths,
                                     window=layout.window, ring=layout.ring,
-                                    softmax_scale=softmax_scale)
+                                    softmax_scale=softmax_scale,
+                                    q_lens=q_lens)
     if layout.impl == "dense":
         from repro.models import attention
         return attention.decode_attention(
             q, cache["k"], cache["v"], lengths, window=layout.window,
-            ring=layout.ring, softmax_scale=softmax_scale, impl="dense")
+            ring=layout.ring, softmax_scale=softmax_scale, impl="dense",
+            q_lens=q_lens)
     return _decode.flash_decode_attention(
         q, cache["k"], cache["v"], lengths, window=layout.window,
         ring=layout.ring, softmax_scale=softmax_scale,
-        block_k=layout.block_k, interpret=interp)
+        block_k=layout.block_k, interpret=interp, q_lens=q_lens)
 
 
 @partial(jax.jit, static_argnames=("window", "ring", "softmax_scale",
                                    "block_k", "impl"))
 def flash_decode(q, k_cache, v_cache, lengths, *, window=0, ring=False,
-                 softmax_scale=None, block_k=128, impl="kernel"):
-    """One-token decode over per-slot live cache prefixes.  q (B, 1, H, D);
-    caches (B, S, Hk, D); lengths (B,).  Layouts match the model stack's
-    decode caches — no transposes on the hot path."""
+                 softmax_scale=None, block_k=128, impl="kernel",
+                 q_lens=None):
+    """Decode over per-slot live cache prefixes.  q (B, Sq, H, D); caches
+    (B, S, Hk, D); lengths (B,); q_lens (B,) live draft rows when Sq > 1
+    (speculative verification).  Layouts match the model stack's decode
+    caches — no transposes on the hot path."""
     if impl == "ref":
         return ref.decode_attention(q, k_cache, v_cache, lengths,
                                     window=window, ring=ring,
-                                    softmax_scale=softmax_scale)
+                                    softmax_scale=softmax_scale,
+                                    q_lens=q_lens)
     return _decode.flash_decode_attention(
         q, k_cache, v_cache, lengths, window=window, ring=ring,
         softmax_scale=softmax_scale, block_k=block_k,
-        interpret=_interpret())
+        interpret=_interpret(), q_lens=q_lens)
 
 
 @partial(jax.jit, static_argnames=("softmax_scale", "block_k", "impl"))
 def flash_decode_quant(q, k_q, k_s, v_q, v_s, lengths, *, softmax_scale=None,
-                       block_k=128, impl="kernel"):
+                       block_k=128, impl="kernel", q_lens=None):
     """Int8 fused decode: in-kernel tile dequantization of the quantized
     cache (values (B, S, Hk, D) int8, per-(position, head) f32 scales)."""
     if impl == "ref":
         return ref.decode_attention_quant(q, k_q, k_s, v_q, v_s, lengths,
-                                          softmax_scale=softmax_scale)
+                                          softmax_scale=softmax_scale,
+                                          q_lens=q_lens)
     return _decode.flash_decode_attention_quant(
         q, k_q, k_s, v_q, v_s, lengths, softmax_scale=softmax_scale,
-        block_k=block_k, interpret=_interpret())
+        block_k=block_k, interpret=_interpret(), q_lens=q_lens)
 
 
 # -- MoE router ---------------------------------------------------------------

@@ -39,10 +39,18 @@ def flash_attention(q, k, v, *, causal=True, window=0, softmax_scale=None,
 
 
 # ---------------------------------------------------------------------------
-# flash-decode attention (layout: q (B,1,H,D); caches (B,S,Hk,D)) — the
+# flash-decode attention (layout: q (B,Sq,H,D); caches (B,S,Hk,D)) — the
 # length-skipping oracle: per-slot live prefixes, sliding-window band or
 # gemma ring wraparound masking, int8 per-(position, head) scales.  Empty
 # slots (len == 0) are defined to produce exactly-zero outputs.
+#
+# Speculative decode generalizes Sq from 1 to k draft rows: ``lengths``
+# keeps its single-step meaning (row 0's attendable length = cache_len + 1,
+# the row's own freshly written position included), and draft row ``j``
+# attends with effective length ``lengths + j`` — cache plus draft rows
+# ``< j`` plus itself, the causal intra-draft mask.  ``q_lens`` (B,) caps
+# the live rows per slot; rows ``>= q_lens`` are defined to produce
+# exactly-zero outputs (they are padding in a ragged speculative batch).
 # ---------------------------------------------------------------------------
 
 def _decode_mask(lengths, S: int, window: int, ring: bool):
@@ -59,39 +67,62 @@ def _decode_mask(lengths, S: int, window: int, ring: bool):
     return valid
 
 
+def _decode_mask_rows(lengths, q_lens, Sq: int, S: int, window: int,
+                      ring: bool):
+    """(B, Sq, S) bool: rows draft row ``j`` of each slot may attend.
+
+    Row ``j``'s effective length is ``lengths + j``; rows ``>= q_lens``
+    (speculation padding) attend nothing."""
+    pos = jnp.arange(S)[None, None, :]
+    eff = (lengths[:, None] + jnp.arange(Sq)[None, :])[:, :, None]
+    if ring and window > 0:
+        valid = pos < jnp.minimum(eff, S)
+        valid &= jnp.mod(eff - 1 - pos, S) < window
+    else:
+        valid = pos < eff
+        if window > 0:
+            valid &= pos > eff - 1 - window
+    valid &= (jnp.arange(Sq)[None, :] < q_lens[:, None])[:, :, None]
+    return valid
+
+
 def decode_attention(q, k, v, lengths, *, window=0, ring=False,
-                     softmax_scale=None):
-    B, _, H, D = q.shape
+                     softmax_scale=None, q_lens=None):
+    B, Sq, H, D = q.shape
     _, S, Hk, _ = k.shape
     G = H // Hk
     scale = softmax_scale if softmax_scale is not None else D ** -0.5
-    qg = q.reshape(B, Hk, G, D).astype(jnp.float32)
-    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k.astype(jnp.float32)) * scale
-    valid = _decode_mask(lengths, S, window, ring)
-    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    if q_lens is None:
+        q_lens = jnp.full((B,), Sq, jnp.int32)
+    qg = q.reshape(B, Sq, Hk, G, D).astype(jnp.float32)
+    s = jnp.einsum("bjhgd,bkhd->bhjgk", qg, k.astype(jnp.float32)) * scale
+    valid = _decode_mask_rows(lengths, q_lens, Sq, S, window, ring)
+    s = jnp.where(valid[:, None, :, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    p = jnp.where(valid[:, None, None, :], p, 0.0)           # len==0 -> 0
-    out = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
-    return out.reshape(B, 1, H, D).astype(q.dtype)
+    p = jnp.where(valid[:, None, :, None, :], p, 0.0)        # len==0 -> 0
+    out = jnp.einsum("bhjgk,bkhd->bjhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
 
 
 def decode_attention_quant(q, k_q, k_s, v_q, v_s, lengths, *,
-                           softmax_scale=None):
-    B, _, H, D = q.shape
+                           softmax_scale=None, q_lens=None):
+    B, Sq, H, D = q.shape
     _, S, Hk, _ = k_q.shape
     G = H // Hk
     scale = softmax_scale if softmax_scale is not None else D ** -0.5
-    qg = q.reshape(B, Hk, G, D).astype(jnp.float32)
-    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_q.astype(jnp.float32))
-    s = s * k_s.transpose(0, 2, 1)[:, :, None, :] * scale
-    valid = _decode_mask(lengths, S, 0, False)
-    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    if q_lens is None:
+        q_lens = jnp.full((B,), Sq, jnp.int32)
+    qg = q.reshape(B, Sq, Hk, G, D).astype(jnp.float32)
+    s = jnp.einsum("bjhgd,bkhd->bhjgk", qg, k_q.astype(jnp.float32))
+    s = s * k_s.transpose(0, 2, 1)[:, :, None, None, :] * scale
+    valid = _decode_mask_rows(lengths, q_lens, Sq, S, 0, False)
+    s = jnp.where(valid[:, None, :, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    p = jnp.where(valid[:, None, None, :], p, 0.0)
-    pv = jnp.einsum("bhgk,bkhd->bhgd",
-                    p * v_s.transpose(0, 2, 1)[:, :, None, :],
+    p = jnp.where(valid[:, None, :, None, :], p, 0.0)
+    pv = jnp.einsum("bhjgk,bkhd->bjhgd",
+                    p * v_s.transpose(0, 2, 1)[:, :, None, None, :],
                     v_q.astype(jnp.float32))
-    return pv.reshape(B, 1, H, D).astype(q.dtype)
+    return pv.reshape(B, Sq, H, D).astype(q.dtype)
 
 
 def paged_gather(pool, table):
@@ -106,23 +137,24 @@ def paged_gather(pool, table):
 
 
 def decode_attention_paged(q, k_pool, v_pool, block_tables, lengths, *,
-                           window=0, ring=False, softmax_scale=None):
+                           window=0, ring=False, softmax_scale=None,
+                           q_lens=None):
     """Paged oracle: gather pool blocks into the dense layout, then attend."""
     return decode_attention(q, paged_gather(k_pool, block_tables),
                             paged_gather(v_pool, block_tables), lengths,
                             window=window, ring=ring,
-                            softmax_scale=softmax_scale)
+                            softmax_scale=softmax_scale, q_lens=q_lens)
 
 
 def decode_attention_paged_quant(q, k_q_pool, k_s_pool, v_q_pool, v_s_pool,
                                  block_tables, lengths, *,
-                                 softmax_scale=None):
+                                 softmax_scale=None, q_lens=None):
     return decode_attention_quant(
         q, paged_gather(k_q_pool, block_tables),
         paged_gather(k_s_pool, block_tables),
         paged_gather(v_q_pool, block_tables),
         paged_gather(v_s_pool, block_tables), lengths,
-        softmax_scale=softmax_scale)
+        softmax_scale=softmax_scale, q_lens=q_lens)
 
 
 # ---------------------------------------------------------------------------

@@ -36,6 +36,16 @@ under the hood:
   PYTHONPATH=src python -m repro.launch.serve --reduced --arch gemma3-1b \\
       --cache-layout paged --kv int8
 
+``--spec-k N`` turns on speculative multi-token decode: each scheduler
+step self-drafts up to ``N - 1`` continuation tokens per greedy slot
+(``--spec-draft ngram`` — no second model) and verifies all rows in one
+fused k-row decode, emitting the accepted prefix.  Token streams are
+identical to single-step greedy decode; recurrent families (jamba,
+rwkv6) reject the flag with a clear error:
+
+  PYTHONPATH=src python -m repro.launch.serve --reduced --arch olmo-1b \\
+      --spec-k 4 --cache-layout paged --decode-impl flash
+
 ``--mode raw`` keeps the original fixed-batch decode-loop microbenchmark:
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \\
@@ -93,21 +103,23 @@ def run_engine(args) -> int:
     ecfg = EngineConfig(n_slots=args.slots, max_len=args.max_len,
                         queue_capacity=args.queue_capacity,
                         refill=args.refill, sample_seed=args.seed,
-                        layout=layout, prefill_chunk=args.prefill_chunk)
+                        layout=layout, prefill_chunk=args.prefill_chunk,
+                        spec_k=args.spec_k, spec_draft=args.spec_draft)
     try:
         backend = make_backend(cfg, params, layout=layout,
                                prefill_chunk=args.prefill_chunk)
-    except ValueError as e:
+        if not args.no_warmup:
+            # compile every prefill bucket + the decode step outside the
+            # measured run, as a resident production server would be
+            ServingEngine(backend, ecfg).run(requests)
+        # tracing is scoped to the measured run only, never the warmup
+        tracer = Tracer() if args.trace_out else None
+        metrics = MetricsRegistry() if args.trace_out else None
+        engine = ServingEngine(backend, ecfg, tracer=tracer,
+                               metrics=metrics)
+    except ValueError as e:       # layout/family/spec_k mismatches
         raise SystemExit(str(e))
-    if not args.no_warmup:
-        # compile every prefill bucket + the decode step outside the
-        # measured run, as a resident production server would be
-        ServingEngine(backend, ecfg).run(requests)
-    # tracing is scoped to the measured run only, never the warmup
-    tracer = Tracer() if args.trace_out else None
-    metrics = MetricsRegistry() if args.trace_out else None
-    outputs, records, summary = ServingEngine(
-        backend, ecfg, tracer=tracer, metrics=metrics).run(requests)
+    outputs, records, summary = engine.run(requests)
 
     title = (f"{cfg.name} {args.cache_layout} kv={args.kv} "
              f"refill={args.refill} "
@@ -195,6 +207,14 @@ def main(argv=None) -> int:
                     help="stream uniform-family prompts through prefill in "
                          "fixed chunks of this many tokens (0 = monolithic "
                          "padded forward)")
+    ap.add_argument("--spec-k", type=int, default=1,
+                    help="speculative decode: verify up to this many token "
+                         "rows per slot per step (1 = classic one-token "
+                         "decode; KV families only — jamba/rwkv6 refuse)")
+    ap.add_argument("--spec-draft", default="ngram", choices=("ngram",),
+                    help="speculative draft source: self-speculative n-gram "
+                         "lookup over the request's own prompt + output "
+                         "(no second model)")
     ap.add_argument("--refill", default="continuous",
                     choices=("continuous", "static"))
     ap.add_argument("--queue-capacity", type=int, default=64)

@@ -277,9 +277,14 @@ def flash_chunked_attention(q, k, v, *, causal=True, window=0,
 
 
 def decode_attention(q, k_cache, v_cache, lengths, *, window=0, ring=False,
-                     softmax_scale=None, impl="dense", block_k=128):
-    """One-token decode. q:(B,1,H,D); caches:(B,S,Hk,D); lengths:(B,) valid len
-    (the new token's position is lengths-1 and must be attendable).
+                     softmax_scale=None, impl="dense", block_k=128,
+                     q_lens=None):
+    """Decode attention. q:(B,Sq,H,D); caches:(B,S,Hk,D); lengths:(B,) valid
+    len for query row 0 (that row's own position is lengths-1 and must be
+    attendable).  Sq > 1 is speculative k-row verification: draft row ``j``
+    attends with effective length ``lengths + j`` (cache + draft rows
+    ``< j`` + itself), and ``q_lens`` (B,) caps the live rows per slot —
+    rows ``>= q_lens`` produce exactly-zero outputs.
 
     ``window > 0`` masks a sliding band ``[len-window, len)``; with
     ``ring=True`` the cache is a size-S ring buffer (row ``r`` holds the
@@ -295,30 +300,34 @@ def decode_attention(q, k_cache, v_cache, lengths, *, window=0, ring=False,
         from repro.kernels import ops
         return ops.flash_decode(q, k_cache, v_cache, lengths, window=window,
                                 ring=ring, softmax_scale=softmax_scale,
-                                block_k=block_k)
+                                block_k=block_k, q_lens=q_lens)
     if impl != "dense":
         raise ValueError(f"decode impl {impl!r} (want dense|flash)")
-    B, _, H, D = q.shape
+    B, Sq, H, D = q.shape
     _, S, Hk, _ = k_cache.shape
     G = H // Hk
     scale = softmax_scale if softmax_scale is not None else D ** -0.5
-    qg = q.reshape(B, Hk, G, D)
-    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+    if q_lens is None:
+        q_lens = jnp.full((B,), Sq, jnp.int32)
+    qg = q.reshape(B, Sq, Hk, G, D)
+    s = jnp.einsum("bjhgd,bkhd->bhjgk", qg, k_cache,
                    preferred_element_type=jnp.float32) * scale
-    pos_k = jnp.arange(S)[None, :]                           # (1,S)
+    pos_k = jnp.arange(S)[None, None, :]                     # (1,1,S)
+    eff = (lengths[:, None] + jnp.arange(Sq)[None, :])[:, :, None]
     if ring and window > 0:
-        valid = pos_k < jnp.minimum(lengths[:, None], S)
-        valid &= jnp.mod(lengths[:, None] - 1 - pos_k, S) < window
+        valid = pos_k < jnp.minimum(eff, S)
+        valid &= jnp.mod(eff - 1 - pos_k, S) < window
     else:
-        valid = pos_k < lengths[:, None]
+        valid = pos_k < eff
         if window > 0:
-            valid &= pos_k > (lengths[:, None] - 1 - window)
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+            valid &= pos_k > (eff - 1 - window)
+    valid &= (jnp.arange(Sq)[None, :] < q_lens[:, None])[:, :, None]
+    s = jnp.where(valid[:, None, :, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    p = jnp.where(valid[:, None, None, :], p, 0.0)           # len==0 -> 0
-    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+    p = jnp.where(valid[:, None, :, None, :], p, 0.0)        # len==0 -> 0
+    out = jnp.einsum("bhjgk,bkhd->bjhgd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
-    return out.reshape(B, 1, H, D).astype(q.dtype)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
 
 
 def attention(q, k, v, *, causal=True, window=0, q_offset=0, kv_len=None,

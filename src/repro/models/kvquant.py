@@ -186,6 +186,91 @@ def quant_decode_step(cfg, params, cache: Dict, tokens, ctx=None):
     return logits, out
 
 
+def quant_decode_spec(cfg, params, cache: Dict, tokens, ctx=None,
+                      q_lens=None):
+    """Speculative k-row twin of :func:`quant_decode_step` (uniform family,
+    dense or paged int8 cache).
+
+    tokens (B, k) -> (logits (B, k, V), accepts (B,), committed cache with
+    ``len += accepts``).  The k rows' K/V quantize and land at positions
+    ``len + j`` before attention; :func:`decode_attention_quant` (or the
+    paged layout dispatch) gives draft row ``j`` effective length
+    ``len + 1 + j`` and ``q_lens`` caps live rows.  Rejected rows leave
+    int8 garbage at dead positions only (>= the committed length) — the
+    same no-rollback argument as the bf16 linear caches."""
+    from repro.models import layers
+    from repro.models import transformer as tf
+    if tf.family(cfg) != "uniform":
+        raise NotImplementedError("quant_decode_spec: uniform family only")
+    if ctx is None:
+        ctx = tf.ModelCtx()
+    B, Sq = tokens.shape
+    if q_lens is None:
+        q_lens = jnp.full((B,), Sq, jnp.int32)
+    q_lens = q_lens.astype(jnp.int32)
+    lens = cache["len"]
+    pos = lens[:, None] + jnp.arange(Sq)[None]          # (B, k) absolute
+    b_idx = jnp.arange(B)[:, None]
+    h = layers.embed_tokens(params["embed"], tokens)
+    paged = "block_table" in cache
+    if paged:
+        from repro.cache_layout import CacheLayout
+        from repro.kernels import ops
+        bs = cache["k_q"].shape[2]
+        nb = cache["block_table"].shape[1]
+        S = nb * bs
+        blk = jnp.minimum(pos // bs, nb - 1)
+        phys = cache["write_table"][b_idx, blk]
+        phys = jnp.where(pos < S, phys, 0)    # overflow rows -> null block
+        off = pos % bs
+        layout = CacheLayout(kind="paged", kv_bits=8, impl=ctx.decode_impl,
+                             block_size=bs)
+    else:
+        S = cache["k_q"].shape[2]
+
+    def body(x, inp):
+        blk_p, k_q, k_s, v_q, v_s = inp
+        hn = layers.apply_norm(cfg, blk_p["attn"]["norm"], x)
+        q, k, v = tf._qkv(cfg, blk_p["attn"], hn, pos, ctx)
+        kq_new, ks_new = quantize_kv(k)
+        vq_new, vs_new = quantize_kv(v)
+        if paged:
+            k_q = k_q.at[phys, off].set(kq_new)
+            k_s = k_s.at[phys, off].set(ks_new)
+            v_q = v_q.at[phys, off].set(vq_new)
+            v_s = v_s.at[phys, off].set(vs_new)
+            o = ops.decode_attention(
+                q, {"k_q": k_q, "k_s": k_s, "v_q": v_q, "v_s": v_s,
+                    "block_table": cache["block_table"]},
+                jnp.minimum(lens + 1, S), layout=layout, q_lens=q_lens)
+        else:
+            k_q = k_q.at[b_idx, pos].set(kq_new, mode="drop")
+            k_s = k_s.at[b_idx, pos].set(ks_new, mode="drop")
+            v_q = v_q.at[b_idx, pos].set(vq_new, mode="drop")
+            v_s = v_s.at[b_idx, pos].set(vs_new, mode="drop")
+            o = decode_attention_quant(q, k_q, k_s, v_q, v_s, lens + 1,
+                                       impl=ctx.decode_impl,
+                                       block_k=ctx.decode_block_k,
+                                       q_lens=q_lens)
+        x = x + o.reshape(B, Sq, cfg.q_dim) @ blk_p["attn"]["wo"]
+        f_out, _ = tf.ffn_apply(cfg, blk_p["ffn"], x, ctx)
+        x = x + f_out
+        return x, (k_q, k_s, v_q, v_s)
+
+    h, (kqs, kss, vqs, vss) = jax.lax.scan(
+        body, h, (params["blocks"], cache["k_q"], cache["k_s"],
+                  cache["v_q"], cache["v_s"]))
+    h = layers.apply_norm(cfg, params["final_norm"], h)
+    logits = layers.lm_logits(cfg, params, h)
+    accepts = tf.verify_greedy(tokens, logits, q_lens)
+    out = {"k_q": kqs, "k_s": kss, "v_q": vqs, "v_s": vss,
+           "len": cache["len"] + accepts}
+    if paged:
+        out["block_table"] = cache["block_table"]
+        out["write_table"] = cache["write_table"]
+    return logits, accepts, out
+
+
 def quant_prefill_kv(cfg, params, batch: Dict, ctx=None):
     """Full-sequence prefill forward returning quantized per-layer K/V.
 
@@ -205,10 +290,13 @@ def quant_prefill_kv(cfg, params, batch: Dict, ctx=None):
 
 
 def decode_attention_quant(q, k_q, k_s, v_q, v_s, lengths,
-                           softmax_scale=None, impl="dense", block_k=128):
-    """One-token decode against an int8 cache.
+                           softmax_scale=None, impl="dense", block_k=128,
+                           q_lens=None):
+    """Decode against an int8 cache.
 
-    q: (B, 1, H, D); k_q/v_q: (B, S, Hk, D) int8; k_s/v_s: (B, S, Hk).
+    q: (B, Sq, H, D); k_q/v_q: (B, S, Hk, D) int8; k_s/v_s: (B, S, Hk).
+    Sq > 1 is speculative k-row verification: draft row ``j`` attends with
+    effective length ``lengths + j`` and ``q_lens`` (B,) caps live rows.
     The score matmul runs int8 x bf16 -> f32 with the scale folded in
     afterwards (on TPU this is an int8 MXU pass — cache bytes halve AND
     the matmul rate doubles).  ``impl="flash"`` routes through the fused
@@ -221,23 +309,27 @@ def decode_attention_quant(q, k_q, k_s, v_q, v_s, lengths,
         from repro.kernels import ops
         return ops.flash_decode_quant(q, k_q, k_s, v_q, v_s, lengths,
                                       softmax_scale=softmax_scale,
-                                      block_k=block_k)
+                                      block_k=block_k, q_lens=q_lens)
     if impl != "dense":
         raise ValueError(f"decode impl {impl!r} (want dense|flash)")
-    B, _, H, D = q.shape
+    B, Sq, H, D = q.shape
     _, S, Hk, _ = k_q.shape
     G = H // Hk
     scale = softmax_scale if softmax_scale is not None else D ** -0.5
-    qg = q.reshape(B, Hk, G, D)
-    s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+    if q_lens is None:
+        q_lens = jnp.full((B,), Sq, jnp.int32)
+    qg = q.reshape(B, Sq, Hk, G, D)
+    s = jnp.einsum("bjhgd,bkhd->bhjgk", qg.astype(jnp.float32),
                    k_q.astype(jnp.float32))
-    s = s * k_s.transpose(0, 2, 1)[:, :, None, :] * scale
-    pos_k = jnp.arange(S)[None, :]
-    valid = pos_k < lengths[:, None]
-    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    s = s * k_s.transpose(0, 2, 1)[:, :, None, None, :] * scale
+    pos_k = jnp.arange(S)[None, None, :]
+    eff = (lengths[:, None] + jnp.arange(Sq)[None, :])[:, :, None]
+    valid = pos_k < eff
+    valid &= (jnp.arange(Sq)[None, :] < q_lens[:, None])[:, :, None]
+    s = jnp.where(valid[:, None, :, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    p = jnp.where(valid[:, None, None, :], p, 0.0)           # len==0 -> 0
-    pv = jnp.einsum("bhgk,bkhd->bhgd",
-                    (p * v_s.transpose(0, 2, 1)[:, :, None, :]),
+    p = jnp.where(valid[:, None, :, None, :], p, 0.0)        # len==0 -> 0
+    pv = jnp.einsum("bhjgk,bkhd->bjhgd",
+                    (p * v_s.transpose(0, 2, 1)[:, :, None, None, :]),
                     v_q.astype(jnp.float32))
-    return pv.reshape(B, 1, H, D).astype(q.dtype)
+    return pv.reshape(B, Sq, H, D).astype(q.dtype)

@@ -167,6 +167,114 @@ def attn_decode_paged(cfg: ArchConfig, p: Dict, x, position, ctx: ModelCtx,
     return out, k_pool, v_pool
 
 
+def attn_decode_spec(cfg: ArchConfig, p: Dict, x, position, ctx: ModelCtx,
+                     k_cache, v_cache, cache_len, q_lens, *,
+                     window: int = 0, snapshot: bool = False):
+    """Speculative k-row decode.  x: (B, k, d); position (B, k) (or
+    (B, k, 3) mrope); caches (B, S, Hk, D); cache_len (B,) committed rows;
+    q_lens (B,) in [1, k] live rows per slot.
+
+    All k rows' K/V land at positions ``cache_len + j`` *before* the
+    attention; the k-row decode kernels give draft row ``j`` the effective
+    length ``cache_len + 1 + j`` (causal intra-draft: cache plus rows
+    ``<= j``) and zero out rows ``>= q_lens``.  Dead/rejected rows leave
+    garbage only at positions beyond the committed length — masked until
+    linear appends overwrite them — so linear caches need no rollback.
+
+    Ring caches (``window > 0``): rows land at ``(cache_len + j) % S``.
+    Exactness against row-by-row decode needs ``S >= window + k - 1``
+    (:func:`init_cache` ``spec_margin``): then a slot written by row
+    ``j' > j`` is outside row ``j``'s window band — exactly as the old
+    position it overwrote would have been.  ``snapshot=True`` also returns
+    the k overwritten (k, v) row pairs so the caller can restore rejected
+    rows post-verification (:func:`_restore_ring_rows`)."""
+    B, Sq = x.shape[:2]
+    S = k_cache.shape[1]
+    h = layers.apply_norm(cfg, p["norm"], x)
+    q, k, v = _qkv(cfg, p, h, position, ctx)
+    b_idx = jnp.arange(B)[:, None]
+    pos = cache_len[:, None] + jnp.arange(Sq)[None]
+    snaps = None
+    if window > 0:
+        slots = pos % S
+        if snapshot:
+            snaps = (k_cache[b_idx, slots], v_cache[b_idx, slots])
+        k_cache = k_cache.at[b_idx, slots].set(k.astype(k_cache.dtype))
+        v_cache = v_cache.at[b_idx, slots].set(v.astype(v_cache.dtype))
+        o = attn_lib.decode_attention(q, k_cache, v_cache, cache_len + 1,
+                                      window=window, ring=True,
+                                      impl=ctx.decode_impl,
+                                      block_k=ctx.decode_block_k,
+                                      q_lens=q_lens)
+    else:
+        # dead rows spilling past the cache end are dropped, not clamped —
+        # a clamp would race them against row S-1's live write
+        k_cache = k_cache.at[b_idx, pos].set(k.astype(k_cache.dtype),
+                                             mode="drop")
+        v_cache = v_cache.at[b_idx, pos].set(v.astype(v_cache.dtype),
+                                             mode="drop")
+        o = attn_lib.decode_attention(q, k_cache, v_cache,
+                                      jnp.minimum(cache_len + 1, S),
+                                      impl=ctx.decode_impl,
+                                      block_k=ctx.decode_block_k,
+                                      q_lens=q_lens)
+    out = o.reshape(B, Sq, cfg.q_dim) @ p["wo"]
+    return out, k_cache, v_cache, snaps
+
+
+def attn_decode_paged_spec(cfg: ArchConfig, p: Dict, x, position,
+                           ctx: ModelCtx, k_pool, v_pool, read_table,
+                           write_table, cache_len, q_lens):
+    """Speculative k-row twin of :func:`attn_decode_paged`: the k-token
+    span scatters through the write table (row ``j`` at physical block
+    ``write_table[b, (len + j) // bs]``, offset ``(len + j) % bs``); rows
+    overflowing the virtual space land in the null block 0.  The engine
+    pre-owns every block the live span touches
+    (:meth:`~repro.serving.block_pool.SlotTables.ensure_writable_span`),
+    so accepted rows always land in readable blocks; rejected rows leave
+    garbage at dead positions only."""
+    from repro.cache_layout import CacheLayout
+    from repro.kernels import ops
+    B, Sq = x.shape[:2]
+    bs = k_pool.shape[1]
+    nb = read_table.shape[1]
+    S = nb * bs
+    h = layers.apply_norm(cfg, p["norm"], x)
+    q, k, v = _qkv(cfg, p, h, position, ctx)
+    pos = cache_len[:, None] + jnp.arange(Sq)[None]
+    blk = jnp.minimum(pos // bs, nb - 1)
+    phys = write_table[jnp.arange(B)[:, None], blk]
+    phys = jnp.where(pos < S, phys, 0)
+    off = pos % bs
+    k_pool = k_pool.at[phys, off].set(k.astype(k_pool.dtype))
+    v_pool = v_pool.at[phys, off].set(v.astype(v_pool.dtype))
+    layout = CacheLayout(kind="paged", impl=ctx.decode_impl, block_size=bs)
+    o = ops.decode_attention(q, {"k": k_pool, "v": v_pool,
+                                 "block_table": read_table},
+                             jnp.minimum(cache_len + 1, S), layout=layout,
+                             q_lens=q_lens)
+    out = o.reshape(B, Sq, cfg.q_dim) @ p["wo"]
+    return out, k_pool, v_pool
+
+
+def _restore_ring_rows(k_cache, v_cache, snaps, cache_len, accepts, Sq: int):
+    """Put back the pre-step (k, v) ring rows for rejected draft rows
+    (``j >= accepts``) — the rollback half of gemma ring speculation.
+    ``snaps``: the (B, Sq, Hk, D) row pairs :func:`attn_decode_spec`
+    captured before writing."""
+    S = k_cache.shape[1]
+    B = k_cache.shape[0]
+    b_idx = jnp.arange(B)[:, None]
+    slots = (cache_len[:, None] + jnp.arange(Sq)[None]) % S
+    keep = (jnp.arange(Sq)[None] < accepts[:, None])[..., None, None]
+    snap_k, snap_v = snaps
+    k_cache = k_cache.at[b_idx, slots].set(
+        jnp.where(keep, k_cache[b_idx, slots], snap_k))
+    v_cache = v_cache.at[b_idx, slots].set(
+        jnp.where(keep, v_cache[b_idx, slots], snap_v))
+    return k_cache, v_cache
+
+
 def init_cross_attn(key, cfg: ArchConfig) -> Dict:
     return init_attn_block(key, cfg, cross=True)
 
@@ -385,6 +493,41 @@ def _uniform_decode_paged(cfg, params, h, position, ctx, cache):
                "write_table": write_t, "len": cache["len"] + 1}
 
 
+def _uniform_decode_spec(cfg, params, h, position, ctx, cache, q_lens):
+    def body(x, inp):
+        blk, kc, vc = inp
+        a_out, kc, vc, _ = attn_decode_spec(cfg, blk["attn"], x, position,
+                                            ctx, kc, vc, cache["len"], q_lens)
+        x = x + a_out
+        f_out, _ = ffn_apply(cfg, blk["ffn"], x, ctx)
+        x = x + f_out
+        return x, (kc, vc)
+
+    h, (kcs, vcs) = jax.lax.scan(body, h, (params["blocks"],
+                                           cache["k"], cache["v"]))
+    return h, {"k": kcs, "v": vcs, "len": cache["len"]}
+
+
+def _uniform_decode_paged_spec(cfg, params, h, position, ctx, cache, q_lens):
+    read_t = cache["block_table"]
+    write_t = cache["write_table"]
+
+    def body(x, inp):
+        blk, kp, vp = inp
+        a_out, kp, vp = attn_decode_paged_spec(
+            cfg, blk["attn"], x, position, ctx, kp, vp, read_t, write_t,
+            cache["len"], q_lens)
+        x = x + a_out
+        f_out, _ = ffn_apply(cfg, blk["ffn"], x, ctx)
+        x = x + f_out
+        return x, (kp, vp)
+
+    h, (kps, vps) = jax.lax.scan(body, h, (params["blocks"],
+                                           cache["k"], cache["v"]))
+    return h, {"k": kps, "v": vps, "block_table": read_t,
+               "write_table": write_t, "len": cache["len"]}
+
+
 # --- rwkv forward ------------------------------------------------------------
 
 def _rwkv_forward(cfg, params, h, ctx):
@@ -546,6 +689,28 @@ def _gemma_decode(cfg, params, h, position, ctx, cache):
     return h, {"k": tuple(new_k), "v": tuple(new_v), "len": cache["len"] + 1}
 
 
+def _gemma_decode_spec(cfg, params, h, position, ctx, cache, q_lens):
+    """k-row gemma decode: global layers are linear (no rollback needed);
+    local ring layers snapshot the k rows they overwrite so
+    :func:`decode_spec` can restore the rejected ones post-verification.
+    Returns (h, cache, snaps) with ``snaps[i]`` None for global layers."""
+    kinds = cfg.layer_kinds()
+    new_k, new_v, snaps = [], [], []
+    for i, (blk, kind) in enumerate(zip(params["blocks"], kinds)):
+        window = cfg.sliding_window if kind == "local_attn" else 0
+        a_out, kc, vc, snap = attn_decode_spec(
+            cfg, blk["attn"], h, position, ctx, cache["k"][i], cache["v"][i],
+            cache["len"], q_lens, window=window, snapshot=window > 0)
+        h = h + a_out
+        f_out, _ = ffn_apply(cfg, blk["ffn"], h, ctx)
+        h = h + f_out
+        new_k.append(kc)
+        new_v.append(vc)
+        snaps.append(snap)
+    return h, {"k": tuple(new_k), "v": tuple(new_v),
+               "len": cache["len"]}, snaps
+
+
 # --- whisper (enc-dec) --------------------------------------------------------
 
 def _sinusoid(F: int, d: int):
@@ -622,6 +787,30 @@ def _whisper_decode(cfg, params, h, position, ctx, cache):
                   cache["cross_k"], cache["cross_v"]))
     return h, {"k": kcs, "v": vcs, "cross_k": cache["cross_k"],
                "cross_v": cache["cross_v"], "len": cache["len"] + 1}
+
+
+def _whisper_decode_spec(cfg, params, h, position, ctx, cache, q_lens):
+    # cross-attention is non-causal over a fixed frame count — every draft
+    # row attends all frames, so k rows are safe; force the naive impl so
+    # the k-row scores reduce bit-identically to the single-row decode path
+    cross_ctx = dataclasses.replace(ctx, attn_impl="naive")
+
+    def body(x, inp):
+        blk, kc, vc, ck, cv = inp
+        a_out, kc, vc, _ = attn_decode_spec(cfg, blk["attn"], x, position,
+                                            ctx, kc, vc, cache["len"],
+                                            q_lens)
+        x = x + a_out
+        x = x + cross_attn_apply(cfg, blk["cross"], x, (ck, cv), cross_ctx)
+        f_out, _ = ffn_apply(cfg, blk["ffn"], x, ctx)
+        x = x + f_out
+        return x, (kc, vc)
+
+    h, (kcs, vcs) = jax.lax.scan(
+        body, h, (params["blocks"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    return h, {"k": kcs, "v": vcs, "cross_k": cache["cross_k"],
+               "cross_v": cache["cross_v"], "len": cache["len"]}
 
 
 # ---------------------------------------------------------------------------
@@ -991,8 +1180,19 @@ def loss_fn(cfg: ArchConfig, params: Dict, batch: Dict,
 
 # --- caches -------------------------------------------------------------------
 
-def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Dict:
-    """Decode cache pytree (all-zeros; lengths supplied separately)."""
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               spec_margin: int = 0) -> Dict:
+    """Decode cache pytree (all-zeros; lengths supplied separately).
+
+    ``spec_margin`` (speculative decode, ``k - 1`` for draft width k):
+    extra rows on gemma's sliding-window ring buffers.  A k-row
+    speculative step writes k consecutive ring slots before attending, so
+    exactness against row-by-row decode needs the slots written by rows
+    ``> j`` to sit *outside* row ``j``'s window band — true iff the ring
+    holds ``window + k - 1`` rows (the overwritten positions were outside
+    the band too, so the attended sets match).  Linear caches need no
+    margin: rejected rows land at dead positions beyond the committed
+    length."""
     fam = family(cfg)
     dtype = jnp.dtype(cfg.dtype)
     Hk, D = cfg.num_kv_heads, cfg.head_dim
@@ -1024,7 +1224,8 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Dict:
         kinds = cfg.layer_kinds()
         ks, vs = [], []
         for kind in kinds:
-            s = cfg.sliding_window if kind == "local_attn" else max_len
+            s = (cfg.sliding_window + spec_margin
+                 if kind == "local_attn" else max_len)
             ks.append(jnp.zeros((batch, s, Hk, D), dtype))
             vs.append(jnp.zeros((batch, s, Hk, D), dtype))
         return {"k": tuple(ks), "v": tuple(vs),
@@ -1074,10 +1275,13 @@ def prefill_into_cache(cfg: ArchConfig, params: Dict, batch: Dict,
 # wkv recurrent rows, whisper cross-KV); the engine never looks inside it.
 
 
-def init_slots(cfg: ArchConfig, n_slots: int, max_len: int) -> Dict:
+def init_slots(cfg: ArchConfig, n_slots: int, max_len: int,
+               spec_margin: int = 0) -> Dict:
     """Slot-indexed decode state for ``n_slots`` concurrent requests (the
-    serving alias of :func:`init_cache`: one cache row == one slot)."""
-    return init_cache(cfg, n_slots, max_len)
+    serving alias of :func:`init_cache`: one cache row == one slot).
+    ``spec_margin``: gemma ring headroom for speculative decode — see
+    :func:`init_cache`."""
+    return init_cache(cfg, n_slots, max_len, spec_margin=spec_margin)
 
 
 def init_paged_slots(cfg: ArchConfig, n_slots: int, max_len: int, *,
@@ -1269,8 +1473,9 @@ def _gemma_prefill_slot(cfg, params, cache, tokens, true_len, slot, ctx):
     for (k, v), kind, kc, vc in zip(kvs, cfg.layer_kinds(),
                                     cache["k"], cache["v"]):
         if kind == "local_attn":                 # ring-buffer rows
-            k_row = _ring_rows(k[0], true_len, cfg.sliding_window)
-            v_row = _ring_rows(v[0], true_len, cfg.sliding_window)
+            ring = kc.shape[1]       # window + spec margin (see init_cache)
+            k_row = _ring_rows(k[0], true_len, ring)
+            v_row = _ring_rows(v[0], true_len, ring)
         else:                                    # full rows from position 0
             k_row, v_row = k[0], v[0]
         new_k.append(jax.lax.dynamic_update_slice(
@@ -1462,3 +1667,102 @@ def decode_step(cfg: ArchConfig, params: Dict, cache: Dict, tokens,
     h = layers.apply_norm(cfg, params["final_norm"], h)
     logits = layers.lm_logits(cfg, params, h)
     return logits, cache
+
+
+# Families whose decode state is a pure KV cache: rejected draft rows can
+# be abandoned (linear caches) or restored (gemma rings).  jamba / rwkv6
+# carry recurrent per-token state that cannot cheaply rewind.
+SPEC_FAMILIES = ("uniform", "gemma", "whisper")
+
+
+def verify_greedy(tokens, logits, q_lens):
+    """Greedy draft verification.  ``tokens`` (B, k) are the step inputs
+    (row 0 = last committed token, rows 1.. = drafts), ``logits`` (B, k, V)
+    from :func:`decode_spec`, ``q_lens`` (B,) live rows.  Returns
+    ``accepts`` (B,) in ``[1, q_lens]``: row ``j``'s greedy emission
+    ``argmax(logits[:, j])`` counts iff every earlier draft row matched the
+    emission before it — by induction the accepted prefix is exactly what
+    row-by-row greedy decode would have produced."""
+    B, k = tokens.shape
+    g = jnp.argmax(logits, axis=-1)
+    ok = (tokens[:, 1:] == g[:, :-1]) & \
+        (jnp.arange(k - 1)[None] < q_lens[:, None] - 1)
+    return (1 + jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1),
+                        axis=1)).astype(jnp.int32)
+
+
+def decode_spec(cfg: ArchConfig, params: Dict, cache: Dict, tokens,
+                ctx: ModelCtx = ModelCtx(), q_lens=None, positions=None):
+    """Speculative k-row decode + greedy verification + commit.
+
+    ``tokens`` (B, k): row 0 is the last committed token (whose KV is not
+    yet in the cache — the same contract as :func:`decode_step`), rows
+    ``1..k-1`` the self-drafted continuation.  ``q_lens`` (B,) in
+    ``[1, k]``: live rows per slot (1 = plain single-step for that slot;
+    default all-k).  ``positions`` (B, k) or (B, k, 3): explicit decode
+    positions (mrope).
+
+    Returns ``(logits (B, k, V), accepts (B,), cache)``: the emitted
+    tokens are ``argmax(logits, -1)[:, :accepts]`` per slot, and the cache
+    is *committed* — ``len += accepts``, with gemma ring rows written by
+    rejected drafts restored from pre-step snapshots.  Rejected rows on
+    linear caches (uniform dense/paged, whisper, gemma global layers)
+    leave garbage only at positions beyond the committed length, which the
+    per-slot length masks until later appends overwrite it.
+
+    Recurrent-state families raise: their per-token state cannot cheaply
+    roll back a rejected draft."""
+    fam = family(cfg)
+    if fam not in SPEC_FAMILIES:
+        raise ValueError(
+            f"speculative decode needs a rollback-free KV cache; family "
+            f"{fam!r} carries recurrent per-token state that cannot rewind "
+            f"rejected draft rows (supported: {SPEC_FAMILIES})")
+    B, k = tokens.shape
+    if q_lens is None:
+        q_lens = jnp.full((B,), k, jnp.int32)
+    q_lens = q_lens.astype(jnp.int32)
+    if fam == "gemma":
+        for kc, kind in zip(cache["k"], cfg.layer_kinds()):
+            if kind == "local_attn" and \
+                    kc.shape[1] < cfg.sliding_window + k - 1:
+                raise ValueError(
+                    f"gemma speculative decode with k={k} needs ring "
+                    f"buffers of >= window + k - 1 = "
+                    f"{cfg.sliding_window + k - 1} rows (have "
+                    f"{kc.shape[1]}); build the state with "
+                    f"init_cache(..., spec_margin=k - 1)")
+    h = layers.embed_tokens(params["embed"], tokens)
+    if cfg.pos_type == "learned":
+        h = h + jnp.take(params["dec_pos"],
+                         cache["len"][:, None] + jnp.arange(k), axis=0)
+    pos = positions if positions is not None \
+        else cache["len"][:, None] + jnp.arange(k)[None]
+    snaps = None
+    if fam == "uniform":
+        if "block_table" in cache:
+            h, cache = _uniform_decode_paged_spec(cfg, params, h, pos, ctx,
+                                                  cache, q_lens)
+        else:
+            h, cache = _uniform_decode_spec(cfg, params, h, pos, ctx, cache,
+                                            q_lens)
+    elif fam == "gemma":
+        h, cache, snaps = _gemma_decode_spec(cfg, params, h, pos, ctx,
+                                             cache, q_lens)
+    else:
+        h, cache = _whisper_decode_spec(cfg, params, h, pos, ctx, cache,
+                                        q_lens)
+    h = layers.apply_norm(cfg, params["final_norm"], h)
+    logits = layers.lm_logits(cfg, params, h)
+    accepts = verify_greedy(tokens, logits, q_lens)
+    cache = dict(cache)
+    if snaps is not None:
+        new_k, new_v = list(cache["k"]), list(cache["v"])
+        for i, snap in enumerate(snaps):
+            if snap is None:
+                continue
+            new_k[i], new_v[i] = _restore_ring_rows(
+                new_k[i], new_v[i], snap, cache["len"], accepts, k)
+        cache["k"], cache["v"] = tuple(new_k), tuple(new_v)
+    cache["len"] = cache["len"] + accepts
+    return logits, accepts, cache

@@ -108,6 +108,9 @@ class EngineConfig:
     sample_seed: int = 0                # base of the per-request RNG keys
     layout: CacheLayout = CacheLayout()  # cache layout spec (kind/bits/impl)
     prefill_chunk: int = 0              # uniform streaming prefill chunk
+    spec_k: int = 1                     # speculative decode: rows verified
+                                        # per step (1 = classic one-token)
+    spec_draft: str = "ngram"           # self-speculative draft source
 
 
 def _bucket(n: int, quantum: int, cap: int) -> int:
@@ -156,6 +159,44 @@ def _greedy_tokens(logits):
 def _fold_and_sample(logits, temperatures, top_ks, keys, counts):
     keys = jax.vmap(jax.random.fold_in)(keys, counts)
     return sample_tokens(logits, temperatures, top_ks, keys)
+
+
+def ngram_draft(history, need: int, lookback: int = 64) -> List[int]:
+    """Self-speculative n-gram draft (prompt-lookup style): propose up to
+    ``need`` continuation tokens by matching the tail of ``history``
+    (prompt + generated so far) against its own recent past — bigram match
+    first, unigram fallback, empty when nothing recurs.  No second model:
+    the k-row verification step prices wrong drafts at zero extra
+    cache-read bytes, so even a weak drafter only ever helps.  ``lookback``
+    bounds the backward scan so drafting stays O(1) per step."""
+    if need <= 0 or len(history) < 2:
+        return []
+
+    def match_once(h, want):
+        for width in (2, 1):
+            if len(h) <= width:
+                continue
+            pat = h[-width:]
+            start = max(0, len(h) - 1 - lookback)
+            for i in range(len(h) - 1 - width, start - 1, -1):
+                if h[i:i + width] == pat:
+                    cont = h[i + width:i + width + want]
+                    if cont:
+                        return [int(t) for t in cont]
+        return []
+
+    # Autoregressive extension: a match near the tail (e.g. a repeated run
+    # "... x x x") yields a continuation truncated by the end of history.
+    # Re-matching against history + draft-so-far fills the budget, so runs
+    # and short cycles draft the full k-1 instead of one token.
+    h, out = list(history), []
+    while len(out) < need:
+        step = match_once(h, need - len(out))
+        if not step:
+            break
+        out.extend(step)
+        h.extend(step)
+    return out
 
 
 class AdmissionQueue:
@@ -230,6 +271,11 @@ class SlotBackend:
     ``_decode_impl`` (traced one-token decode for every slot)."""
 
     families = None                     # set by @register_family (None: any)
+    # speculative decode rows per step.  The engine stamps the resolved
+    # value BEFORE init_slots so state that depends on it (gemma local
+    # rings, sized window + spec_k - 1 for mid-draft wraparound exactness)
+    # is built to match; composition backends forward it to their inner.
+    spec_k = 1
 
     def __init__(self, cfg, params, ctx: Optional[tf.ModelCtx] = None,
                  decode_impl: Optional[str] = None):
@@ -262,6 +308,11 @@ class SlotBackend:
             self.layout = CacheLayout(impl=self.ctx.decode_impl)
         if hasattr(self, "_copy_impl"):
             self._copy = jax.jit(self._copy_impl)
+        if hasattr(self, "_decode_spec_impl"):
+            self._decode_spec = jax.jit(self._decode_spec_impl,
+                                        donate_argnums=donate)
+            self._decode_spec_packed = jax.jit(self._packed_spec_impl,
+                                               donate_argnums=donate)
 
     def kv_keys(self) -> tuple:
         return KV_KEYS[self.family]
@@ -302,6 +353,42 @@ class SlotBackend:
             return self._decode(self.params, cache, tokens)
         return self._decode(self.params, cache, tokens, positions)
 
+    def decode_spec(self, cache: Dict, tokens, q_lens, positions=None):
+        """Speculative k-row step: tokens (n_slots, k) — row 0 the last
+        committed token, rows 1.. self-drafted — verified greedily in one
+        fused pass.  Returns (logits (n_slots, k, V), accepts (n_slots,),
+        committed cache).  ``positions`` (n_slots, k, 3): mrope."""
+        if not hasattr(self, "_decode_spec"):
+            raise NotImplementedError(
+                f"{type(self).__name__} has no speculative decode path")
+        if positions is None:
+            return self._decode_spec(self.params, cache, tokens, q_lens)
+        return self._decode_spec(self.params, cache, tokens, q_lens,
+                                 positions)
+
+    def _packed_spec_impl(self, params, cache, packed, positions=None):
+        tokens, q_lens = packed[:, :-1], packed[:, -1]
+        if positions is None:
+            return self._decode_spec_impl(params, cache, tokens, q_lens)
+        return self._decode_spec_impl(params, cache, tokens, q_lens,
+                                      positions)
+
+    def decode_spec_packed(self, cache: Dict, packed, positions=None):
+        """:meth:`decode_spec` minus one host->device put: ``packed``
+        (n_slots, k + 1) int32 carries the draft rows with ``q_lens`` in
+        the last column, uploaded as a single array and split inside the
+        jitted step.  On CPU-sized models the second upload is a
+        measurable share of a decode step, so the engine hot loop prefers
+        this entry point."""
+        if not hasattr(self, "_decode_spec_packed"):
+            raise NotImplementedError(
+                f"{type(self).__name__} has no speculative decode path")
+        packed = jnp.asarray(packed, jnp.int32)
+        if positions is None:
+            return self._decode_spec_packed(self.params, cache, packed)
+        return self._decode_spec_packed(self.params, cache, packed,
+                                        positions)
+
 
 @register_family("uniform", "gemma", "jamba", "rwkv6", "whisper")
 class NativeBackend(SlotBackend):
@@ -318,11 +405,17 @@ class NativeBackend(SlotBackend):
         super().__init__(cfg, params, ctx, decode_impl)
 
     def init_slots(self, n_slots: int, max_len: int) -> Dict:
-        return tf.init_slots(self.cfg, n_slots, max_len)
+        return tf.init_slots(self.cfg, n_slots, max_len,
+                             spec_margin=self.spec_k - 1)
 
     def _decode_impl(self, params, cache, tokens, positions=None):
         return tf.decode_step(self.cfg, params, cache, tokens, self.ctx,
                               positions=positions)
+
+    def _decode_spec_impl(self, params, cache, tokens, q_lens,
+                          positions=None):
+        return tf.decode_spec(self.cfg, params, cache, tokens, self.ctx,
+                              q_lens=q_lens, positions=positions)
 
     def _prefill_impl(self, params, cache, tokens, true_len, slot,
                       frames=None, grid=None):
@@ -354,6 +447,15 @@ class Int8KVBackend(SlotBackend):
                 "make_backend routes mrope archs through Int8KVSlots")
         return kvquant.quant_decode_step(self.cfg, params, cache, tokens,
                                          self.ctx)
+
+    def _decode_spec_impl(self, params, cache, tokens, q_lens,
+                          positions=None):
+        if positions is not None:
+            raise NotImplementedError(
+                "fused int8 decode has no mrope positions path; "
+                "make_backend routes mrope archs through Int8KVSlots")
+        return kvquant.quant_decode_spec(self.cfg, params, cache, tokens,
+                                         self.ctx, q_lens=q_lens)
 
     def _prefill_impl(self, params, cache, tokens, true_len, slot,
                       frames=None, grid=None):
@@ -404,6 +506,7 @@ class Int8KVSlots(SlotBackend):
         return {**qcache["rest"], **kv}
 
     def init_slots(self, n_slots: int, max_len: int) -> Dict:
+        self.inner.spec_k = self.spec_k     # sizes gemma rings in the inner
         return self._quant(self.inner.init_slots(n_slots, max_len))
 
     def _decode_impl(self, params, qcache, tokens, positions=None):
@@ -411,6 +514,15 @@ class Int8KVSlots(SlotBackend):
                                                 self._dequant(qcache),
                                                 tokens, positions)
         return logits, self._quant(cache)
+
+    def _decode_spec_impl(self, params, qcache, tokens, q_lens,
+                          positions=None):
+        # requantizing untouched rows is exact (the max element pins the
+        # scale), so dequant -> inner k-row verify -> requant preserves
+        # the inner path's token-exactness guarantee
+        logits, accepts, cache = self.inner._decode_spec_impl(
+            params, self._dequant(qcache), tokens, q_lens, positions)
+        return logits, accepts, self._quant(cache)
 
     def _prefill_impl(self, params, qcache, tokens, true_len, slot,
                       frames=None, grid=None):
@@ -469,6 +581,11 @@ class PagedNativeBackend(_PagedBackendMixin, SlotBackend):
         return tf.decode_step(self.cfg, params, cache, tokens, self.ctx,
                               positions=positions)
 
+    def _decode_spec_impl(self, params, cache, tokens, q_lens,
+                          positions=None):
+        return tf.decode_spec(self.cfg, params, cache, tokens, self.ctx,
+                              q_lens=q_lens, positions=positions)
+
     def _prefill_impl(self, params, cache, tokens, true_len, slot,
                       frames=None, grid=None):
         return tf.prefill_into_slot(self.cfg, params, cache, tokens,
@@ -507,6 +624,15 @@ class PagedInt8Backend(_PagedBackendMixin, SlotBackend):
                 "make_backend routes mrope archs through the composition")
         return kvquant.quant_decode_step(self.cfg, params, cache, tokens,
                                          self.ctx)
+
+    def _decode_spec_impl(self, params, cache, tokens, q_lens,
+                          positions=None):
+        if positions is not None:
+            raise NotImplementedError(
+                "fused int8 decode has no mrope positions path; "
+                "make_backend routes mrope archs through the composition")
+        return kvquant.quant_decode_spec(self.cfg, params, cache, tokens,
+                                         self.ctx, q_lens=q_lens)
 
     def _prefill_impl(self, params, cache, tokens, true_len, slot,
                       frames=None, grid=None):
@@ -577,6 +703,9 @@ class PagedSlots(_PagedBackendMixin, SlotBackend):
         return self.inner.kv_keys()
 
     def init_slots(self, n_slots: int, max_len: int) -> Dict:
+        # forward spec_k before building the template: margined gemma
+        # rings (window + spec_k - 1 != max_len) stay slot-resident
+        self.inner.spec_k = self.spec_k
         template = self.inner.init_slots(n_slots, max_len)
         bs = self.layout.block_size
         nb = blocks_per_slot(self.layout, max_len)
@@ -677,6 +806,15 @@ class PagedSlots(_PagedBackendMixin, SlotBackend):
         logits, dense = self.inner._decode_impl(params, self._gather(cache),
                                                 tokens, positions)
         return logits, self._repool(cache, dense)
+
+    def _decode_spec_impl(self, params, cache, tokens, q_lens,
+                          positions=None):
+        # gather -> inner k-row verify -> repool is pure data movement:
+        # rejected rows land as garbage at dead positions of exclusively
+        # owned blocks (the engine COWs the whole span first)
+        logits, accepts, dense = self.inner._decode_spec_impl(
+            params, self._gather(cache), tokens, q_lens, positions)
+        return logits, accepts, self._repool(cache, dense)
 
     def _prefill_impl(self, params, cache, tokens, true_len, slot,
                       frames=None, grid=None):
@@ -807,6 +945,33 @@ class ServingEngine:
                 and getattr(backend, "supports_prefix_sharing", False))
             if metrics is not None:
                 self.pool.attach_metrics(metrics)
+        # speculative decode: k rows verified per scheduler step
+        self.spec_k = max(1, int(ecfg.spec_k))
+        if self.spec_k > 1:
+            if ecfg.spec_draft != "ngram":
+                raise ValueError(
+                    f"unknown spec_draft {ecfg.spec_draft!r}; the engine "
+                    "is self-speculative (draft='ngram', no second model)")
+            fam = getattr(backend, "family", None)
+            if fam is not None and fam not in tf.SPEC_FAMILIES:
+                raise ValueError(
+                    f"speculative decode (spec_k={self.spec_k}) needs a "
+                    f"pure-KV cache family {tf.SPEC_FAMILIES}; {fam!r} "
+                    "carries recurrent per-token state that cannot rewind "
+                    "a rejected draft — serve it with spec_k=1")
+            has_spec = (hasattr(backend, "_decode_spec")
+                        or hasattr(backend, "_decode_spec_impl")
+                        or (not isinstance(backend, SlotBackend)
+                            and hasattr(backend, "decode_spec")))
+            if not has_spec:
+                raise ValueError(
+                    f"{type(backend).__name__} has no speculative decode "
+                    "path; serve it with spec_k=1")
+            # stamp BEFORE init_slots: gemma local rings must be sized
+            # window + spec_k - 1 for mid-draft wraparound exactness.
+            # max() keeps a shared backend's rings large enough for every
+            # engine using it (single-step on a margined ring is exact)
+            backend.spec_k = max(getattr(backend, "spec_k", 1), self.spec_k)
         init = getattr(backend, "init_slots", None) or backend.init_cache
         self.cache = init(n, ecfg.max_len)
         self.queue = AdmissionQueue()
@@ -835,6 +1000,12 @@ class ServingEngine:
         # bytes integrated over decode steps (modeled via roofline)
         self.max_concurrent = 0
         self._kv_bytes_sum = 0.0
+        # speculative accounting: tokens emitted by decode steps (not
+        # scheduler steps) over live slot-steps, so accepted_tokens/step
+        # is per slot (classic single-step decode == exactly 1.0)
+        self.spec_tokens = 0
+        self.spec_slot_steps = 0
+        self.spec_rows = 0      # verify rows run (drafting intensity)
 
     # -- bookkeeping helpers -------------------------------------------------
 
@@ -1013,10 +1184,10 @@ class ServingEngine:
             lambda: self.backend.prefill(self.cache, padded,
                                          len(prompt), slot, **kwargs))
         self.prefills += 1
+        self._slot_len[slot] = len(prompt)
         if self.tables is not None:
             # publish this prompt's self-computed blocks for later sharers
             self.tables.seal_prompt(slot)
-            self._slot_len[slot] = len(prompt)
         key = self._request_key(req)
         first = sample_token(logits_row, req.temperature, req.top_k,
                              jax.random.fold_in(key, 0))
@@ -1079,6 +1250,8 @@ class ServingEngine:
             self.metrics.gauge("engine.active_slots").set(active)
 
     def _decode_once(self) -> None:
+        if self.spec_k > 1:
+            return self._spec_decode_once()
         if self.tables is not None:
             # make every active slot's KV frontier exclusively owned before
             # the step writes there: COW off shared tails, claim sole-owner
@@ -1168,6 +1341,150 @@ class ServingEngine:
                     self.tables.release(s)  # refcounts back to the pool
                 self._trace_request(rec, s)
 
+    def _spec_decode_once(self) -> None:
+        """One speculative scheduler step: self-draft up to ``spec_k - 1``
+        continuation tokens per greedy slot, verify all rows in one fused
+        k-row decode, commit per-slot accepted prefixes.  Token streams are
+        identical to single-step decode by construction (greedy
+        verification accepts exactly the prefix row-by-row decode would
+        have emitted); sampled slots fall back to one token per step."""
+        n, k = self.ecfg.n_slots, self.spec_k
+        rows = np.full((n, k), self.ecfg.pad_id, np.int32)
+        rows[:, 0] = self.slot_tokens[:, 0]
+        q_lens = np.ones(n, np.int64)
+        for s in range(n):
+            req = self.slot_req[s]
+            if req is None:
+                continue
+            # draft cap: the step writes q_len KV rows at len..len+q_len-1
+            # (must fit max_len) and can emit at most the slot's remaining
+            # token budget; sampled streams verify nothing — draft 0
+            cap = min(k - 1, int(self.slot_remaining[s]) - 1,
+                      self.ecfg.max_len - 1 - int(self._slot_len[s]))
+            if req.temperature > 0.0:
+                cap = 0
+            if cap > 0:
+                draft = ngram_draft(
+                    list(req.prompt) + self.outputs[req.rid], cap)
+                rows[s, 1:1 + len(draft)] = draft
+                q_lens[s] = 1 + len(draft)
+        # shape-bucketed verify: run this step at the smallest power-of-two
+        # row count covering the longest draft (1, 2, ... up to spec_k), so
+        # short-draft steps pay near single-row cost instead of the full
+        # k-row shape.  Each bucket jit-compiles once and is then cached.
+        k_step = 1
+        while k_step < int(q_lens.max()):
+            k_step *= 2
+        k_step = min(k_step, k)
+        rows = rows[:, :k_step]
+        if self.tables is not None:
+            # own the whole write span up front: one pass per touched
+            # block regardless of k (batched COW)
+            for s in range(n):
+                if self.slot_req[s] is None:
+                    continue
+                for src, dst in self.tables.ensure_writable_span(
+                        s, int(self._slot_len[s]), int(q_lens[s])):
+                    self.cache = self.backend.copy_block(self.cache,
+                                                         src, dst)
+                    self.tracer.instant("pool.cow", track="pool", slot=s,
+                                        src=src, dst=dst)
+            self._sync_tables()
+        positions = None
+        if getattr(self.backend, "needs_positions", False):
+            # (n, k_step, 3): text decode advances t/h/w together per row
+            pos = self.slot_pos[:, None] + np.arange(k_step)[None, :]
+            positions = jnp.asarray(
+                np.broadcast_to(pos[:, :, None], (n, k_step, 3)), jnp.int32)
+        if hasattr(self.backend, "_decode_spec_packed"):
+            # one upload for rows + q_lens (last column), done before the
+            # timed call — like the classic path's device-resident tokens,
+            # the clock prices the model step, not the host handoff
+            packed = jnp.asarray(np.concatenate(
+                [rows, q_lens[:, None].astype(np.int32)], axis=1))
+            call = lambda: self.backend.decode_spec_packed(  # noqa: E731
+                self.cache, packed, positions)
+        else:
+            tokens = jnp.asarray(rows)
+            q_dev = jnp.asarray(q_lens, jnp.int32)
+            call = lambda: self.backend.decode_spec(  # noqa: E731
+                self.cache, tokens, q_dev, positions)
+        step_t0 = self.clock.now
+        step_args = self._decode_model_args() if self.tracer.enabled else None
+        live_rows = int(q_lens[[s for s in range(n)
+                                if self.slot_req[s] is not None]].sum())
+        if step_args:
+            # the verify pass runs q_len rows per slot through the model:
+            # FLOPs scale with live rows, while attn_read_bytes stays the
+            # single-step figure (the cache streams once per STEP — the
+            # perf win speculative decode is buying)
+            step_args["model_flops"] *= live_rows / step_args["n_active"]
+            step_args["spec_q_rows"] = live_rows
+        logits, accepts_dev, self.cache = self._timed(
+            self.clock.fixed_decode_s, call)
+        self.decode_steps += 1
+        self._kv_bytes_sum += self._resident_kv_bytes()
+        emitted_np = np.asarray(_greedy_tokens(logits), np.int64)  # (n, k)
+        accepts = np.asarray(accepts_dev, np.int64)
+        sampled = None
+        if any(r is not None and r.temperature > 0.0
+               for r in self.slot_req):
+            temps = np.zeros(n, np.float32)
+            topks = np.zeros(n, np.int32)
+            counts = np.zeros(n, np.int32)
+            keys = np.zeros((n, 2), np.uint32)
+            for s in range(n):
+                if self.slot_req[s] is None:
+                    continue
+                temps[s] = self.slot_req[s].temperature
+                topks[s] = self.slot_req[s].top_k
+                counts[s] = self.slot_rec[s].tokens_out
+                keys[s] = self.slot_key[s]
+            sampled = np.asarray(_fold_and_sample(logits[:, 0, :], temps,
+                                                  topks, keys, counts),
+                                 np.int32)
+        self._tokens_dirty = True       # host builds next step's draft rows
+        step_emitted = 0
+        self.spec_slot_steps += sum(r is not None for r in self.slot_req)
+        self.spec_rows += live_rows
+        for s in range(n):
+            req, rec = self.slot_req[s], self.slot_rec[s]
+            if req is None:
+                continue
+            a = int(accepts[s])
+            if req.temperature > 0.0:
+                toks = [int(sampled[s])]       # a == 1 (q_len was 1)
+            else:
+                toks = [int(t) for t in emitted_np[s, :a]]
+            # stop at the first EOS (the device cache over-commits the
+            # rows behind it, but a finishing slot's state is discarded)
+            eos_at = next((j for j, t in enumerate(toks)
+                           if t == req.eos_id), None)
+            if eos_at is not None:
+                toks = toks[:eos_at + 1]
+            self.outputs[req.rid].extend(toks)
+            rec.tokens_out += len(toks)
+            step_emitted += len(toks)
+            self.slot_remaining[s] -= len(toks)
+            self._slot_len[s] += a          # device KV frontier: accepts
+            self.slot_pos[s] += a
+            self.slot_tokens[s, 0] = toks[-1]
+            if eos_at is not None or self.slot_remaining[s] <= 0:
+                rec.finished = self.clock.now
+                self.slot_req[s] = None
+                self.slot_rec[s] = None
+                self.slot_key[s] = None
+                if self.tables is not None:
+                    self.tables.release(s)
+                self._trace_request(rec, s)
+        self.spec_tokens += step_emitted
+        if step_args is not None:
+            self.tracer.complete("decode_step", step_t0, self.clock.now,
+                                 track="engine", step=self.decode_steps - 1,
+                                 tokens_emitted=step_emitted, **step_args)
+        if self.metrics is not None:
+            self.metrics.counter("engine.spec_tokens").inc(step_emitted)
+
     # -- driver --------------------------------------------------------------
 
     def run(self, requests: Sequence[Request]):
@@ -1197,6 +1514,20 @@ class ServingEngine:
         summary["max_concurrent_slots"] = self.max_concurrent
         summary["kv_bytes_per_step"] = (
             self._kv_bytes_sum / max(self.decode_steps, 1))
+        if self.spec_k > 1:
+            summary["spec"] = {
+                "k": self.spec_k,
+                "draft": self.ecfg.spec_draft,
+                "spec_tokens": self.spec_tokens,
+                # per live slot-step: classic decode == 1.0 by definition,
+                # so anything above 1 is pure multi-token win
+                "accepted_tokens_per_step": (
+                    self.spec_tokens / max(self.spec_slot_steps, 1)),
+                # verify rows run per live slot-step (1 + mean draft len):
+                # the compute-side price the accepts above were bought at
+                "verify_rows_per_step": (
+                    self.spec_rows / max(self.spec_slot_steps, 1)),
+            }
         if self.pool is not None:
             summary["paged"] = {
                 "num_blocks": self.pool.num_blocks,

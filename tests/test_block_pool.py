@@ -206,3 +206,83 @@ def test_resealed_prefix_is_shared_after_full_drain():
     tables.seal_prompt(1)
     assert tables.admit(2, keys, tail, 2)
     assert pool.shared_hits > 0
+
+
+# ---------------------------------------------------------------------------
+# speculative multi-token spans
+# ---------------------------------------------------------------------------
+
+def test_span_costs_one_copy_per_touched_block():
+    # slot 1 shares a sealed full block plus the partial tail; a k-token
+    # speculative span crossing from the tail into its private decode block
+    # triggers exactly one COW copy, regardless of how many tokens land
+    pool, tables = _tables()
+    prompt = [1, 2, 3, 4, 5, 6]             # one full block + 2-token tail
+    keys, tail = prefix_keys(prompt, 4)
+    assert tables.admit(0, keys, tail, span_blocks=3)
+    tables.seal_prompt(0)
+    assert tables.admit(1, keys, tail, span_blocks=3)
+    shared_tail = int(tables.read[1][1])
+    # 6 tokens from position 6 touch virtual blocks 1 (shared tail -> COW)
+    # and 2 (already private) -> exactly one (src, dst) pair
+    pairs = tables.ensure_writable_span(1, 6, 6)
+    assert len(pairs) == 1
+    src, dst = pairs[0]
+    assert src == shared_tail and dst != shared_tail
+    assert int(tables.read[1][1]) == int(tables.write[1][1]) == dst
+    assert pool.cow_events == 1 and pool.cow_debt == 0
+    # idempotent: re-securing the same range copies nothing
+    assert tables.ensure_writable_span(1, 6, 6) == []
+    assert pool.cow_events == 1
+    # degenerate spans are no-ops
+    assert tables.ensure_writable_span(1, 6, 0) == []
+
+
+def test_span_matches_per_position_ensure_writable():
+    # the span call is the batched twin of ensure_writable: securing
+    # [start, start+k) must leave the tables exactly where k single-position
+    # calls would, with the same COW pairs
+    prompt = [1, 2, 3, 4, 5, 6, 7]
+    keys, tail = prefix_keys(prompt, 4)
+
+    def run(batched):
+        pool, tables = _tables(num_blocks=12, n_slots=2, bpslot=4, bs=4)
+        assert tables.admit(0, keys, tail, span_blocks=4)
+        tables.seal_prompt(0)
+        assert tables.admit(1, keys, tail, span_blocks=4)
+        if batched:
+            pairs = tables.ensure_writable_span(1, 7, 5)
+        else:
+            pairs = [p for pos in range(7, 12)
+                     if (p := tables.ensure_writable(1, pos)) is not None]
+        return pool, tables, pairs
+
+    pool_a, tab_a, pairs_a = run(batched=True)
+    pool_b, tab_b, pairs_b = run(batched=False)
+    assert pairs_a == pairs_b and len(pairs_a) == 1
+    assert (tab_a.read == tab_b.read).all()
+    assert (tab_a.write == tab_b.write).all()
+    assert pool_a.cow_events == pool_b.cow_events == 1
+
+
+def test_spec_rejection_drains_refcounts():
+    # speculative decode secures a k-token span up front; when verification
+    # rejects most of the draft the slot's KV frontier stays behind the
+    # secured range.  The over-secured blocks must still retire with the
+    # slot -- nothing leaks
+    pool, tables = _tables(num_blocks=17, n_slots=2, bpslot=8, bs=4)
+    prompt = [1, 2, 3, 4, 5, 6]
+    keys, tail = prefix_keys(prompt, 4)
+    assert tables.admit(0, keys, tail, span_blocks=8)
+    tables.seal_prompt(0)
+    assert tables.admit(1, keys, tail, span_blocks=8)
+    # slot 1 drafts k=4 from position 6 (COWs the tail) but verify accepts
+    # only one token; the next step re-secures an overlapping span -> the
+    # already-claimed blocks cost nothing
+    assert len(tables.ensure_writable_span(1, 6, 4)) == 1
+    assert tables.ensure_writable_span(1, 7, 4) == []
+    for s in range(2):
+        tables.release(s)
+    assert pool.refcount[NULL_BLOCK] == 1
+    assert (pool.refcount[1:] == 0).all()
+    assert pool.used_blocks == 0 and pool.cow_debt == 0

@@ -311,3 +311,213 @@ def test_unified_decode_attention_dispatch():
         ops.decode_attention(q, {"k_q": k_q, "k_s": k_s, "v_q": v_q,
                                  "v_s": v_s}, lens,
                              layout=CacheLayout(kv_bits=8, window=8))
+
+
+# ---------------------------------------------------------------------------
+# speculative k-row verification: q (B, Sq, H, D) + per-slot q_lens
+# ---------------------------------------------------------------------------
+
+K_SPEC = 4
+
+
+def _spec_q(seed=20, k=K_SPEC, h=H):
+    return jax.random.normal(jax.random.PRNGKey(seed), (B, k, H, D),
+                             jnp.float32)
+
+
+def _rowwise(call, q, lens, q_lens):
+    """Ground truth for the k-row contract: row ``j`` of the fused call
+    must equal a single-row decode at ``lengths + j`` (the length sequence
+    row-by-row decode would present); rows ``>= q_lens`` are exact zero."""
+    k = q.shape[1]
+    want = np.zeros((B, k, q.shape[2], q.shape[3]), np.float32)
+    ql = np.asarray(q_lens)
+    for j in range(k):
+        single = np.asarray(call(q[:, j:j + 1], lens + j))
+        for b in range(B):
+            if j < ql[b]:
+                want[b, j] = single[b, 0]
+    return want
+
+
+@pytest.mark.parametrize("q_lens", [[1, 1, 1, 1], [4, 4, 4, 4],
+                                    [1, 2, 3, 4]])
+def test_spec_rows_match_single_row_full_cache(q_lens):
+    """Fused k-row verification == k independent single-row decodes at
+    stepped lengths (accept-0 => only row 0 live; accept-all => every
+    row), dead rows exact zero — flash and dense paths, incl. len near
+    S_max (the deepest live row touches the last cache row)."""
+    q, k, v = _qkv_cache(seed=21)
+    qk = _spec_q(seed=22)
+    lens = jnp.asarray([1, 5, 40, S - K_SPEC], jnp.int32)
+    ql = jnp.asarray(q_lens, jnp.int32)
+    want = _rowwise(lambda qj, lj: ops.flash_decode(qj, k, v, lj,
+                                                    block_k=16),
+                    qk, lens, ql)
+    out = ops.flash_decode(qk, k, v, lens, block_k=16, q_lens=ql)
+    assert_allclose(np.asarray(out), want, atol=2e-5, rtol=2e-5)
+    dense = attn_lib.decode_attention(qk, k, v, lens, impl="dense",
+                                      q_lens=ql)
+    assert_allclose(np.asarray(dense), want, atol=2e-5, rtol=2e-5)
+    oracle = ref.decode_attention(qk, k, v, lens, q_lens=ql)
+    assert_allclose(np.asarray(oracle), want, atol=2e-5, rtol=2e-5)
+    qlm = np.asarray(ql)
+    for b in range(B):
+        assert np.all(np.asarray(out)[b, qlm[b]:] == 0.0), \
+            f"slot {b}: dead draft rows must be exact zero"
+
+
+@pytest.mark.parametrize("window", [2, 7])      # window < k and window > k
+def test_spec_rows_sliding_window_smaller_than_draft(window):
+    q, k, v = _qkv_cache(seed=23)
+    qk = _spec_q(seed=24)
+    lens = jnp.asarray([1, 5, 40, S - K_SPEC], jnp.int32)
+    ql = jnp.asarray([1, 4, 2, 4], jnp.int32)
+    want = _rowwise(
+        lambda qj, lj: ops.flash_decode(qj, k, v, lj, window=window,
+                                        block_k=8), qk, lens, ql)
+    out = ops.flash_decode(qk, k, v, lens, window=window, block_k=8,
+                           q_lens=ql)
+    assert_allclose(np.asarray(out), want, atol=2e-5, rtol=2e-5)
+    dense = attn_lib.decode_attention(qk, k, v, lens, window=window,
+                                      impl="dense", q_lens=ql)
+    assert_allclose(np.asarray(dense), want, atol=2e-5, rtol=2e-5)
+
+
+def test_spec_rows_ring_wraparound_mid_draft():
+    """Gemma ring sized window + k - 1 (the spec margin): draft rows whose
+    ring positions wrap mid-draft still reduce to the stepped single-row
+    decode."""
+    ring, window = 16, 13                       # margin = K_SPEC - 1
+    q, k, v = _qkv_cache(seed=25, s=ring)
+    qk = _spec_q(seed=26)
+    # lengths past the ring: every draft row wraps
+    lens = jnp.asarray([2, 12, 30, 37], jnp.int32)
+    ql = jnp.asarray([4, 3, 1, 4], jnp.int32)
+    want = _rowwise(
+        lambda qj, lj: ops.flash_decode(qj, k, v, lj, window=window,
+                                        ring=True, block_k=8),
+        qk, lens, ql)
+    out = ops.flash_decode(qk, k, v, lens, window=window, ring=True,
+                           block_k=8, q_lens=ql)
+    assert_allclose(np.asarray(out), want, atol=2e-5, rtol=2e-5)
+    dense = attn_lib.decode_attention(qk, k, v, lens, window=window,
+                                      ring=True, impl="dense", q_lens=ql)
+    assert_allclose(np.asarray(dense), want, atol=2e-5, rtol=2e-5)
+
+
+def test_spec_rows_int8_dense_and_paged():
+    q, k, v = _qkv_cache(seed=27)
+    qk = _spec_q(seed=28)
+    k_q, k_s = kq.quantize_kv(k)
+    v_q, v_s = kq.quantize_kv(v)
+    lens = jnp.asarray([1, 7, 33, S - K_SPEC], jnp.int32)
+    ql = jnp.asarray([2, 4, 1, 3], jnp.int32)
+    want = _rowwise(
+        lambda qj, lj: ops.flash_decode_quant(qj, k_q, k_s, v_q, v_s, lj,
+                                              block_k=16), qk, lens, ql)
+    out = ops.flash_decode_quant(qk, k_q, k_s, v_q, v_s, lens, block_k=16,
+                                 q_lens=ql)
+    assert_allclose(np.asarray(out), want, atol=2e-5, rtol=2e-5)
+    dense = kq.decode_attention_quant(qk, k_q, k_s, v_q, v_s, lens,
+                                      q_lens=ql)
+    assert_allclose(np.asarray(dense), want, atol=2e-5, rtol=2e-5)
+    # paged int8 through the unified layout dispatch
+    from repro.cache_layout import CacheLayout
+    bs = 16
+    kqp, vqp, tables = _paged_from_dense(k_q, v_q, bs)
+    ksp, vsp, _ = _paged_from_dense(k_s[..., None], v_s[..., None], bs)
+    ksp, vsp = ksp[..., 0], vsp[..., 0]
+    for impl in ("dense", "flash"):
+        outp = ops.decode_attention(
+            qk, {"k_q": kqp, "k_s": ksp, "v_q": vqp, "v_s": vsp,
+                 "block_table": tables}, lens,
+            layout=CacheLayout(kind="paged", kv_bits=8, impl=impl,
+                               block_size=bs), q_lens=ql)
+        assert_allclose(np.asarray(outp), want, atol=2e-5, rtol=2e-5,
+                        err_msg=f"paged8 {impl}")
+
+
+def test_spec_rows_paged_block_boundary():
+    """Draft spans crossing physical block boundaries (len % bs near bs)
+    read the right blocks for every row."""
+    from repro.cache_layout import CacheLayout
+    q, k, v = _qkv_cache(seed=29)
+    qk = _spec_q(seed=30)
+    bs = 8
+    kp, vp, tables = _paged_from_dense(k, v, bs)
+    # rows straddle a boundary: len+j crosses a multiple of bs mid-draft
+    lens = jnp.asarray([7, 8, 15, 39], jnp.int32)
+    ql = jnp.asarray([4, 4, 3, 4], jnp.int32)
+    want = _rowwise(
+        lambda qj, lj: ops.decode_attention(
+            qj, {"k": kp, "v": vp, "block_table": tables}, lj,
+            layout=CacheLayout(kind="paged", impl="dense", block_size=bs)),
+        qk, lens, ql)
+    for impl in ("dense", "flash"):
+        out = ops.decode_attention(
+            qk, {"k": kp, "v": vp, "block_table": tables}, lens,
+            layout=CacheLayout(kind="paged", impl=impl, block_size=bs),
+            q_lens=ql)
+        assert_allclose(np.asarray(out), want, atol=2e-5, rtol=2e-5,
+                        err_msg=impl)
+
+
+def test_spec_rows_property_sweep():
+    """Random ragged (lengths, q_lens) pairs — always pinning the accept-0
+    (q_len 1) and accept-all (q_len k) extremes — keep flash == dense ==
+    stepped single-row across the full and int8 variants."""
+    q, k, v = _qkv_cache(seed=31)
+    k_q, k_s = kq.quantize_kv(k)
+    v_q, v_s = kq.quantize_kv(v)
+    rng = np.random.default_rng(7)
+    for trial in range(8):
+        qk = _spec_q(seed=40 + trial)
+        lens = rng.integers(1, S - K_SPEC + 1, size=B)
+        ql = rng.integers(1, K_SPEC + 1, size=B)
+        ql[trial % B] = 1 if trial % 2 else K_SPEC      # pin the extremes
+        lens_j = jnp.asarray(lens, jnp.int32)
+        ql_j = jnp.asarray(ql, jnp.int32)
+        want = _rowwise(lambda qj, lj: ops.flash_decode(qj, k, v, lj,
+                                                        block_k=16),
+                        qk, lens_j, ql_j)
+        out = ops.flash_decode(qk, k, v, lens_j, block_k=16, q_lens=ql_j)
+        assert_allclose(np.asarray(out), want, atol=2e-5, rtol=2e-5,
+                        err_msg=f"trial {trial} lens {lens} ql {ql}")
+        dense = attn_lib.decode_attention(qk, k, v, lens_j, impl="dense",
+                                          q_lens=ql_j)
+        assert_allclose(np.asarray(dense), want, atol=2e-5, rtol=2e-5,
+                        err_msg=f"trial {trial} dense")
+        wq = _rowwise(
+            lambda qj, lj: ops.flash_decode_quant(qj, k_q, k_s, v_q, v_s,
+                                                  lj, block_k=16),
+            qk, lens_j, ql_j)
+        outq = ops.flash_decode_quant(qk, k_q, k_s, v_q, v_s, lens_j,
+                                      block_k=16, q_lens=ql_j)
+        assert_allclose(np.asarray(outq), wq, atol=2e-5, rtol=2e-5,
+                        err_msg=f"trial {trial} int8")
+
+
+def test_verify_greedy_accept_semantics():
+    """verify_greedy: accepts == 1 + length of the matched draft prefix,
+    clamped to q_lens — the accept-0-of-k case still commits the row-0
+    emission (one token, exactly single-step decode)."""
+    from repro.models import transformer as tf
+    V = 11
+    g = np.array([[3, 5, 7, 2], [3, 5, 7, 2], [3, 5, 7, 2]])
+    logits = np.full((3, 4, V), -10.0, np.float32)
+    for b in range(3):
+        for j in range(4):
+            logits[b, j, g[b, j]] = 10.0
+    toks = np.array([
+        [1, 9, 9, 9],       # no draft matches -> accept 1
+        [1, 3, 5, 7],       # full match -> accept 4
+        [1, 3, 5, 9],       # 2-prefix matches -> accept 3
+    ], np.int32)
+    acc = tf.verify_greedy(jnp.asarray(toks), jnp.asarray(logits),
+                           jnp.asarray([4, 4, 4], jnp.int32))
+    assert list(np.asarray(acc)) == [1, 4, 3]
+    # q_lens caps the accept even when later rows would match
+    acc = tf.verify_greedy(jnp.asarray(toks), jnp.asarray(logits),
+                           jnp.asarray([4, 2, 1], jnp.int32))
+    assert list(np.asarray(acc)) == [1, 2, 1]

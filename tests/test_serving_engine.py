@@ -17,6 +17,14 @@ from repro.serving import metrics as sm
 from repro.serving import traffic
 
 
+@pytest.fixture(scope="module", autouse=True)
+def _fresh_compile_cache():
+    # On CPU the full tier-1 run accumulates hundreds of compiled
+    # executables by the time this module's engine matrix runs; dropping
+    # them keeps XLA:CPU within its code-region budget.
+    jax.clear_caches()
+
+
 # ---------------------------------------------------------------------------
 # metrics: percentile + summarize math
 # ---------------------------------------------------------------------------
@@ -953,3 +961,203 @@ def test_engine_chunked_prefill_token_exact():
     out_i8, _, s8 = eng.ServingEngine(b, ecfg,
                                       traffic.Clock(0.0, 0.0)).run(reqs)
     assert s8["finished"] == len(reqs)
+
+
+# ---------------------------------------------------------------------------
+# speculative multi-token decode (spec_k > 1)
+# ---------------------------------------------------------------------------
+
+class SpecToyBackend(CountingBackend):
+    """Deterministic toy with a speculative path: next token = fn(last).
+    ``decode_spec`` verifies draft rows with the greedy-accept rule the
+    real k-row kernel implements, so the engine's variable-accept commit
+    logic is exercised with fully predictable accept patterns."""
+
+    def __init__(self, next_fn=None):
+        self.next_fn = next_fn or (lambda t: (t + 1) % self.V)
+
+    def prefill(self, cache, tokens, true_len, slot):
+        logits = np.zeros(self.V, np.float32)
+        logits[self.next_fn(int(tokens[0, true_len - 1]))] = 1.0
+        return logits, cache
+
+    def decode(self, cache, tokens):
+        B = tokens.shape[0]
+        logits = np.zeros((B, 1, self.V), np.float32)
+        for b in range(B):
+            logits[b, 0, self.next_fn(int(tokens[b, 0]))] = 1.0
+        return logits, cache
+
+    def decode_spec(self, cache, tokens, q_lens, positions=None):
+        toks = np.asarray(tokens)
+        ql = np.asarray(q_lens)
+        B, k = toks.shape
+        logits = np.zeros((B, k, self.V), np.float32)
+        for b in range(B):
+            for j in range(k):
+                logits[b, j, self.next_fn(int(toks[b, j]))] = 1.0
+        g = logits.argmax(-1)
+        accepts = np.ones(B, np.int64)
+        for b in range(B):
+            while accepts[b] < ql[b] and \
+                    toks[b, accepts[b]] == g[b, accepts[b] - 1]:
+                accepts[b] += 1
+        return logits, accepts, cache
+
+
+def test_spec_toy_streams_match_single_step():
+    """The variable-accept scheduler emits exactly the single-step streams
+    on a mixed toy workload (EOS + budget finishes, continuous refill) and
+    never leaks a slot."""
+    reqs = _toy_workload(n=24, eos_id=5)
+    engine = eng.ServingEngine(
+        CountingBackend(), eng.EngineConfig(n_slots=3, max_len=64),
+        traffic.Clock(0.0, 0.0))
+    base, _, s_base = engine.run(reqs)
+    spec_eng = eng.ServingEngine(
+        SpecToyBackend(), eng.EngineConfig(n_slots=3, max_len=64, spec_k=4),
+        traffic.Clock(0.0, 0.0))
+    spec, _, s_spec = spec_eng.run(reqs)
+    assert spec == base
+    assert s_spec["finished"] == s_base["finished"]
+    assert not spec_eng.queue
+    assert all(r is None for r in spec_eng.slot_req)
+    assert s_spec["spec"]["k"] == 4
+    assert s_spec["spec"]["accepted_tokens_per_step"] >= 1.0
+
+
+def test_spec_eos_mid_draft_truncates_the_accept():
+    """EOS landing inside an accepted span ends the request at the EOS
+    token — the over-committed rows behind it are discarded with the
+    slot."""
+    a, b, e = 1, 2, 3
+    nxt = {a: b, b: e, e: a}
+    backend = SpecToyBackend(lambda t: nxt.get(t, 0))
+    req = traffic.Request(rid=0, user_id=0, prompt=(a, b, e, a),
+                          max_new_tokens=10, arrival=0.0, eos_id=e)
+    outs, _, summary = eng.ServingEngine(
+        backend, eng.EngineConfig(n_slots=1, max_len=64, spec_k=4),
+        traffic.Clock(0.0, 0.0)).run([req])
+    # prefill emits b, then one spec step accepts [e, a, b, e] but the
+    # stream must stop at the first EOS
+    assert outs[0] == [b, e]
+    assert summary["finished"] == 1
+
+
+def test_spec_budget_cap_never_overshoots():
+    """A fully-accepting drafter (constant-token model) must still emit
+    exactly max_new_tokens — the draft length is capped by the remaining
+    budget."""
+    backend = SpecToyBackend(lambda t: 7)
+    for budget in (1, 2, 3, 5, 8):
+        req = traffic.Request(rid=0, user_id=0, prompt=(7, 7, 7),
+                              max_new_tokens=budget, arrival=0.0)
+        outs, _, _ = eng.ServingEngine(
+            backend, eng.EngineConfig(n_slots=1, max_len=64, spec_k=4),
+            traffic.Clock(0.0, 0.0)).run([req])
+        assert outs[0] == [7] * budget, f"budget {budget}: {outs[0]}"
+
+
+def test_spec_sampled_slots_fall_back_to_single_token():
+    """temperature > 0 slots draft nothing (q_len 1) and keep the exact
+    sampled stream of the single-step engine (same per-request keys, same
+    fold counts)."""
+    reqs = [dataclasses.replace(r, temperature=0.8, top_k=5)
+            for r in _toy_workload(n=8)]
+    base, _, _ = eng.ServingEngine(
+        CountingBackend(), eng.EngineConfig(n_slots=2, max_len=64),
+        traffic.Clock(0.0, 0.0)).run(reqs)
+    spec, _, summary = eng.ServingEngine(
+        SpecToyBackend(), eng.EngineConfig(n_slots=2, max_len=64, spec_k=4),
+        traffic.Clock(0.0, 0.0)).run(reqs)
+    assert spec == base
+    assert summary["spec"]["accepted_tokens_per_step"] == 1.0
+
+
+def test_ngram_draft_lookup():
+    # bigram continuation from the most recent earlier occurrence
+    assert eng.ngram_draft([1, 2, 3, 9, 1, 2], 3) == [3, 9, 1]
+    # unigram fallback when no bigram recurs
+    assert eng.ngram_draft([5, 6, 7, 6], 2) == [7, 6]
+    # nothing recurs -> no draft; short/empty histories -> no draft
+    assert eng.ngram_draft([1, 2, 3, 4], 3) == []
+    assert eng.ngram_draft([1], 3) == []
+    assert eng.ngram_draft([1, 2, 3], 0) == []
+
+
+def _zipf_requests(cfg, n=4, seed=0, max_new=10):
+    """Zipfian prompts (recsys-style repetitive ids): the n-gram drafter
+    finds real matches, so accepts exercise the >1 path."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(6, 14))
+        toks = np.minimum(rng.zipf(1.2, plen) + 2, cfg.vocab_size - 1)
+        reqs.append(traffic.Request(
+            rid=i, user_id=i, prompt=tuple(int(t) for t in toks),
+            max_new_tokens=max_new, arrival=0.0))
+    return reqs
+
+
+SPEC_LAYOUTS = [CacheLayout(), CacheLayout(kind="paged"),
+                CacheLayout(kv_bits=8), CacheLayout(kind="paged", kv_bits=8)]
+
+
+@pytest.mark.parametrize("layout", SPEC_LAYOUTS,
+                         ids=["dense", "paged", "int8", "paged_int8"])
+def test_spec_decode_token_exact_uniform_layout_matrix(layout):
+    """spec_k=4 greedy streams are token-identical to single-step decode
+    for the uniform family across the full (dense|paged) x (bf16|int8)
+    layout matrix, with real multi-token accepts."""
+    cfg = dataclasses.replace(reduced(get_arch("olmo-1b")), dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = _zipf_requests(cfg)
+    explicit = layout != CacheLayout()
+    backend = eng.make_backend(cfg, params,
+                               layout=layout if explicit else None)
+    e_spec = eng.ServingEngine(backend, eng.EngineConfig(
+        n_slots=3, max_len=64, spec_k=4, layout=layout))
+    spec, _, s_spec = e_spec.run(reqs)
+    base, _, s_base = eng.ServingEngine(backend, eng.EngineConfig(
+        n_slots=3, max_len=64, layout=layout)).run(reqs)
+    for r in reqs:
+        assert spec[r.rid] == base[r.rid], f"request {r.rid} diverged"
+    assert s_spec["spec"]["accepted_tokens_per_step"] >= 1.0
+    assert s_spec["decode_steps"] <= s_base["decode_steps"]
+    if layout.paged:
+        # rejected draft rows over-secure blocks past the committed
+        # frontier; retirement must still drain every refcount
+        assert e_spec.pool.used_blocks == 0
+
+
+@pytest.mark.parametrize("fam,layout", [
+    ("gemma", CacheLayout()), ("gemma", CacheLayout(kind="paged")),
+    ("whisper", CacheLayout())],
+    ids=["gemma_dense", "gemma_paged", "whisper_dense"])
+def test_spec_decode_token_exact_gemma_whisper(fam, layout):
+    """Gemma ring buffers (spec-margined: window + k - 1 rows, exercised
+    past the wraparound) and whisper cross-KV keep speculative streams
+    identical to single-step.  The baseline shares the backend, so both
+    engines run the same margined ring layout — bit-identical logits."""
+    cfg, params, reqs = _family_setup(fam)
+    reqs = [dataclasses.replace(r, max_new_tokens=12) for r in reqs]
+    explicit = layout != CacheLayout()
+    backend = eng.make_backend(cfg, params,
+                               layout=layout if explicit else None)
+    spec, _, s_spec = eng.ServingEngine(backend, eng.EngineConfig(
+        n_slots=3, max_len=64, spec_k=4, layout=layout)).run(reqs)
+    base, _, _ = eng.ServingEngine(backend, eng.EngineConfig(
+        n_slots=3, max_len=64, layout=layout)).run(reqs)
+    for r in reqs:
+        assert spec[r.rid] == base[r.rid], f"{fam} request {r.rid} diverged"
+    assert s_spec["spec"]["accepted_tokens_per_step"] >= 1.0
+
+
+@pytest.mark.parametrize("fam", ["jamba", "rwkv6"])
+def test_spec_decode_rejects_recurrent_families(fam):
+    cfg = dataclasses.replace(reduced(get_arch(FAMILY_ARCHS[fam])),
+                              dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    backend = eng.make_backend(cfg, params)
+    with pytest.raises(ValueError, match="recurrent"):
+        eng.ServingEngine(backend, eng.EngineConfig(spec_k=2))
