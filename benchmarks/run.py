@@ -713,6 +713,126 @@ def serve(rows):
         _emit(rows, f"serve.{fam}.decode_parity_maxdiff",
               entry["decode_parity"]["max_abs_diff"] * 1e6, "measured")
         out["families"][fam] = entry
+
+    # -- disaggregated prefill/decode serving.  Pinned per-call clock
+    # costs make the comparison a deterministic discrete-event sim: the
+    # prefill-burst workload (long-prompt burst over a decode-heavy
+    # background) hits one interleaved engine, then a 1-prefill +
+    # 1-decode split whose decode tier is configured identically to the
+    # interleaved engine.  The split takes the burst's prefills off the
+    # decode path: p99 TTFT must drop while decode p50 TPOT holds
+    # (within 5% — the decode tier steps the same pinned cost), and the
+    # KV handoff must stay token-exact per family.
+    from repro.serving import (PrefillBurstConfig, RouterConfig,
+                               build_disagg, generate_prefill_burst)
+    from repro.serving.traffic import Clock, Request
+
+    COSTS = (0.010, 0.050, 0.002)   # decode / prefill / handoff seconds
+    bcfg = PrefillBurstConfig(seed=0)
+    bcfg = dataclasses.replace(bcfg, background=dataclasses.replace(
+        bcfg.background, vocab_size=cfg.vocab_size))
+    burst_reqs = generate_prefill_burst(bcfg)
+    burst_rids = {r.rid for r in burst_reqs
+                  if r.rid >= bcfg.background.n_requests}
+    dcfg = dataclasses.replace(
+        ecfg, layout=CacheLayout(kind="paged", block_size=8))
+
+    def burst_split(records):
+        """(all, background-only, burst-only) latency summaries."""
+        bg = [r for r in records if r.rid not in burst_rids]
+        bu = [r for r in records if r.rid in burst_rids]
+        def lat(rs):
+            ttfts = sorted(r.ttft for r in rs if r.ttft is not None)
+            tpots = sorted(r.tpot for r in rs if r.tpot is not None)
+            from repro.serving.metrics import percentile
+            return {"ttft_p50_s": percentile(ttfts, 50),
+                    "ttft_p99_s": percentile(ttfts, 99),
+                    "tpot_p50_s": percentile(tpots, 50),
+                    "tpot_p99_s": percentile(tpots, 99)}
+        return {"all": lat(records), "background": lat(bg),
+                "burst": lat(bu)}
+
+    ibackend = make_backend(cfg, params, layout=dcfg.layout)
+    io_, irecs, is_ = ServingEngine(
+        ibackend, dcfg, Clock(*COSTS)).run(burst_reqs)
+    srv = build_disagg(cfg, params, n_prefill=1, n_decode=1, ecfg=dcfg,
+                       router_cfg=RouterConfig(), clock=Clock(*COSTS))
+    do_, drecs, ds_ = srv.run(burst_reqs)
+    ilat, dlat = burst_split(irecs), burst_split(drecs)
+    ttft_ratio = (dlat["all"]["ttft_p99_s"] / ilat["all"]["ttft_p99_s"])
+    tpot_ratio = (dlat["background"]["tpot_p50_s"]
+                  / ilat["background"]["tpot_p50_s"])
+    out["disagg"] = {
+        "clock_costs_s": {"decode": COSTS[0], "prefill": COSTS[1],
+                          "handoff": COSTS[2]},
+        "topology": "1 interleaved vs 1 prefill + 1 decode "
+                    f"({dcfg.n_slots} slots each tier)",
+        "interleaved": ilat, "disagg": dlat,
+        "handoffs": ds_["disagg"]["handoffs"],
+        "router_policy": ds_["disagg"]["router_policy"],
+        "token_exact_burst": bool(do_ == io_),
+        "ttft_p99_ratio": ttft_ratio,
+        "tpot_p50_ratio": tpot_ratio,
+        "ttft_win": bool(ttft_ratio < 1.0),
+        "tpot_held": bool(tpot_ratio <= 1.05),
+    }
+    _emit(rows, "serve.disagg.interleaved.ttft_p99_ms",
+          ilat["all"]["ttft_p99_s"] * 1e3, "measured")
+    _emit(rows, "serve.disagg.split.ttft_p99_ms",
+          dlat["all"]["ttft_p99_s"] * 1e3, "measured")
+    _emit(rows, "serve.disagg.ttft_p99_ratio", ttft_ratio, "measured")
+    _emit(rows, "serve.disagg.tpot_p50_ratio", tpot_ratio, "measured")
+    _emit(rows, "serve.disagg.handoffs", ds_["disagg"]["handoffs"],
+          "measured")
+    _emit(rows, "serve.disagg.token_exact_burst",
+          int(out["disagg"]["token_exact_burst"]), "measured")
+
+    # per-family handoff token-exactness (all five families; rwkv6 pages
+    # zero KV leaves — its whole recurrent state rides the slot-state
+    # half of the handoff).  Tiny workloads: the point is the bit-exact
+    # flag, not throughput.
+    out["disagg"]["token_exact"] = {}
+    for fam, arch in SERVE_FAMILIES:
+        fcfg = dataclasses.replace(reduced(get_arch(arch)),
+                                   dtype="float32")
+        fparams = tf.init_params(jax.random.PRNGKey(0), fcfg)
+        rng = np.random.default_rng(0)
+        freqs = []
+        for i in range(4):
+            frames = None
+            if fcfg.encoder_layers:
+                f = rng.normal(0, 0.02, (fcfg.encoder_frames,
+                                         fcfg.d_model))
+                frames = tuple(tuple(float(x) for x in row) for row in f)
+            freqs.append(Request(
+                rid=i, user_id=i,
+                prompt=tuple(int(t) for t in rng.integers(
+                    3, fcfg.vocab_size, int(rng.integers(4, 12)))),
+                max_new_tokens=int(rng.integers(3, 8)),
+                arrival=0.04 * i, frames=frames))
+        fec = dataclasses.replace(dcfg, n_slots=2)
+        fb = make_backend(fcfg, fparams, layout=fec.layout)
+        so, _, _ = ServingEngine(fb, fec, Clock(*COSTS)).run(freqs)
+        fsrv = build_disagg(fcfg, fparams, n_prefill=1, n_decode=1,
+                            ecfg=fec, clock=Clock(*COSTS))
+        fo, _, fs = fsrv.run(freqs)
+        exact = bool(so == fo)
+        out["disagg"]["token_exact"][fam] = {
+            "ok": exact, "handoffs": fs["disagg"]["handoffs"]}
+        _emit(rows, f"serve.disagg.{fam}.token_exact", int(exact),
+              "measured")
+
+    # modeled full-arch tier split: prefill compute-bound vs decode
+    # memory-bound, and what one KV handoff costs next to the prefill
+    # stall it removes from the decode path
+    from repro.serving.roofline import modeled_tier_split
+    out["disagg"]["roofline"] = {
+        fam: modeled_tier_split(get_arch(arch), n_slots=64,
+                                cache_len=2048, prompt_len=1024)
+        for fam, arch in SERVE_FAMILIES}
+    _emit(rows, "serve.disagg.modeled_stall_vs_handoff",
+          out["disagg"]["roofline"]["uniform"]["stall_vs_handoff"],
+          "derived")
     _save("serve", out)
 
 

@@ -46,6 +46,19 @@ rwkv6) reject the flag with a clear error:
   PYTHONPATH=src python -m repro.launch.serve --reduced --arch olmo-1b \\
       --spec-k 4 --cache-layout paged --decode-impl flash
 
+``--disagg`` splits serving into a prefill tier and a decode tier
+(requires ``--cache-layout paged`` — the KV handoff rides the block
+pool) with ``--prefill-replicas`` / ``--decode-replicas`` engines per
+tier and a router placing arrivals / handoffs by ``--router-policy``
+(``slo`` scores load + live windowed p99, ``least_loaded``,
+``round_robin``).  Token streams stay bit-identical to one interleaved
+engine; ``--scenario prefill-burst`` drives the workload disaggregation
+is for (long-prompt burst over decode-heavy background):
+
+  PYTHONPATH=src python -m repro.launch.serve --reduced --arch olmo-1b \\
+      --cache-layout paged --disagg --prefill-replicas 1 \\
+      --decode-replicas 2 --scenario prefill-burst
+
 ``--mode raw`` keeps the original fixed-batch decode-loop microbenchmark:
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \\
@@ -64,8 +77,9 @@ from repro.config import get_arch, list_archs, reduced
 from repro.models import transformer as tf
 from repro.models.transformer import ModelCtx
 from repro.obs import MetricsRegistry, Tracer, write_trace
-from repro.serving import (EngineConfig, ServingEngine, TrafficConfig,
-                           generate)
+from repro.serving import (EngineConfig, PrefillBurstConfig, RouterConfig,
+                           ServingEngine, TrafficConfig, build_disagg,
+                           generate, generate_prefill_burst)
 from repro.serving.engine import make_backend
 from repro.serving.metrics import format_report
 
@@ -90,7 +104,15 @@ def run_engine(args) -> int:
         # vlm (mrope): prompts carry an image-patch grid prefix so decode
         # exercises the text+patch position layout
         image_grid=(2, 2) if cfg.pos_type == "mrope" else ())
-    requests = generate(tcfg)
+    if args.scenario == "prefill-burst":
+        bcfg = PrefillBurstConfig(seed=args.seed)
+        bcfg = dataclasses.replace(
+            bcfg, background=dataclasses.replace(
+                bcfg.background, vocab_size=cfg.vocab_size,
+                seed=args.seed))
+        requests = generate_prefill_burst(bcfg)
+    else:
+        requests = generate(tcfg)
 
     # every cache knob (paging, precision, decode impl) folds into one
     # CacheLayout; the legacy --kv/--decode-impl flags map onto it
@@ -106,22 +128,37 @@ def run_engine(args) -> int:
                         layout=layout, prefill_chunk=args.prefill_chunk,
                         spec_k=args.spec_k, spec_draft=args.spec_draft)
     try:
-        backend = make_backend(cfg, params, layout=layout,
-                               prefill_chunk=args.prefill_chunk)
+        rcfg = RouterConfig(policy=args.router_policy,
+                            window=args.router_window,
+                            ttft_weight=args.ttft_weight,
+                            tpot_weight=args.tpot_weight)
+
+        def mk_server(tracer=None, metrics=None):
+            if args.disagg:
+                return build_disagg(
+                    cfg, params, n_prefill=args.prefill_replicas,
+                    n_decode=args.decode_replicas, ecfg=ecfg,
+                    router_cfg=rcfg, tracer=tracer, metrics=metrics)
+            backend = make_backend(cfg, params, layout=layout,
+                                   prefill_chunk=args.prefill_chunk)
+            return ServingEngine(backend, ecfg, tracer=tracer,
+                                 metrics=metrics)
+
         if not args.no_warmup:
             # compile every prefill bucket + the decode step outside the
             # measured run, as a resident production server would be
-            ServingEngine(backend, ecfg).run(requests)
+            mk_server().run(requests)
         # tracing is scoped to the measured run only, never the warmup
         tracer = Tracer() if args.trace_out else None
         metrics = MetricsRegistry() if args.trace_out else None
-        engine = ServingEngine(backend, ecfg, tracer=tracer,
-                               metrics=metrics)
+        engine = mk_server(tracer=tracer, metrics=metrics)
     except ValueError as e:       # layout/family/spec_k mismatches
         raise SystemExit(str(e))
     outputs, records, summary = engine.run(requests)
 
-    title = (f"{cfg.name} {args.cache_layout} kv={args.kv} "
+    topo = (f"disagg {args.prefill_replicas}P+{args.decode_replicas}D "
+            f"{args.router_policy} " if args.disagg else "")
+    title = (f"{cfg.name} {topo}{args.cache_layout} kv={args.kv} "
              f"refill={args.refill} "
              f"slots={args.slots} {args.process}@{args.rate:g}req/s")
     print(format_report(summary, title))
@@ -215,6 +252,37 @@ def main(argv=None) -> int:
                     help="speculative draft source: self-speculative n-gram "
                          "lookup over the request's own prompt + output "
                          "(no second model)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated serving: a prefill tier hands "
+                         "finished prompts' KV to a decode tier over the "
+                         "block pool (requires --cache-layout paged); "
+                         "token streams stay bit-identical to one "
+                         "interleaved engine")
+    ap.add_argument("--prefill-replicas", type=int, default=1,
+                    help="disagg: engines in the prefill tier")
+    ap.add_argument("--decode-replicas", type=int, default=1,
+                    help="disagg: engines in the decode tier (0 = no "
+                         "split; N 'both'-role replicas behind the "
+                         "router)")
+    ap.add_argument("--router-policy", default="slo",
+                    choices=("slo", "least_loaded", "round_robin"),
+                    help="replica placement: slo = normalized load + "
+                         "windowed tail-latency percentile, least_loaded "
+                         "= load only, round_robin = stateless")
+    ap.add_argument("--router-window", type=int, default=64,
+                    help="slo policy: recent latency samples per replica "
+                         "feeding the windowed p99")
+    ap.add_argument("--ttft-weight", type=float, default=1.0,
+                    help="slo policy: weight of windowed p99 TTFT in the "
+                         "prefill-placement score")
+    ap.add_argument("--tpot-weight", type=float, default=10.0,
+                    help="slo policy: weight of windowed p99 TPOT in the "
+                         "decode-placement score")
+    ap.add_argument("--scenario", default="traffic",
+                    choices=("traffic", "prefill-burst"),
+                    help="prefill-burst: seeded burst of long prompts "
+                         "over a decode-heavy Zipfian background (the "
+                         "disaggregation stress workload)")
     ap.add_argument("--refill", default="continuous",
                     choices=("continuous", "static"))
     ap.add_argument("--queue-capacity", type=int, default=64)

@@ -78,11 +78,14 @@ class Gauge:
         self.peak = -math.inf
         self.series: deque = deque(maxlen=max_points)
 
-    def set(self, v: float) -> None:
+    def set(self, v: float, t: Optional[float] = None) -> None:
+        """Set the gauge; ``t`` overrides the registry clock stamp (used
+        when several engines share one registry but run on distinct
+        simulated clocks)."""
         v = float(v)
         self.value = v
         self.peak = max(self.peak, v)
-        self.series.append((self._registry.clock(), v))
+        self.series.append((self._registry.clock() if t is None else t, v))
 
 
 class Histogram:
@@ -181,9 +184,15 @@ class MetricsRegistry:
         return self._gauges[name]
 
     def histogram(self, name: str,
-                  bounds: Sequence[float] = DEFAULT_BOUNDS) -> Histogram:
+                  bounds: Sequence[float] = DEFAULT_BOUNDS,
+                  max_samples: Optional[int] = None) -> Histogram:
+        """Get-or-create; ``max_samples`` (first-create only) bounds the
+        exact sample window — a small window makes the histogram a
+        sliding window over *recent* observations, which is what the
+        disagg router percentiles over."""
         if name not in self._histograms:
-            self._histograms[name] = Histogram(bounds)
+            self._histograms[name] = Histogram(
+                bounds, max_samples if max_samples is not None else 100_000)
         return self._histograms[name]
 
     @property

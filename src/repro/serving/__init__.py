@@ -23,30 +23,44 @@ package promotes the `examples/serve_lm.py` toy into a first-class engine:
   p50/p95/p99, and SLO attainment.
 * :mod:`repro.serving.roofline` — modeled TPU-scale decode roofline terms
   (compute vs resident-state memory) for the full architectures, including
-  the dense-vs-paged admission-capacity model.
+  the dense-vs-paged admission-capacity model and the prefill/decode
+  tier-split comparison.
+* :mod:`repro.serving.disagg`   — disaggregated prefill/decode tiers: a
+  router load-balancing N engine replicas on live windowed SLO
+  percentiles, with token-exact KV handoff over the block pool.
 """
 from repro.cache_layout import CacheLayout
 from repro.serving.block_pool import BlockPool, SlotTables, prefix_keys
-from repro.serving.engine import (EngineConfig, Int8KVBackend, Int8KVSlots,
-                                  NativeBackend, PagedInt8Backend,
-                                  PagedNativeBackend, PagedSlots,
-                                  ServingEngine, SlotBackend, make_backend,
-                                  serve)
-from repro.serving.metrics import RequestRecord, percentile, summarize
+from repro.serving.disagg import (DisaggServer, Router, RouterConfig,
+                                  build_disagg)
+from repro.serving.engine import (EngineConfig, Handoff, Int8KVBackend,
+                                  Int8KVSlots, NativeBackend,
+                                  PagedInt8Backend, PagedNativeBackend,
+                                  PagedSlots, ServingEngine, SlotBackend,
+                                  make_backend, serve)
+from repro.serving.metrics import (RequestRecord, WindowedLatency,
+                                   percentile, summarize)
 from repro.serving.roofline import (decode_state_bytes, kv_block_bytes,
                                     max_concurrent_slots,
-                                    modeled_decode_step, resident_kv_bytes)
+                                    modeled_decode_step,
+                                    modeled_prefill_step,
+                                    modeled_tier_split, resident_kv_bytes)
 from repro.serving.traffic import (BATCH_TIER, INTERACTIVE_TIER, Clock,
-                                   Request, SLOTier, TrafficConfig, generate)
+                                   PrefillBurstConfig, Request, SLOTier,
+                                   TrafficConfig, generate,
+                                   generate_prefill_burst)
 
 __all__ = [
     "CacheLayout", "EngineConfig", "ServingEngine", "SlotBackend",
     "NativeBackend", "Int8KVBackend", "Int8KVSlots", "PagedNativeBackend",
     "PagedInt8Backend", "PagedSlots", "make_backend", "serve",
     "BlockPool", "SlotTables", "prefix_keys",
-    "RequestRecord", "percentile", "summarize",
-    "decode_state_bytes", "modeled_decode_step", "kv_block_bytes",
+    "DisaggServer", "Router", "RouterConfig", "build_disagg", "Handoff",
+    "RequestRecord", "WindowedLatency", "percentile", "summarize",
+    "decode_state_bytes", "modeled_decode_step", "modeled_prefill_step",
+    "modeled_tier_split", "kv_block_bytes",
     "resident_kv_bytes", "max_concurrent_slots",
     "Request", "SLOTier", "TrafficConfig", "generate", "Clock",
+    "PrefillBurstConfig", "generate_prefill_burst",
     "INTERACTIVE_TIER", "BATCH_TIER",
 ]

@@ -100,24 +100,31 @@ class BlockPool:
         # optional obs registry mirror (attach_metrics)
         self._metrics = None
         self._mprefix = "pool"
+        self._mclock = None
 
-    def attach_metrics(self, registry, prefix: str = "pool") -> None:
+    def attach_metrics(self, registry, prefix: str = "pool",
+                       clock=None) -> None:
         """Mirror pool occupancy and sharing stats into an obs
         :class:`~repro.obs.metrics.MetricsRegistry`: a ``{prefix}.used_blocks``
         gauge (its ``peak`` tracks ``peak_used``) plus
         ``shared_hits`` / ``cow_events`` / ``seal_count`` counters.  The
         gauge series is stamped by the registry's clock — the engine pins
         that to its simulated clock, so the occupancy timeline aligns with
-        the request spans."""
+        the request spans.  ``clock`` overrides the registry clock for the
+        gauge stamps (several engines sharing one registry each pass their
+        own simulated clock)."""
         self._metrics = registry
         self._mprefix = prefix
+        self._mclock = clock
         self._sync_metrics()
 
     def _sync_metrics(self) -> None:
         m, p = self._metrics, self._mprefix
         if m is None:
             return
-        m.gauge(f"{p}.used_blocks").set(self.used_blocks)
+        m.gauge(f"{p}.used_blocks").set(
+            self.used_blocks,
+            t=self._mclock() if self._mclock is not None else None)
         m.counter(f"{p}.shared_hits").value = float(self.shared_hits)
         m.counter(f"{p}.cow_events").value = float(self.cow_events)
         m.counter(f"{p}.seal_count").value = float(self.seal_count)
@@ -330,6 +337,109 @@ class SlotTables:
             self.pool.cow_debt -= 1
         self.dirty = True
         return out
+
+    # -- handoff (disaggregated prefill -> decode) -------------------------
+
+    def export_slot(self, slot: int) -> Tuple[List[int], List[Optional[int]]]:
+        """Snapshot ``slot``'s block chain for handoff: the physical block
+        ids of its allocated span (in virtual order) and, per block, the
+        sealed content key (None for private/unsealed blocks).  Pure read
+        — the caller copies the block *values* off the chain and then
+        :meth:`release`\\ s the slot as usual."""
+        blocks: List[int] = []
+        for i in range(self.blocks_per_slot):
+            b = int(self.read[slot, i])
+            if b == NULL_BLOCK:
+                break
+            blocks.append(b)
+        keys = [self.pool._hash_of.get(b) for b in blocks]
+        return blocks, keys
+
+    def import_slot(self, slot: int, blocks: Sequence[int],
+                    keys: Sequence[Optional[int]], live_tokens: int,
+                    src_pool: Optional[BlockPool] = None,
+                    span_blocks: Optional[int] = None,
+                    ) -> Optional[List[Tuple[int, int]]]:
+        """Map an exported block chain into ``slot`` of this table.
+
+        Two modes, mirroring :meth:`admit`'s sharing semantics so a
+        handed-off request is indistinguishable from one admitted here:
+
+        * **shared pool** (``src_pool is self.pool``): re-refcount — every
+          block of the chain is adopted read-only (``write = NULL``); the
+          first write claims-in-place or COWs exactly as a prefix-share
+          adoption would.  O(span) increfs, zero copies.
+        * **cross pool**: blocks whose sealed key already exists here are
+          adopted from *this* pool's hash index (prefix dedupe survives
+          the transfer); the rest are freshly allocated and reported as
+          ``(virtual_block, dst_physical)`` pairs whose values the engine
+          must scatter from the handoff snapshot.  Live blocks keep their
+          seal keys (re-sealed here); blocks past ``live_tokens`` are
+          garbage pre-reservations and are allocated without a copy.
+
+        A shared *frontier* block (the partial block the next generated
+        token lands in) books one unit of ``cow_debt`` — same reservation
+        :meth:`admit` makes for a shared tail — so the deferred COW can
+        never fail.  ``span_blocks`` extends the mapping past the exported
+        chain with fresh private blocks (the decode-budget reservation
+        :meth:`admit` would have made), keeping generation infallible once
+        the import lands.  Returns None, with nothing mutated, when this
+        pool cannot cover the new blocks plus reservations."""
+        span = max(len(blocks), span_blocks or 0)
+        assert span <= self.blocks_per_slot
+        bs = self.pool.block_size
+        n_live = -(-live_tokens // bs)
+        frontier = live_tokens // bs if live_tokens % bs else -1
+        shared_mode = src_pool is self.pool
+
+        # mutation-free capacity plan
+        adopt: List[Optional[int]] = [None] * span
+        new_needed = 0
+        reserve = 0
+        for i in range(span):
+            if i >= len(blocks):
+                new_needed += 1          # budget extension: fresh, no copy
+                continue
+            if shared_mode:
+                if i == frontier:
+                    reserve = 1
+                continue
+            ex = (self.pool.lookup(keys[i])
+                  if i < n_live and keys[i] is not None else None)
+            if ex is not None:
+                adopt[i] = ex
+                if i == frontier:
+                    reserve = 1
+            else:
+                new_needed += 1
+        if len(self.pool._free) - self.pool.cow_debt < new_needed + reserve:
+            return None
+
+        row_r, row_w = self.read[slot], self.write[slot]
+        copies: List[Tuple[int, int]] = []
+        for i in range(span):
+            if i < len(blocks) and shared_mode:
+                b = int(blocks[i])
+                self.pool.incref(b)
+                row_r[i], row_w[i] = b, NULL_BLOCK
+                continue
+            if adopt[i] is not None:
+                self.pool.incref(adopt[i])
+                row_r[i], row_w[i] = adopt[i], NULL_BLOCK
+                self.pool.note_shared_hit()
+                continue
+            dst = self.pool.alloc()
+            row_r[i], row_w[i] = dst, dst
+            if i < n_live and i < len(blocks):
+                copies.append((i, dst))
+                if keys[i] is not None:
+                    self.pool.seal(dst, keys[i])
+        if reserve:
+            self._pending_tail[slot] = frontier
+            self.pool.cow_debt += 1
+        self._own_keys[slot] = None
+        self.dirty = True
+        return copies
 
     # -- retirement --------------------------------------------------------
 

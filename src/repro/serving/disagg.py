@@ -1,0 +1,329 @@
+"""Disaggregated prefill/decode serving: N engine replicas + SLO router.
+
+One interleaved engine pays for long prompts twice: the chunk-scan prefill
+occupies the same scheduler loop that in-flight decodes depend on, so a
+burst of long prompts stalls every active stream and blows p99 TTFT.  The
+fix — the topology-aware split of the Disaggregated Multi-Tower paper
+applied to LLM serving — is to match tiers to their bottleneck:
+
+* a **prefill tier** (compute-bound: chunked prompt scans, slots free the
+  moment the prompt's KV is sealed and exported), and
+* a **decode tier** (bandwidth-bound: flash/spec decode over resident KV),
+
+with the KV handoff riding the paged block pool: the prefill engine seals
+the prompt's blocks, exports the block chain + pooled values + slot state
+(:class:`~repro.serving.engine.Handoff`), and the decode engine maps it
+into its own pool — adopting sealed-key matches (prefix dedupe survives
+the transfer) and copying the rest — so handoff is O(block-table) and
+**token-exact**: the resumed stream is bit-identical to the same request
+served by a single interleaved engine.
+
+The :class:`Router` load-balances across replicas using the two-level SLO
+admission queue's own signals plus live *windowed* TTFT/TPOT percentiles
+(:class:`~repro.serving.metrics.WindowedLatency`, backed by the obs
+histogram sample window).  :class:`DisaggServer` advances N engines + the
+router coherently on simulated clocks: a conservative event loop always
+steps the lowest-clock engine that has work, delivers handoffs only once
+the destination clock passes ``ready_at`` (``Clock.fixed_handoff_s``
+models the transfer), and jumps idle engines to the next event — so a
+pinned-cost run is fully deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer, or_null
+from repro.serving import metrics as metrics_lib
+from repro.serving.engine import (EngineConfig, Handoff, ServingEngine,
+                                  make_backend)
+from repro.serving.traffic import Clock, Request
+
+__all__ = ["RouterConfig", "Router", "DisaggServer", "build_disagg",
+           "Handoff"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    """Routing policy knobs.
+
+    ``slo`` (default) scores replicas by normalized load plus the
+    windowed p99 of the latency the tier is accountable for (TTFT for
+    prefill placement, TPOT for decode placement) — a replica whose
+    recent tail latency is drifting gets deprioritized before its queue
+    even grows.  ``least_loaded`` uses the load term alone;
+    ``round_robin`` ignores state entirely.  Ties break on replica
+    order, so routing is deterministic."""
+
+    policy: str = "slo"                 # slo | least_loaded | round_robin
+    window: int = 64                    # recent samples per percentile
+    ttft_weight: float = 1.0            # score-seconds per p99-TTFT second
+    tpot_weight: float = 10.0           # score-seconds per p99-TPOT second
+
+    def __post_init__(self):
+        if self.policy not in ("slo", "least_loaded", "round_robin"):
+            raise ValueError(f"unknown router policy {self.policy!r}")
+
+
+class Router:
+    """Places arrivals on prefill-capable replicas and handoffs on
+    decode-capable replicas."""
+
+    def __init__(self, engines: Sequence[ServingEngine],
+                 cfg: RouterConfig = RouterConfig()):
+        self.cfg = cfg
+        self.prefill = [e for e in engines if e.role in ("both", "prefill")]
+        self.decode = [e for e in engines if e.role in ("both", "decode")]
+        if not self.prefill:
+            raise ValueError("router needs at least one prefill-capable "
+                             "replica")
+        self._rr_p = 0
+        self._rr_d = 0
+
+    @staticmethod
+    def _p(win, which: str, q: float) -> float:
+        if win is None:
+            return 0.0
+        v = win.ttft_p(q) if which == "ttft" else win.tpot_p(q)
+        return 0.0 if v != v else v          # NaN -> no signal yet
+
+    def _prefill_score(self, e: ServingEngine) -> float:
+        load = (len(e.queue) + e.n_active) / max(e.ecfg.n_slots, 1)
+        return load + self.cfg.ttft_weight * self._p(e.win, "ttft", 99)
+
+    def _decode_score(self, e: ServingEngine) -> float:
+        inflight = sum(int(e.slot_remaining[s])
+                       for s in range(e.ecfg.n_slots)
+                       if e.slot_req[s] is not None)
+        inflight += sum(h.budget for h in e.handoff_inbox)
+        load = inflight / max(e.ecfg.n_slots * e.ecfg.max_len, 1)
+        return load + self.cfg.tpot_weight * self._p(e.win, "tpot", 99)
+
+    def route(self, req: Request) -> ServingEngine:
+        """Pick the prefill replica for a new arrival."""
+        if self.cfg.policy == "round_robin":
+            e = self.prefill[self._rr_p % len(self.prefill)]
+            self._rr_p += 1
+            return e
+        if self.cfg.policy == "least_loaded":
+            return min(self.prefill,
+                       key=lambda e: (len(e.queue) + e.n_active, e.name))
+        return min(self.prefill,
+                   key=lambda e: (self._prefill_score(e), e.name))
+
+    def route_decode(self, h: Handoff) -> ServingEngine:
+        """Pick the decode replica for a finished prefill."""
+        if not self.decode:
+            raise RuntimeError("handoff produced but no decode-capable "
+                               "replica exists")
+        if self.cfg.policy == "round_robin":
+            e = self.decode[self._rr_d % len(self.decode)]
+            self._rr_d += 1
+            return e
+        if self.cfg.policy == "least_loaded":
+            return min(self.decode,
+                       key=lambda e: (e.n_active + len(e.handoff_inbox),
+                                      e.name))
+        return min(self.decode,
+                   key=lambda e: (self._decode_score(e), e.name))
+
+
+class DisaggServer:
+    """Coherent driver over N engine replicas + one router.
+
+    Engines arrive prebuilt (see :func:`build_disagg`), each with its own
+    simulated :class:`Clock` and (optionally) its own child
+    :class:`Tracer`; ``tracer`` is the main timeline the children merge
+    into after the run, and ``metrics`` is the one shared registry every
+    replica publishes its ``{name}.*`` gauges into.
+
+    The event loop is conservative discrete-event simulation:
+
+    1. deliver every in-flight handoff whose destination clock has
+       reached ``ready_at``;
+    2. submit arrivals up to the *frontier* (the minimum engine clock) —
+       routing decisions therefore see replica state no older than the
+       slowest replica, and never see the future;
+    3. step the lowest-clock engine that has work (``tick`` = land
+       handoffs, refill, one decode step);
+    4. if nothing moved, jump idle clocks to the next event (arrival or
+       handoff delivery) — or stop when no work remains.
+    """
+
+    def __init__(self, engines: Sequence[ServingEngine],
+                 router_cfg: RouterConfig = RouterConfig(),
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
+        if not engines:
+            raise ValueError("DisaggServer needs at least one engine")
+        names = [e.name for e in engines]
+        if len(set(names)) != len(names):
+            raise ValueError(f"replica names must be unique, got {names}")
+        self.engines = list(engines)
+        self.router = Router(engines, router_cfg)
+        self.tracer = or_null(tracer)
+        self.metrics = metrics
+        self.handoffs = 0
+
+    def _collect(self, e: ServingEngine,
+                 inflight: List[Tuple[Handoff, ServingEngine]]) -> None:
+        while e.pending_handoffs:
+            h = e.pending_handoffs.popleft()
+            target = self.router.route_decode(h)
+            self.handoffs += 1
+            inflight.append((h, target))
+
+    def run(self, requests: Sequence[Request]):
+        """Serve a workload to completion across all replicas.
+
+        Returns (outputs, records, summary) exactly like
+        :meth:`ServingEngine.run`, with a ``disagg`` summary section."""
+        reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        i = 0
+        inflight: List[Tuple[Handoff, ServingEngine]] = []
+        engines = self.engines
+        while True:
+            progressed = False
+            # 1. deliver handoffs whose transfer has completed
+            for pair in list(inflight):
+                h, d = pair
+                if d.clock.now >= h.ready_at:
+                    d.handoff_inbox.append(h)
+                    d._note_load()
+                    inflight.remove(pair)
+                    progressed = True
+            # 2. route arrivals up to the frontier
+            frontier = min(e.clock.now for e in engines)
+            while i < len(reqs) and reqs[i].arrival <= frontier:
+                self.router.route(reqs[i]).submit(reqs[i])
+                i += 1
+                progressed = True
+            # 3. step the lowest-clock engine with work
+            for e in sorted((e for e in engines if e.has_work),
+                            key=lambda e: (e.clock.now, e.name)):
+                if e.tick():
+                    self._collect(e, inflight)
+                    progressed = True
+                    break
+            if progressed:
+                continue
+            # 4. idle: jump to the next event
+            events = [h.ready_at for h, _ in inflight]
+            if i < len(reqs):
+                events.append(reqs[i].arrival)
+            if not events:
+                if any(e.has_work for e in engines):
+                    raise RuntimeError(
+                        "disagg scheduler stalled with queued work")
+                break
+            t = min(events)
+            for e in engines:
+                if e.clock.now < t:
+                    e.clock.advance(t - e.clock.now)
+        return self._finalize()
+
+    def _finalize(self):
+        outputs: Dict[int, List[int]] = {}
+        records: List[metrics_lib.RequestRecord] = []
+        for e in self.engines:
+            outputs.update(e.outputs)
+            records.extend(e.records)
+        records.sort(key=lambda r: r.rid)
+        elapsed = max(e.clock.now for e in self.engines)
+        summary = metrics_lib.summarize(records, elapsed)
+        summary["decode_steps"] = sum(e.decode_steps for e in self.engines)
+        summary["prefills"] = sum(e.prefills for e in self.engines)
+        summary["max_concurrent_slots"] = max(e.max_concurrent
+                                              for e in self.engines)
+        per_replica = {}
+        for e in self.engines:
+            entry = {
+                "role": e.role,
+                "prefills": e.prefills,
+                "decode_steps": e.decode_steps,
+                "handoffs_out": e.handoffs_out,
+                "handoffs_in": e.handoffs_in,
+                "max_concurrent_slots": e.max_concurrent,
+                "clock_s": e.clock.now,
+            }
+            if e.pool is not None:
+                entry["paged"] = {
+                    "num_blocks": e.pool.num_blocks,
+                    "peak_used_blocks": e.pool.peak_used,
+                    "shared_hits": e.pool.shared_hits,
+                    "cow_events": e.pool.cow_events,
+                }
+            per_replica[e.name] = entry
+        summary["disagg"] = {
+            "handoffs": self.handoffs,
+            "router_policy": self.router.cfg.policy,
+            "replicas": per_replica,
+        }
+        # merge each replica's child timeline into the main tracer
+        if self.tracer.enabled:
+            for e in self.engines:
+                if e.tracer is not self.tracer and e.tracer.enabled:
+                    self.tracer.extend(e.tracer.events)
+        if self.tracer.enabled or self.metrics is not None:
+            obs: Dict = {}
+            if self.tracer.enabled:
+                obs["span_counts"] = self.tracer.span_names()
+                obs["trace_events"] = len(self.tracer.events)
+            if self.metrics is not None:
+                obs["metrics"] = self.metrics.snapshot()
+            summary["obs"] = obs
+        return outputs, records, summary
+
+
+def build_disagg(cfg, params, *, n_prefill: int = 1, n_decode: int = 1,
+                 ecfg: EngineConfig = EngineConfig(),
+                 decode_ecfg: Optional[EngineConfig] = None,
+                 router_cfg: RouterConfig = RouterConfig(),
+                 ctx=None, clock: Optional[Clock] = None,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None) -> DisaggServer:
+    """Build a prefill tier + decode tier over one model.
+
+    ``ecfg`` configures the prefill replicas (``decode_ecfg`` defaults to
+    the same config for the decode tier — size them apart to match the
+    tiers' different bottlenecks).  ``clock`` is a *template*: its pinned
+    per-call costs (``fixed_prefill_s`` / ``fixed_decode_s`` /
+    ``fixed_handoff_s``) are copied into each replica's private clock.
+    Requires a paged layout — the handoff rides the block pool.
+
+    ``n_decode=0`` builds interleaved ``role="both"`` replicas (pure
+    multi-replica routing, no tier split)."""
+    if not ecfg.layout.paged:
+        raise ValueError("disaggregated serving needs a paged layout "
+                         "(EngineConfig.layout=CacheLayout(kind='paged'))")
+    decode_ecfg = decode_ecfg if decode_ecfg is not None else ecfg
+    metrics = metrics if metrics is not None else MetricsRegistry()
+    main = or_null(tracer)
+
+    def _clock() -> Clock:
+        if clock is None:
+            return Clock()
+        return Clock(fixed_decode_s=clock.fixed_decode_s,
+                     fixed_prefill_s=clock.fixed_prefill_s,
+                     fixed_handoff_s=clock.fixed_handoff_s)
+
+    def _tracer() -> Optional[Tracer]:
+        return Tracer(enabled=True) if main.enabled else None
+
+    def _engine(name: str, role: str, e: EngineConfig) -> ServingEngine:
+        backend = make_backend(cfg, params, ctx, layout=e.layout,
+                               prefill_chunk=e.prefill_chunk)
+        return ServingEngine(backend, e, _clock(), tracer=_tracer(),
+                             metrics=metrics, name=name, role=role)
+
+    engines = []
+    if n_decode <= 0:
+        engines += [_engine(f"replica{p}", "both", ecfg)
+                    for p in range(max(n_prefill, 1))]
+    else:
+        engines += [_engine(f"prefill{p}", "prefill", ecfg)
+                    for p in range(max(n_prefill, 1))]
+        engines += [_engine(f"decode{d}", "decode", decode_ecfg)
+                    for d in range(n_decode)]
+    return DisaggServer(engines, router_cfg, tracer=main, metrics=metrics)

@@ -542,9 +542,21 @@ class _PagedBackendMixin:
     is a pure function of (prompt, engine constants) — the precondition
     for the hash index being sound.  ``set_tables`` uploads the host
     read/write tables; ``copy_block`` is the device half of copy-on-write
-    (duplicate one physical block's rows across every pooled leaf)."""
+    (duplicate one physical block's rows across every pooled leaf).
+
+    The ``gather_block_values`` / ``scatter_block_values`` /
+    ``export_slot_state`` / ``import_slot_state`` quartet is the device
+    half of prefill→decode handoff: snapshot the pooled rows of an
+    exported block chain (plus the slot's non-pooled per-slot state) out
+    of one engine's cache, and land them in another engine's cache at
+    freshly mapped physical blocks.  Pure data movement — bit-exact — so
+    a handed-off request decodes token-identically to one that never
+    moved.  ``_pool_leaves`` names the pooled leaf arrays (block axis 1)
+    for the fused uniform-family backends; :class:`PagedSlots` overrides
+    the quartet to walk its generic leaf specs instead."""
 
     supports_prefix_sharing = True
+    _pool_leaves: tuple = ()
 
     def set_tables(self, cache: Dict, read: np.ndarray,
                    write: np.ndarray) -> Dict:
@@ -556,6 +568,42 @@ class _PagedBackendMixin:
     def copy_block(self, cache: Dict, src: int, dst: int) -> Dict:
         return self._copy(cache, jnp.int32(src), jnp.int32(dst))
 
+    def gather_block_values(self, cache: Dict,
+                            blocks: Sequence[int]) -> Dict:
+        """Snapshot the pooled rows of ``blocks`` (physical ids, in
+        virtual order) — the payload of a cross-pool handoff."""
+        idx = jnp.asarray(np.asarray(blocks, np.int32))
+        return {n: cache[n][:, idx] for n in self._pool_leaves}
+
+    def scatter_block_values(self, cache: Dict, blocks: Sequence[int],
+                             values: Dict,
+                             rows: Optional[Sequence[int]] = None) -> Dict:
+        """Write a gathered snapshot into ``blocks`` of this cache;
+        ``rows`` selects which rows of the snapshot to use (virtual block
+        indices the import actually copied — dedupe-adopted blocks are
+        skipped)."""
+        cache = dict(cache)
+        idx = jnp.asarray(np.asarray(blocks, np.int32))
+        sel = (None if rows is None
+               else jnp.asarray(np.asarray(rows, np.int32)))
+        for n in self._pool_leaves:
+            v = values[n]
+            if sel is not None:
+                v = v[:, sel]
+            cache[n] = cache[n].at[:, idx].set(v.astype(cache[n].dtype))
+        return cache
+
+    def export_slot_state(self, cache: Dict, slot: int) -> Dict:
+        """Non-pooled per-slot state riding along with a handoff (for the
+        fused uniform backends that's just the KV frontier length)."""
+        return {"len": cache["len"][slot]}
+
+    def import_slot_state(self, cache: Dict, slot: int,
+                          state: Dict) -> Dict:
+        cache = dict(cache)
+        cache["len"] = cache["len"].at[slot].set(state["len"])
+        return cache
+
 
 class PagedNativeBackend(_PagedBackendMixin, SlotBackend):
     """Native paged path for the uniform family: stacked per-layer KV in a
@@ -565,6 +613,7 @@ class PagedNativeBackend(_PagedBackendMixin, SlotBackend):
     :func:`transformer.init_paged_slots` / :func:`attn_decode_paged`."""
 
     families = ("uniform",)
+    _pool_leaves = ("k", "v")
 
     def __init__(self, cfg, params, ctx: Optional[tf.ModelCtx] = None,
                  layout: CacheLayout = CacheLayout(kind="paged")):
@@ -605,6 +654,7 @@ class PagedInt8Backend(_PagedBackendMixin, SlotBackend):
     block-table index map (``models.kvquant`` paged twins)."""
 
     families = ("uniform",)
+    _pool_leaves = ("k_q", "k_s", "v_q", "v_s")
 
     def __init__(self, cfg, params, ctx: Optional[tf.ModelCtx] = None,
                  layout: CacheLayout = CacheLayout(kind="paged", kv_bits=8)):
@@ -697,6 +747,7 @@ class PagedSlots(_PagedBackendMixin, SlotBackend):
         self.inner = inner
         self.layout = layout
         self._specs = None
+        self._state_axes = None
         super().__init__(inner.cfg, inner.params, inner.ctx)
 
     def kv_keys(self) -> tuple:
@@ -712,17 +763,30 @@ class PagedSlots(_PagedBackendMixin, SlotBackend):
         num_blocks = resolved_num_blocks(self.layout, n_slots, max_len)
         paths, leaves = zip(*jax.tree_util.tree_flatten_with_path(
             template)[0])
-        specs, pooled = [], []
-        for path, leaf in zip(paths, leaves):
+        # slot axis of each slot-resident leaf (handoff transfers that
+        # row): probe a phantom (n_slots + 1)-slot template through
+        # eval_shape — zero allocation — and take the axis whose size
+        # moved.  Exact for every family layout (mamba rows keep the
+        # slot on axis 2), unlike any shape-matching heuristic.
+        probe = jax.eval_shape(
+            lambda: self.inner.init_slots(n_slots + 1, max_len))
+        probe_leaves = jax.tree_util.tree_leaves(probe)
+        specs, pooled, state_axes = [], [], []
+        for path, leaf, pleaf in zip(paths, leaves, probe_leaves):
             ax = self._slot_axis(path, leaf, n_slots, max_len)
             specs.append(ax)
             if ax is None:
                 pooled.append(leaf)
+                diff = [i for i, (a, b) in enumerate(
+                    zip(leaf.shape, pleaf.shape)) if a != b]
+                state_axes.append(diff[0] if diff else None)
             else:
                 shape = list(leaf.shape)
                 shape[ax], shape[ax + 1] = num_blocks, bs
                 pooled.append(jnp.zeros(tuple(shape), leaf.dtype))
+                state_axes.append(None)
         self._specs = tuple(specs)
+        self._state_axes = tuple(state_axes)
         state = jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(template), pooled)
         state = dict(state)
@@ -838,6 +902,69 @@ class PagedSlots(_PagedBackendMixin, SlotBackend):
         state["write_table"] = cache["write_table"]
         return state
 
+    # -- handoff (block-value + slot-state transfer) -----------------------
+
+    def gather_block_values(self, cache: Dict,
+                            blocks: Sequence[int]) -> Dict:
+        """Pooled-leaf rows of ``blocks``, keyed by flat leaf index.
+        rwkv6 pages zero leaves and returns {} — its whole live state
+        rides :meth:`export_slot_state` instead."""
+        idx = jnp.asarray(np.asarray(blocks, np.int32))
+        flat, _ = self._split(cache)
+        vals = {}
+        for j, (leaf, ax) in enumerate(zip(flat, self._specs)):
+            if ax is None:
+                continue
+            vals[j] = leaf[idx] if ax == 0 else leaf[:, idx]
+        return vals
+
+    def scatter_block_values(self, cache: Dict, blocks: Sequence[int],
+                             values: Dict,
+                             rows: Optional[Sequence[int]] = None) -> Dict:
+        idx = jnp.asarray(np.asarray(blocks, np.int32))
+        sel = (None if rows is None
+               else jnp.asarray(np.asarray(rows, np.int32)))
+        flat, treedef = self._split(cache)
+        out = list(flat)
+        for j, v in values.items():
+            ax = self._specs[j]
+            if sel is not None:
+                v = v[sel] if ax == 0 else v[:, sel]
+            if ax == 0:
+                out[j] = flat[j].at[idx].set(v.astype(flat[j].dtype))
+            else:
+                out[j] = flat[j].at[:, idx].set(v.astype(flat[j].dtype))
+        state = dict(jax.tree_util.tree_unflatten(treedef, out))
+        state["block_table"] = cache["block_table"]
+        state["write_table"] = cache["write_table"]
+        return state
+
+    def export_slot_state(self, cache: Dict, slot: int) -> Dict:
+        """Every slot-resident (non-pooled) leaf's row for ``slot``: the
+        KV frontier length plus whatever the family keeps outside the
+        pool — mamba conv/ssm rows, wkv state, gemma short rings, whisper
+        cross-KV."""
+        flat, _ = self._split(cache)
+        st = {}
+        for j, (leaf, ax, sax) in enumerate(
+                zip(flat, self._specs, self._state_axes)):
+            if ax is not None or sax is None:
+                continue
+            st[j] = leaf[(slice(None),) * sax + (slot,)]
+        return st
+
+    def import_slot_state(self, cache: Dict, slot: int,
+                          state: Dict) -> Dict:
+        flat, treedef = self._split(cache)
+        out = list(flat)
+        for j, v in state.items():
+            sel = (slice(None),) * self._state_axes[j] + (slot,)
+            out[j] = flat[j].at[sel].set(v.astype(flat[j].dtype))
+        st = dict(jax.tree_util.tree_unflatten(treedef, out))
+        st["block_table"] = cache["block_table"]
+        st["write_table"] = cache["write_table"]
+        return st
+
 
 def make_backend(cfg, params, ctx: Optional[tf.ModelCtx] = None,
                  prefill_chunk: int = 0, *,
@@ -903,6 +1030,40 @@ def make_backend(cfg, params, ctx: Optional[tf.ModelCtx] = None,
     return PagedSlots(inner, layout)
 
 
+@dataclasses.dataclass
+class Handoff:
+    """A prefilled request in flight from a prefill-tier engine to a
+    decode-tier engine.
+
+    Self-contained: the exported block chain (physical ids valid in the
+    *source* pool, sealed content keys for dedupe), the gathered pooled
+    block values (device snapshots — immutable, so the source slot can be
+    released immediately), the non-pooled slot state, and the scheduler
+    fields the decode engine needs to continue the stream exactly where
+    prefill left it (last emitted token, remaining budget, sampling key,
+    mrope position).  ``ready_at`` models the transfer latency
+    (``Clock.fixed_handoff_s``); the record and output list are shared
+    objects, so TTFT/TPOT and the token stream accumulate across tiers
+    without any merge step."""
+
+    req: Request
+    rec: metrics_lib.RequestRecord
+    last_token: int
+    budget: int                     # generation budget incl. the first token
+    key: np.ndarray                 # per-request sampling PRNG key
+    live_tokens: int                # KV rows filled (= prompt length)
+    blocks: List[int]               # exported chain (source-pool physical)
+    keys: List[Optional[int]]       # sealed content key per block (or None)
+    values: Dict                    # gathered pooled rows of blocks[:n_live]
+    slot_state: Dict                # non-pooled per-slot rows
+    src_pool: Optional[BlockPool]   # identity only (shared-pool detection)
+    src: str                        # source engine name
+    exported_at: float
+    ready_at: float
+    out: List[int]                  # the request's (shared) output list
+    pos: int = 0                    # mrope: next input token's position
+
+
 class ServingEngine:
     """Slot scheduler over any backend exposing init_slots/prefill/decode.
 
@@ -918,8 +1079,14 @@ class ServingEngine:
     def __init__(self, backend, ecfg: EngineConfig = EngineConfig(),
                  clock: Optional[Clock] = None,
                  tracer: Optional[Tracer] = None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None, *,
+                 name: str = "engine", role: str = "both"):
+        if role not in ("both", "prefill", "decode"):
+            raise ValueError(f"unknown engine role {role!r} "
+                             "(both | prefill | decode)")
         self.backend, self.ecfg = backend, ecfg
+        self.name = name
+        self.role = role
         self.clock = clock if clock is not None else Clock()
         # observability: spans/instants + pool gauges, both pinned to the
         # engine's (simulated) clock so per-request span durations reconcile
@@ -944,7 +1111,25 @@ class ServingEngine:
                 self.layout.prefix_sharing
                 and getattr(backend, "supports_prefix_sharing", False))
             if metrics is not None:
-                self.pool.attach_metrics(metrics)
+                self.pool.attach_metrics(
+                    metrics,
+                    prefix="pool" if name == "engine" else f"{name}.pool",
+                    clock=lambda: self.clock.now)
+        if role != "both" and self.tables is None:
+            raise ValueError(
+                f"engine role {role!r} needs a paged layout — prefill/"
+                "decode handoff rides the block pool (layout=CacheLayout("
+                "kind='paged'))")
+        # disaggregated serving: handoffs exported by a prefill-tier
+        # engine (drained by the DisaggServer driver) and the inbox of
+        # handoffs awaiting a free slot on a decode-tier engine
+        self.pending_handoffs: Deque[Handoff] = deque()
+        self.handoff_inbox: Deque[Handoff] = deque()
+        self.handoffs_out = 0
+        self.handoffs_in = 0
+        # sliding-window TTFT/TPOT percentiles (router routing signal)
+        self.win = (metrics_lib.WindowedLatency(metrics, name)
+                    if metrics is not None else None)
         # speculative decode: k rows verified per scheduler step
         self.spec_k = max(1, int(ecfg.spec_k))
         if self.spec_k > 1:
@@ -1048,6 +1233,12 @@ class ServingEngine:
         return self.ecfg.n_slots * roofline.decode_state_bytes(
             cfg, self.ecfg.max_len, kv_bits=self.layout.kv_bits)
 
+    def _track(self, base: str) -> str:
+        """Trace track name: bare for the default single engine (keeps
+        existing traces/tests byte-identical), ``{name}.{base}`` when this
+        engine is a named replica sharing a timeline with others."""
+        return base if self.name == "engine" else f"{self.name}.{base}"
+
     def _trace_request(self, rec: metrics_lib.RequestRecord,
                        slot: int) -> None:
         """Retroactive per-request phase spans on track ``slot{N}``, built
@@ -1057,7 +1248,7 @@ class ServingEngine:
         tr = self.tracer
         if not tr.enabled or rec.finished is None:
             return
-        track = f"slot{slot}"
+        track = self._track(f"slot{slot}")
         tr.complete("req.queue_wait", rec.arrival, rec.admitted, track=track,
                     rid=rec.rid, slo=rec.slo_name)
         tr.complete("req.prefill", rec.admitted, rec.first_token, track=track,
@@ -1117,8 +1308,8 @@ class ServingEngine:
         self.records.append(rec)
         if len(req.prompt) >= self.ecfg.max_len:
             rec.rejected = True
-            self.tracer.instant("sched.reject", track="sched", rid=req.rid,
-                                reason="prompt_too_long")
+            self.tracer.instant("sched.reject", track=self._track("sched"),
+                                rid=req.rid, reason="prompt_too_long")
             return False
         if req.grid is not None and \
                 req.grid[0] * req.grid[1] >= len(req.prompt):
@@ -1126,21 +1317,22 @@ class ServingEngine:
             # spilling into pad positions would silently corrupt the
             # request's mrope layout (see mrope_prompt_positions)
             rec.rejected = True
-            self.tracer.instant("sched.reject", track="sched", rid=req.rid,
-                                reason="grid_overflow")
+            self.tracer.instant("sched.reject", track=self._track("sched"),
+                                rid=req.rid, reason="grid_overflow")
             return False
         if len(self.queue) >= self.ecfg.queue_capacity:
             shed = (self.queue.shed_batch()
                     if req.slo.name == "interactive" else None)
             if shed is None:
                 rec.rejected = True
-                self.tracer.instant("sched.reject", track="sched",
+                self.tracer.instant("sched.reject", track=self._track("sched"),
                                     rid=req.rid, reason="queue_full")
                 return False
             shed[1].rejected = True         # the batch-tier request it evicts
-            self.tracer.instant("sched.shed", track="sched",
+            self.tracer.instant("sched.shed", track=self._track("sched"),
                                 rid=shed[0].rid, for_rid=req.rid)
         self.queue.append((req, rec))
+        self._note_load()
         return True
 
     def _request_key(self, req: Request):
@@ -1157,8 +1349,15 @@ class ServingEngine:
         prompt = np.asarray(req.prompt, np.int32)
         if self.tables is not None:
             bs = self.layout.block_size
-            span = -(-min(len(prompt) + req.max_new_tokens,
-                          self.ecfg.max_len) // bs)
+            if self.role == "prefill":
+                # tier advantage: a prefill engine maps only the prompt's
+                # blocks — the decode budget is reserved by the decode
+                # tier at import (pad-row writes past the prompt sink
+                # into the null block)
+                span = -(-len(prompt) // bs)
+            else:
+                span = -(-min(len(prompt) + req.max_new_tokens,
+                              self.ecfg.max_len) // bs)
             if self.prefix_sharing:
                 keys, tail = prefix_keys(req.prompt, bs,
                                          self._share_seed(req))
@@ -1168,8 +1367,9 @@ class ServingEngine:
                 return False
             self._sync_tables()
         rec.admitted = self.clock.now
-        self.tracer.instant("sched.admit", track="sched", rid=req.rid,
-                            slot=slot, queue_wait=rec.admitted - rec.arrival)
+        self.tracer.instant("sched.admit", track=self._track("sched"),
+                            rid=req.rid, slot=slot,
+                            queue_wait=rec.admitted - rec.arrival)
         s_pad = _bucket(len(prompt), self.ecfg.prompt_quantum,
                         self.ecfg.max_len)
         padded = np.full((1, s_pad), self.ecfg.pad_id, np.int32)
@@ -1193,6 +1393,8 @@ class ServingEngine:
                              jax.random.fold_in(key, 0))
         rec.first_token = self.clock.now
         rec.tokens_out = 1
+        if self.win is not None:
+            self.win.observe_ttft(rec.first_token - rec.arrival)
         self.outputs[req.rid] = [first]
         budget = min(req.max_new_tokens, self.ecfg.max_len - len(prompt))
         if first == req.eos_id or budget <= 1:
@@ -1200,6 +1402,14 @@ class ServingEngine:
             if self.tables is not None:
                 self.tables.release(slot)
             self._trace_request(rec, slot)
+            self._note_finish(rec)
+            return True
+        if self.role == "prefill":
+            # hand the sealed prompt blocks + slot state to the decode
+            # tier; this slot frees immediately, so the next queued
+            # prompt prefills back-to-back (the tier's whole point)
+            self._export_request(slot, req, rec, first, np.asarray(key),
+                                 budget)
             return True
         self.slot_req[slot] = req
         self.slot_rec[slot] = rec
@@ -1213,6 +1423,132 @@ class ServingEngine:
             self.slot_pos[slot] = tf.mrope_next_position(len(prompt),
                                                          req.grid)
         return True
+
+    # -- disaggregated handoff ----------------------------------------------
+
+    def _export_request(self, slot: int, req: Request,
+                        rec: metrics_lib.RequestRecord, first: int,
+                        key: np.ndarray, budget: int) -> None:
+        """Package the just-prefilled request for the decode tier: snapshot
+        the slot's block chain (values + sealed keys) and slot state, then
+        release the slot.  The snapshot arrays are immutable, so the blocks
+        can be reused here before the decode tier lands the import."""
+        bs = self.layout.block_size
+        live = len(req.prompt)
+        blocks, keys = self.tables.export_slot(slot)
+        n_live = -(-live // bs)
+        values = self.backend.gather_block_values(self.cache,
+                                                  blocks[:n_live])
+        state = self.backend.export_slot_state(self.cache, slot)
+        pos = 0
+        if getattr(self.backend, "needs_positions", False):
+            pos = int(tf.mrope_next_position(live, req.grid))
+        now = self.clock.now
+        h = Handoff(
+            req=req, rec=rec, last_token=first, budget=budget, key=key,
+            live_tokens=live, blocks=blocks[:n_live], keys=keys[:n_live],
+            values=values, slot_state=state, src_pool=self.pool,
+            src=self.name, exported_at=now,
+            ready_at=now + (self.clock.fixed_handoff_s or 0.0),
+            out=self.outputs[req.rid], pos=pos)
+        self.tables.release(slot)
+        self.pending_handoffs.append(h)
+        self.handoffs_out += 1
+        self.tracer.instant("pool.handoff", track=self._track("pool"),
+                            rid=req.rid, dir="out", blocks=n_live,
+                            live_tokens=live)
+        if self.metrics is not None:
+            self.metrics.counter(f"{self.name}.handoffs_out").inc()
+        self._note_load()
+
+    def import_handoff(self, h: Handoff) -> bool:
+        """Land a handoff in a free slot: map the exported chain into this
+        pool (dedupe via sealed keys / re-refcount when pools are shared),
+        scatter the copied block values, restore slot state, and resume
+        the request mid-stream.  False when no slot or not enough blocks
+        are free yet — the caller retries after retirements."""
+        slot = next((s for s in range(self.ecfg.n_slots)
+                     if self.slot_req[s] is None), None)
+        if slot is None:
+            return False
+        bs = self.layout.block_size
+        span = -(-min(h.live_tokens + h.budget, self.ecfg.max_len) // bs)
+        copies = self.tables.import_slot(
+            slot, h.blocks, h.keys, h.live_tokens,
+            src_pool=h.src_pool, span_blocks=span)
+        if copies is None:
+            if self.pool.used_blocks == 0:
+                raise RuntimeError(
+                    f"decode tier pool too small for handoff rid="
+                    f"{h.req.rid} ({span} blocks needed, "
+                    f"{self.pool.num_blocks} in pool)")
+            return False
+        if copies:
+            self.cache = self.backend.scatter_block_values(
+                self.cache, [d for _, d in copies], h.values,
+                rows=[i for i, _ in copies])
+        self.cache = self.backend.import_slot_state(self.cache, slot,
+                                                    h.slot_state)
+        self._sync_tables()
+        req, rec = h.req, h.rec
+        self.outputs[req.rid] = h.out
+        self.slot_req[slot] = req
+        self.slot_rec[slot] = rec
+        self.slot_remaining[slot] = h.budget - 1
+        self.slot_tokens[slot, 0] = h.last_token
+        self._tokens_dirty = True
+        self.slot_key[slot] = h.key
+        self._slot_len[slot] = h.live_tokens
+        if getattr(self.backend, "needs_positions", False):
+            self.slot_pos[slot] = h.pos
+        self.handoffs_in += 1
+        self.tracer.instant("pool.handoff", track=self._track("pool"),
+                            rid=req.rid, dir="in", slot=slot,
+                            copied=len(copies), adopted=len(h.blocks) -
+                            len(copies))
+        # the handoff span sits inside req.decode on the destination slot
+        # track: TTFT closed at prefill (first token came from the prefill
+        # tier); the transfer is decode-side latency the TPOT report pays
+        self.tracer.complete("req.handoff", h.exported_at, self.clock.now,
+                             track=self._track(f"slot{slot}"), rid=req.rid,
+                             src=h.src, blocks=len(h.blocks))
+        if self.metrics is not None:
+            self.metrics.counter(f"{self.name}.handoffs_in").inc()
+        self._note_load()
+        self._note_occupancy()
+        return True
+
+    def _drain_inbox(self) -> bool:
+        progressed = False
+        while self.handoff_inbox:
+            if not self.import_handoff(self.handoff_inbox[0]):
+                break
+            self.handoff_inbox.popleft()
+            progressed = True
+        if progressed:
+            self._note_load()
+        return progressed
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.n_active or self.queue or self.handoff_inbox)
+
+    def tick(self) -> bool:
+        """One non-blocking scheduler step for the multi-engine driver:
+        land ready handoffs, refill free slots from the queue, decode once
+        if anything is active.  Returns False when nothing moved (the
+        engine is blocked waiting on blocks or deliveries)."""
+        before = (self.prefills, self.decode_steps, self.handoffs_in,
+                  len(self.queue), len(self.handoff_inbox))
+        self._drain_inbox()
+        self._refill()
+        if self.n_active:
+            self._decode_once()
+        after = (self.prefills, self.decode_steps, self.handoffs_in,
+                 len(self.queue), len(self.handoff_inbox))
+        return after != before
+
+    # -- refill -------------------------------------------------------------
 
     def _refill(self) -> None:
         free = [s for s in range(self.ecfg.n_slots)
@@ -1231,12 +1567,13 @@ class ServingEngine:
                 # never corruption)
                 if self.pool is not None and self.pool.used_blocks == 0:
                     rec.rejected = True
-                    self.tracer.instant("sched.reject", track="sched",
+                    self.tracer.instant("sched.reject",
+                                        track=self._track("sched"),
                                         rid=req.rid, reason="pool_too_small")
                     continue
                 self.queue.pushback((req, rec))
-                self.tracer.instant("sched.pushback", track="sched",
-                                    rid=req.rid,
+                self.tracer.instant("sched.pushback",
+                                    track=self._track("sched"), rid=req.rid,
                                     free_blocks=self.pool.free_blocks
                                     if self.pool is not None else 0)
                 self._note_occupancy()
@@ -1247,7 +1584,28 @@ class ServingEngine:
         active = self.n_active
         self.max_concurrent = max(self.max_concurrent, active)
         if self.metrics is not None:
-            self.metrics.gauge("engine.active_slots").set(active)
+            self.metrics.gauge(f"{self.name}.active_slots").set(
+                active, t=self.clock.now)
+
+    def _note_load(self) -> None:
+        """Per-replica load gauges the router scores on: queued work
+        (admission queue + handoff inbox) and the decode tokens still owed
+        by active slots.  Stamped with this engine's clock explicitly, so
+        N engines sharing one registry keep coherent series."""
+        if self.metrics is None:
+            return
+        t = self.clock.now
+        self.metrics.gauge(f"{self.name}.queue_depth").set(
+            len(self.queue) + len(self.handoff_inbox), t=t)
+        inflight = int(sum(int(self.slot_remaining[s])
+                           for s in range(self.ecfg.n_slots)
+                           if self.slot_req[s] is not None))
+        self.metrics.gauge(f"{self.name}.in_flight_tokens").set(
+            inflight, t=t)
+
+    def _note_finish(self, rec: metrics_lib.RequestRecord) -> None:
+        if self.win is not None and rec.tpot is not None:
+            self.win.observe_tpot(rec.tpot)
 
     def _decode_once(self) -> None:
         if self.spec_k > 1:
@@ -1262,7 +1620,8 @@ class ServingEngine:
                 cow = self.tables.ensure_writable(s, int(self._slot_len[s]))
                 if cow is not None:
                     self.cache = self.backend.copy_block(self.cache, *cow)
-                    self.tracer.instant("pool.cow", track="pool", slot=s,
+                    self.tracer.instant("pool.cow",
+                                        track=self._track("pool"), slot=s,
                                         src=cow[0], dst=cow[1])
             self._sync_tables()
         positions = None
@@ -1288,8 +1647,8 @@ class ServingEngine:
         logits, self.cache = self._timed(self.clock.fixed_decode_s, call)
         if step_args is not None:
             self.tracer.complete("decode_step", step_t0, self.clock.now,
-                                 track="engine", step=self.decode_steps,
-                                 **step_args)
+                                 track=self._track("engine"),
+                                 step=self.decode_steps, **step_args)
         self.decode_steps += 1
         self._kv_bytes_sum += self._resident_kv_bytes()
         self.slot_pos += 1
@@ -1340,6 +1699,8 @@ class ServingEngine:
                 if self.tables is not None:
                     self.tables.release(s)  # refcounts back to the pool
                 self._trace_request(rec, s)
+                self._note_finish(rec)
+        self._note_load()
 
     def _spec_decode_once(self) -> None:
         """One speculative scheduler step: self-draft up to ``spec_k - 1``
@@ -1387,7 +1748,8 @@ class ServingEngine:
                         s, int(self._slot_len[s]), int(q_lens[s])):
                     self.cache = self.backend.copy_block(self.cache,
                                                          src, dst)
-                    self.tracer.instant("pool.cow", track="pool", slot=s,
+                    self.tracer.instant("pool.cow",
+                                        track=self._track("pool"), slot=s,
                                         src=src, dst=dst)
             self._sync_tables()
         positions = None
@@ -1477,10 +1839,13 @@ class ServingEngine:
                 if self.tables is not None:
                     self.tables.release(s)
                 self._trace_request(rec, s)
+                self._note_finish(rec)
+        self._note_load()
         self.spec_tokens += step_emitted
         if step_args is not None:
             self.tracer.complete("decode_step", step_t0, self.clock.now,
-                                 track="engine", step=self.decode_steps - 1,
+                                 track=self._track("engine"),
+                                 step=self.decode_steps - 1,
                                  tokens_emitted=step_emitted, **step_args)
         if self.metrics is not None:
             self.metrics.counter("engine.spec_tokens").inc(step_emitted)

@@ -61,6 +61,46 @@ class RequestRecord:
 percentile = obs_metrics.percentile
 
 
+class WindowedLatency:
+    """Sliding-window TTFT/TPOT percentiles over the most recent
+    observations, built on the obs histogram's exact sample window.
+
+    The full-run percentiles above summarize everything a run produced;
+    a router deciding where to place the *next* request needs the load
+    picture of the last few seconds instead.  Each replica owns one of
+    these, backed by two registry histograms (``<name>.ttft_window`` /
+    ``<name>.tpot_window``) whose ``max_samples`` caps the window, so
+    the same numbers show up in the registry snapshot that the trace
+    exporter dumps.  While fewer than ``window`` samples have been
+    observed the readout is bit-identical to ``np.percentile`` over the
+    observed list (the obs histogram stays in exact mode until samples
+    age out)."""
+
+    def __init__(self, registry: "obs_metrics.MetricsRegistry",
+                 name: str, window: int = 64):
+        self.window = int(window)
+        self._ttft = registry.histogram(f"{name}.ttft_window",
+                                        max_samples=self.window)
+        self._tpot = registry.histogram(f"{name}.tpot_window",
+                                        max_samples=self.window)
+
+    def observe_ttft(self, s: float) -> None:
+        self._ttft.observe(s)
+
+    def observe_tpot(self, s: float) -> None:
+        self._tpot.observe(s)
+
+    def ttft_p(self, q: float) -> float:
+        """Windowed TTFT percentile; NaN before any sample."""
+        return percentile(self._ttft.samples, q) if self._ttft.count else \
+            float("nan")
+
+    def tpot_p(self, q: float) -> float:
+        """Windowed TPOT percentile; NaN before any sample."""
+        return percentile(self._tpot.samples, q) if self._tpot.count else \
+            float("nan")
+
+
 def _dist(xs: List[float]) -> Dict[str, float]:
     """Distribution summary via the obs histogram readout — exact while the
     sample window holds everything, which it always does for serve runs."""

@@ -23,7 +23,8 @@ from __future__ import annotations
 import math
 from typing import Dict, Sequence
 
-from repro.config import ArchConfig, HBM_BW, PEAK_FLOPS_BF16
+from repro.config import (ArchConfig, HBM_BW, ICI_BW_PER_LINK,
+                          PEAK_FLOPS_BF16)
 
 
 def _kv_pos_bytes(head_dim: int, n_kv: int, kv_bits: int) -> float:
@@ -190,4 +191,69 @@ def modeled_decode_step(cfg: ArchConfig, n_slots: int, cache_len: int,
         "param_bytes": params,
         "bound": "memory" if t_memory >= t_compute else "compute",
         "modeled_tok_s": n_slots / step_s,
+    }
+
+
+def modeled_prefill_step(cfg: ArchConfig, prompt_len: int,
+                         kv_bits: int = 16) -> Dict[str, object]:
+    """Roofline terms for one whole-prompt prefill on the full arch.
+
+    Same two-term model as :func:`modeled_decode_step`, but the compute
+    term is the full forward over ``prompt_len`` positions (every matmul
+    touches the whole prompt, attention is quadratic-ish in it) while the
+    memory term streams the parameters once plus writes the prompt's KV
+    rows.  The arithmetic intensity therefore grows with ``prompt_len``
+    — prefill crosses into the compute-bound regime at modest prompt
+    lengths, which is the whole reason the two phases want different
+    batching policies."""
+    from repro.core.hybrid import model_flops
+    flops = model_flops(cfg, prompt_len, 1, training=False)
+    params = 2.0 * cfg.active_params()
+    state = decode_state_bytes(cfg, prompt_len, kv_bits)
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = (params + state) / HBM_BW
+    step_s = max(t_compute, t_memory)
+    return {
+        "prompt_len": prompt_len,
+        "t_compute_ms": t_compute * 1e3,
+        "t_memory_ms": t_memory * 1e3,
+        "bound": "compute" if t_compute >= t_memory else "memory",
+        "modeled_prefill_s": step_s,
+        "modeled_prefill_tok_s": prompt_len / step_s,
+    }
+
+
+def modeled_tier_split(cfg: ArchConfig, n_slots: int, cache_len: int,
+                       prompt_len: int, kv_bits: int = 16,
+                       ici_links: int = 1) -> Dict[str, object]:
+    """Why disaggregation wins: the two phases sit on opposite sides of
+    the roofline, so an interleaved engine time-slices a compute-bound
+    phase (prefill) against a bandwidth-bound one (decode) on the same
+    chip and each stalls the other.  Returns both phase models plus the
+    modeled KV-handoff cost of moving one finished prompt's resident
+    decode state across ``ici_links`` ICI links — the price a split pays
+    per request, amortized over every decode step it un-stalls.
+
+    The block-table itself is O(prompt_len / block_size) integers —
+    noise next to the KV bytes — so the handoff term is just the state
+    transfer.  ``handoff_vs_decode_steps`` says how many decode steps of
+    the whole batch one handoff costs; when it is well under 1, splitting
+    is effectively free at this granularity."""
+    prefill = modeled_prefill_step(cfg, prompt_len, kv_bits)
+    decode = modeled_decode_step(cfg, n_slots, cache_len, kv_bits)
+    handoff_bytes = decode_state_bytes(cfg, prompt_len, kv_bits)
+    t_handoff = handoff_bytes / (ici_links * ICI_BW_PER_LINK)
+    t_decode_step = n_slots / decode["modeled_tok_s"]
+    return {
+        "prefill": prefill,
+        "decode": decode,
+        "split_is_heterogeneous": prefill["bound"] != decode["bound"],
+        "handoff_bytes": handoff_bytes,
+        "handoff_s": t_handoff,
+        "handoff_vs_decode_steps": t_handoff / t_decode_step,
+        # an interleaved engine stalls every in-flight decode for the
+        # whole prefill; the tiered engine pays one handoff instead
+        "interleave_stall_s": prefill["modeled_prefill_s"],
+        "stall_vs_handoff": prefill["modeled_prefill_s"]
+        / max(t_handoff, 1e-12),
     }

@@ -169,16 +169,72 @@ def generate(cfg: TrafficConfig) -> List[Request]:
     return reqs
 
 
+@dataclasses.dataclass(frozen=True)
+class PrefillBurstConfig:
+    """Prefill-burst scenario: a steady decode-heavy Zipfian background
+    (short prompts, long generations) with a seeded burst of long prompts
+    dropped on top at ``burst_start`` — the workload that stalls an
+    interleaved engine's in-flight decodes and that disaggregation is
+    supposed to absorb.  Burst requests are interactive (tight TTFT) and
+    get rids after every background rid so the two streams stay
+    distinguishable in traces."""
+
+    background: TrafficConfig = TrafficConfig(
+        n_requests=48, rate=24.0, process="poisson",
+        prompt_min=4, prompt_max=8,
+        new_tokens_min=16, new_tokens_max=24,
+        interactive_fraction=0.0)
+    burst_n: int = 8                    # long prompts in the burst
+    burst_start: float = 0.25           # seconds since sim start
+    burst_rate: float = 64.0            # arrivals/s inside the burst
+    burst_prompt_min: int = 32
+    burst_prompt_max: int = 48
+    burst_new_tokens: int = 8
+    seed: int = 0
+
+
+def generate_prefill_burst(cfg: PrefillBurstConfig) -> List[Request]:
+    """Background + burst merged and sorted by arrival; fully determined
+    by ``cfg`` (the background stream is byte-identical to
+    ``generate(cfg.background)`` aside from rid/SLO bookkeeping)."""
+    if cfg.burst_prompt_max < cfg.burst_prompt_min:
+        raise ValueError(f"burst_prompt_max {cfg.burst_prompt_max} < "
+                         f"burst_prompt_min {cfg.burst_prompt_min}")
+    background = generate(
+        dataclasses.replace(cfg.background, seed=cfg.background.seed))
+    rng = np.random.default_rng(cfg.seed + 0x9E3779B9)
+    gaps = rng.exponential(1.0 / cfg.burst_rate, size=cfg.burst_n)
+    arrivals = cfg.burst_start + np.cumsum(gaps)
+    lengths = rng.integers(cfg.burst_prompt_min, cfg.burst_prompt_max + 1,
+                           size=cfg.burst_n)
+    base_rid = len(background)
+    burst = [Request(
+        rid=base_rid + i,
+        user_id=cfg.background.n_users + i,   # fresh users: no prefix reuse
+        prompt=_user_prompt(cfg.background, cfg.background.n_users + i,
+                            int(lengths[i]), rng),
+        max_new_tokens=cfg.burst_new_tokens,
+        arrival=float(arrivals[i]),
+        slo=INTERACTIVE_TIER,
+        eos_id=cfg.background.eos_id,
+        temperature=cfg.background.temperature,
+        top_k=cfg.background.top_k,
+    ) for i in range(cfg.burst_n)]
+    return sorted(background + burst, key=lambda r: (r.arrival, r.rid))
+
+
 class Clock:
     """Simulated clock the engine advances: by measured model wall time for
     each compute call, and by arbitrary jumps when idle-waiting for the next
     arrival.  Tests can pin per-call costs to get deterministic timelines."""
 
     def __init__(self, fixed_decode_s: Optional[float] = None,
-                 fixed_prefill_s: Optional[float] = None):
+                 fixed_prefill_s: Optional[float] = None,
+                 fixed_handoff_s: Optional[float] = None):
         self.now = 0.0
         self.fixed_decode_s = fixed_decode_s
         self.fixed_prefill_s = fixed_prefill_s
+        self.fixed_handoff_s = fixed_handoff_s
 
     def advance(self, dt: float) -> None:
         assert dt >= 0.0

@@ -286,3 +286,142 @@ def test_spec_rejection_drains_refcounts():
     assert pool.refcount[NULL_BLOCK] == 1
     assert (pool.refcount[1:] == 0).all()
     assert pool.used_blocks == 0 and pool.cow_debt == 0
+
+
+# ---------------------------------------------------------------------------
+# handoff: export_slot / import_slot (disaggregated prefill -> decode)
+# ---------------------------------------------------------------------------
+
+def test_export_snapshot_is_pure_read():
+    pool, tables = _tables()
+    prompt = [1, 2, 3, 4, 5, 6, 7]
+    keys, tail = prefix_keys(prompt, 4)
+    assert tables.admit(0, keys, tail, span_blocks=3)
+    tables.seal_prompt(0)
+    before = (tables.read.copy(), tables.write.copy(),
+              pool.refcount.copy(), pool.cow_debt)
+    blocks, bkeys = tables.export_slot(0)
+    # the allocated span in virtual order, sealed keys where published
+    assert len(blocks) == 3 and NULL_BLOCK not in blocks
+    assert bkeys[0] == keys[0]
+    assert bkeys[1] == tail                 # sealed partial tail
+    assert bkeys[2] is None                 # unsealed decode budget
+    after = (tables.read, tables.write, pool.refcount, pool.cow_debt)
+    assert (before[0] == after[0]).all() and (before[1] == after[1]).all()
+    assert (before[2] == after[2]).all() and before[3] == after[3]
+
+
+def test_cross_pool_handoff_drains_both_pools():
+    # prefill tier exports, releases; decode tier imports fresh copies.
+    # After the decode side retires, BOTH pools are back to zero refcounts
+    src_pool, src = _tables()
+    dst_pool, dst = _tables()
+    prompt = [1, 2, 3, 4, 5, 6, 7]
+    keys, tail = prefix_keys(prompt, 4)
+    assert src.admit(0, keys, tail, span_blocks=2)
+    src.seal_prompt(0)
+    blocks, bkeys = src.export_slot(0)
+    src.release(0)
+    assert src_pool.used_blocks == 0
+    assert (src_pool.refcount[1:] == 0).all()
+    copies = dst.import_slot(0, blocks, bkeys, live_tokens=7,
+                             src_pool=src_pool, span_blocks=3)
+    # nothing matches in the fresh pool: every live block is a copy
+    assert copies is not None and len(copies) == 2
+    assert [i for i, _ in copies] == [0, 1]
+    dst.release(0)
+    assert dst_pool.used_blocks == 0 and dst_pool.cow_debt == 0
+    assert (dst_pool.refcount[1:] == 0).all()
+
+
+def test_cross_pool_import_adopts_sealed_prefix():
+    # the destination pool already serves the same prompt prefix: the
+    # transferred chain dedupes against it by content key -- prefix
+    # sharing survives the pool boundary
+    src_pool, src = _tables()
+    dst_pool, dst = _tables()
+    prompt = [1, 2, 3, 4, 5, 6, 7, 8]       # two sealed blocks
+    keys, tail = prefix_keys(prompt, 4)
+    assert dst.admit(0, keys, tail, span_blocks=3)
+    dst.seal_prompt(0)
+    resident = [int(dst.read[0][0]), int(dst.read[0][1])]
+    assert src.admit(0, keys, tail, span_blocks=2)
+    src.seal_prompt(0)
+    blocks, bkeys = src.export_slot(0)
+    src.release(0)
+    copies = dst.import_slot(1, blocks, bkeys, live_tokens=8,
+                             src_pool=src_pool, span_blocks=3)
+    assert copies == []                     # both live blocks adopted
+    assert [int(dst.read[1][0]), int(dst.read[1][1])] == resident
+    assert (dst.write[1][:2] == NULL_BLOCK).all()
+    assert dst_pool.refcount[resident[0]] == 2
+    assert dst_pool.shared_hits == 2
+    dst.release(0)
+    dst.release(1)
+    assert dst_pool.used_blocks == 0
+    assert (dst_pool.refcount[1:] == 0).all()
+
+
+def test_shared_pool_import_rerefcounts_without_copies():
+    # tiers over one physical pool: the handoff is O(span) increfs, no
+    # value movement at all
+    pool, tables = _tables(num_blocks=9, n_slots=3, bpslot=4)
+    prompt = [1, 2, 3, 4, 5, 6, 7]
+    keys, tail = prefix_keys(prompt, 4)
+    assert tables.admit(0, keys, tail, span_blocks=2)
+    tables.seal_prompt(0)
+    blocks, bkeys = tables.export_slot(0)
+    copies = tables.import_slot(1, blocks, bkeys, live_tokens=7,
+                                src_pool=pool, span_blocks=3)
+    assert copies == []
+    assert [int(b) for b in tables.read[1][:2]] == blocks
+    assert (tables.write[1][:2] == NULL_BLOCK).all()
+    assert pool.refcount[blocks[0]] == 2
+    tables.release(0)                       # prefill side lets go
+    assert pool.refcount[blocks[0]] == 1
+    tables.release(1)
+    assert pool.used_blocks == 0
+    assert (pool.refcount[1:] == 0).all()
+
+
+def test_cow_after_handoff_never_writes_shared_block():
+    # the imported chain's partial frontier block stays shared with the
+    # exporting slot until first write: the write must COW into a private
+    # block, with the reservation booked at import time so it cannot fail
+    pool, tables = _tables(num_blocks=9, n_slots=3, bpslot=4)
+    prompt = [1, 2, 3, 4, 5, 6]             # frontier: block 1, 2 live rows
+    keys, tail = prefix_keys(prompt, 4)
+    assert tables.admit(0, keys, tail, span_blocks=2)
+    tables.seal_prompt(0)
+    blocks, bkeys = tables.export_slot(0)
+    assert tables.import_slot(1, blocks, bkeys, live_tokens=6,
+                              src_pool=pool, span_blocks=3) == []
+    assert pool.cow_debt == 1               # frontier reservation booked
+    shared = int(tables.read[1][1])
+    cow = tables.ensure_writable(1, 6)      # first generated token
+    assert cow is not None
+    src_b, dst_b = cow
+    assert src_b == shared and dst_b != shared
+    # slot 0's view of the frontier block is untouched
+    assert int(tables.read[0][1]) == shared
+    assert pool.cow_debt == 0 and pool.cow_events == 1
+    tables.release(0)
+    tables.release(1)
+    assert pool.used_blocks == 0
+    assert (pool.refcount[1:] == 0).all()
+
+
+def test_import_fails_without_mutation_when_full():
+    src_pool, src = _tables()
+    dst_pool, dst = _tables(num_blocks=3)   # 2 usable blocks
+    keys, tail = prefix_keys(list(range(12)), 4)
+    assert src.admit(0, keys, tail, span_blocks=3)
+    src.seal_prompt(0)
+    blocks, bkeys = src.export_slot(0)
+    before = (dst.read.copy(), dst_pool.refcount.copy(),
+              dst_pool.free_blocks)
+    assert dst.import_slot(0, blocks, bkeys, live_tokens=12,
+                           src_pool=src_pool, span_blocks=3) is None
+    assert (dst.read == before[0]).all()
+    assert (dst_pool.refcount == before[1]).all()
+    assert dst_pool.free_blocks == before[2]
