@@ -833,6 +833,33 @@ def serve(rows):
     _emit(rows, "serve.disagg.modeled_stall_vs_handoff",
           out["disagg"]["roofline"]["uniform"]["stall_vs_handoff"],
           "derived")
+
+    # -- recsys retrieval->rank: the sharded CF head inside the engine on
+    # an 8-device subprocess mesh.  Per sharding plan the same Zipfian
+    # candidate workload runs cache-off then cache-on; the hot-row
+    # replica must cut the cross-shard lookup traffic (measured exchange
+    # ids and ring-modeled bytes at the measured hit rate) while keeping
+    # fused scores, rankings and token streams bit-identical
+    r = _run_payload(_module="benchmarks._recsys_payload", mesh="2,4",
+                     requests=20, candidates=16, cache_rows=128)
+    out["recsys"] = r
+    for plan, e in r["plans"].items():
+        _emit(rows, f"serve.recsys.{plan}.hit_rate", e["hit_rate"],
+              "measured")
+        _emit(rows, f"serve.recsys.{plan}.tok_s_cached",
+              e["tok_s_cached"], "measured")
+        _emit(rows, f"serve.recsys.{plan}.exchanged_ids_cached",
+              e["exchanged_ids_cached"], "measured")
+        _emit(rows, f"serve.recsys.{plan}.exchanged_ids_uncached",
+              e["exchanged_ids_uncached"], "measured")
+        _emit(rows, f"serve.recsys.{plan}.modeled_bytes_cached",
+              e["modeled"]["cached_bytes"], "derived")
+        _emit(rows, f"serve.recsys.{plan}.modeled_bytes_uncached",
+              e["modeled"]["uncached_bytes"], "derived")
+        _emit(rows, f"serve.recsys.{plan}.scores_exact",
+              int(e["scores_exact"]), "measured")
+        _emit(rows, f"serve.recsys.{plan}.tokens_exact",
+              int(e["tokens_exact"]), "measured")
     _save("serve", out)
 
 

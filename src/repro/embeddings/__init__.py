@@ -6,6 +6,9 @@
   inverse) and the shard_map lookups for each sharding plan.
 * :mod:`repro.embeddings.update` — rows-touched sparse-gradient DP sync
   and segment-sum gradients, with optional payload compression.
+* :mod:`repro.embeddings.serving` — the serving-side hot-row replica:
+  frequency-tracked top-K cache in front of the sharded lookup (hits skip
+  the exchange; rows-touched refresh keeps it exact after updates).
 """
 from repro.embeddings.table import (  # noqa: F401
     PLANS, EmbedPlan, EmbedSpec, exchange_bytes, init_table, make_plan,
@@ -17,3 +20,6 @@ from repro.embeddings.lookup import (  # noqa: F401
 from repro.embeddings.update import (  # noqa: F401
     gather_grad_rows, make_row_compressor, rows_touched, scatter_rows,
     sparse_grad_from_lookup, sparse_row_sync)
+from repro.embeddings.serving import (  # noqa: F401
+    CacheConfig, CachedLookup, FreqTracker, HotRowCache,
+    make_cached_lookup)

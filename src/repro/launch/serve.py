@@ -59,6 +59,19 @@ is for (long-prompt burst over decode-heavy background):
       --cache-layout paged --disagg --prefill-replicas 1 \\
       --decode-replicas 2 --scenario prefill-burst
 
+``--candidates N`` attaches a head-heavy (Zipfian) candidate item set to
+every request and ``--cf-plan`` mounts the sharded CF scoring head inside
+the engine: each request is then a full retrieval->rank call — LM prefill
++ CF factor lookup + gated fusion + candidate ranking.  ``--cf-cache-rows``
+sizes the frequency-tracked hot-row replica in front of the sharded
+lookup (hits skip the cross-shard exchange; scores are bit-identical with
+the cache on or off).  The CF head rides the single-engine path; with
+``--disagg`` the flags are ignored (candidate scoring happens at prefill
+admission, which disagg delegates to tier replicas):
+
+  PYTHONPATH=src python -m repro.launch.serve --reduced --arch olmo-1b \\
+      --candidates 16 --cf-plan row --cf-cache-rows 256
+
 ``--mode raw`` keeps the original fixed-batch decode-loop microbenchmark:
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \\
@@ -72,14 +85,15 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.cache_layout import CacheLayout
 from repro.config import get_arch, list_archs, reduced
 from repro.models import transformer as tf
 from repro.models.transformer import ModelCtx
 from repro.obs import MetricsRegistry, Tracer, write_trace
-from repro.serving import (EngineConfig, PrefillBurstConfig, RouterConfig,
-                           ServingEngine, TrafficConfig, build_disagg,
-                           generate, generate_prefill_burst)
+from repro.serving import (CFHead, EngineConfig, PrefillBurstConfig,
+                           RouterConfig, ServingEngine, TrafficConfig,
+                           build_disagg, generate, generate_prefill_burst)
 from repro.serving.engine import make_backend
 from repro.serving.metrics import format_report
 
@@ -98,6 +112,9 @@ def run_engine(args) -> int:
                            min(24, args.max_len // 4)),
         vocab_size=cfg.vocab_size, seed=args.seed,
         temperature=args.temperature, top_k=args.top_k,
+        # recsys retrieval->rank: per-request candidate item sets (drawn
+        # from a separate rng stream — the base workload is unperturbed)
+        candidates=args.candidates,
         # enc-dec families: per-request encoder frames -> per-slot cross-KV
         encoder_frames=cfg.encoder_frames,
         frame_dim=cfg.d_model if cfg.encoder_layers else 0,
@@ -133,6 +150,17 @@ def run_engine(args) -> int:
                             ttft_weight=args.ttft_weight,
                             tpot_weight=args.tpot_weight)
 
+        def mk_cf_head():
+            if args.cf_plan == "off" or args.disagg:
+                return None
+            # trivial 1x1 mesh off-TPU: exercises the plan's shard_map
+            # path; a real deployment hands in the training mesh
+            mesh = compat.make_mesh((1, 1), ("data", "model"))
+            return CFHead.build(
+                n_users=tcfg.n_users, n_items=cfg.vocab_size, cf_dim=16,
+                seed=args.seed, plan=args.cf_plan,
+                cache_rows=args.cf_cache_rows, mesh=mesh)
+
         def mk_server(tracer=None, metrics=None):
             if args.disagg:
                 return build_disagg(
@@ -142,7 +170,7 @@ def run_engine(args) -> int:
             backend = make_backend(cfg, params, layout=layout,
                                    prefill_chunk=args.prefill_chunk)
             return ServingEngine(backend, ecfg, tracer=tracer,
-                                 metrics=metrics)
+                                 metrics=metrics, cf_head=mk_cf_head())
 
         if not args.no_warmup:
             # compile every prefill bucket + the decode step outside the
@@ -162,6 +190,12 @@ def run_engine(args) -> int:
              f"refill={args.refill} "
              f"slots={args.slots} {args.process}@{args.rate:g}req/s")
     print(format_report(summary, title))
+    if "cf" in summary:
+        s = summary["cf"]
+        print(f"cf head: plan={s['plan']} scored={s['requests_scored']} "
+              f"cache_rows={s['cache_rows']} (live {s['cache_rows_live']}) "
+              f"hit_rate={s['hit_rate']:.3f} "
+              f"({s['hits']} hits / {s['misses']} misses)")
     if args.trace_out:
         n = write_trace(args.trace_out, tracer, metrics)
         print(f"trace: {n} events -> {args.trace_out} "
@@ -283,6 +317,20 @@ def main(argv=None) -> int:
                     help="prefill-burst: seeded burst of long prompts "
                          "over a decode-heavy Zipfian background (the "
                          "disaggregation stress workload)")
+    ap.add_argument("--candidates", type=int, default=0,
+                    help="recsys retrieval->rank: head-heavy (Zipfian) "
+                         "candidate item ids per request the CF head "
+                         "scores and ranks (0 = plain LM serving)")
+    ap.add_argument("--cf-plan", default="off",
+                    choices=("off", "replicated", "row", "col", "row_col"),
+                    help="mount the CF scoring head with its cf_user/"
+                         "cf_item factor tables under this sharding plan "
+                         "(single-engine mode only; ignored with --disagg)")
+    ap.add_argument("--cf-cache-rows", type=int, default=128,
+                    help="hot-row replica capacity per CF table: the "
+                         "frequency-tracked head served without the "
+                         "cross-shard exchange (0 = cache off; scores are "
+                         "bit-identical either way)")
     ap.add_argument("--refill", default="continuous",
                     choices=("continuous", "static"))
     ap.add_argument("--queue-capacity", type=int, default=64)

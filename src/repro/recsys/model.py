@@ -66,14 +66,22 @@ def init_recllm(key, cfg: ArchConfig, n_users: int, cf_dim: int = 64
     }
 
 
+def fuse(lm_logits, cf_scores, fusion_gate):
+    """The cross-modal fusion gate (Fig. 1): LM logits plus sigmoid-gated
+    CF scores, in f32.  One function so training (:func:`rec_logits`) and
+    the serving CF head (:mod:`repro.serving.cf_head`) combine the two
+    signals identically — shapes just need to broadcast."""
+    alpha = jax.nn.sigmoid(fusion_gate)
+    return jnp.asarray(lm_logits, jnp.float32) + alpha * cf_scores
+
+
 def rec_logits(cfg: ArchConfig, params: Dict, batch: Dict,
                ctx: ModelCtx = ModelCtx()):
     """LM logits fused with CF scores.  batch: tokens (B,S), user (B,)."""
     lm_logits, aux, _ = tf.forward(cfg, params["lm"], batch, ctx)
     u = dedup_lookup(params["cf_user"], batch["user"])   # (B, dc)
     cf = u @ params["cf_item"].T                         # (B, V)
-    alpha = jax.nn.sigmoid(params["fusion_gate"])
-    fused = lm_logits.astype(jnp.float32) + alpha * cf[:, None, :]
+    fused = fuse(lm_logits, cf[:, None, :], params["fusion_gate"])
     return fused, aux
 
 

@@ -31,6 +31,7 @@ package promotes the `examples/serve_lm.py` toy into a first-class engine:
 """
 from repro.cache_layout import CacheLayout
 from repro.serving.block_pool import BlockPool, SlotTables, prefix_keys
+from repro.serving.cf_head import CFConfig, CFHead
 from repro.serving.disagg import (DisaggServer, Router, RouterConfig,
                                   build_disagg)
 from repro.serving.engine import (EngineConfig, Handoff, Int8KVBackend,
@@ -40,8 +41,8 @@ from repro.serving.engine import (EngineConfig, Handoff, Int8KVBackend,
                                   make_backend, serve)
 from repro.serving.metrics import (RequestRecord, WindowedLatency,
                                    percentile, summarize)
-from repro.serving.roofline import (decode_state_bytes, kv_block_bytes,
-                                    max_concurrent_slots,
+from repro.serving.roofline import (cf_lookup_bytes, decode_state_bytes,
+                                    kv_block_bytes, max_concurrent_slots,
                                     modeled_decode_step,
                                     modeled_prefill_step,
                                     modeled_tier_split, resident_kv_bytes)
@@ -57,6 +58,7 @@ __all__ = [
     "BlockPool", "SlotTables", "prefix_keys",
     "DisaggServer", "Router", "RouterConfig", "build_disagg", "Handoff",
     "RequestRecord", "WindowedLatency", "percentile", "summarize",
+    "CFConfig", "CFHead", "cf_lookup_bytes",
     "decode_state_bytes", "modeled_decode_step", "modeled_prefill_step",
     "modeled_tier_split", "kv_block_bytes",
     "resident_kv_bytes", "max_concurrent_slots",

@@ -1080,7 +1080,8 @@ class ServingEngine:
                  clock: Optional[Clock] = None,
                  tracer: Optional[Tracer] = None,
                  metrics: Optional[MetricsRegistry] = None, *,
-                 name: str = "engine", role: str = "both"):
+                 name: str = "engine", role: str = "both",
+                 cf_head=None):
         if role not in ("both", "prefill", "decode"):
             raise ValueError(f"unknown engine role {role!r} "
                              "(both | prefill | decode)")
@@ -1191,6 +1192,12 @@ class ServingEngine:
         self.spec_tokens = 0
         self.spec_slot_steps = 0
         self.spec_rows = 0      # verify rows run (drafting intensity)
+        # recsys serving: CF head (sharded cf_user/cf_item scoring with
+        # the hot-row replica) — requests carrying a candidate set are
+        # scored at prefill, inside the req.prefill span
+        self.cf_head = cf_head
+        self.cf_results: Dict[int, Dict] = {}
+        self.cf_scored = 0
 
     # -- bookkeeping helpers -------------------------------------------------
 
@@ -1388,6 +1395,31 @@ class ServingEngine:
         if self.tables is not None:
             # publish this prompt's self-computed blocks for later sharers
             self.tables.seal_prompt(slot)
+        if self.cf_head is not None and req.candidates:
+            # retrieval->rank: score the candidate set through the sharded
+            # CF tables and fuse with the prompt's last-position logits.
+            # Runs between prefill and the first-token stamp, so the CF
+            # time lands inside the req.prefill span and the TTFT/span
+            # reconciliation holds unchanged.
+            t_cf = self.clock.now
+            res = self._timed(
+                getattr(self.clock, "fixed_cf_s", None),
+                lambda: self.cf_head.score(req.user_id, req.candidates,
+                                           lm_logits_row=logits_row))
+            self.cf_results[req.rid] = res
+            self.cf_scored += 1
+            self.tracer.complete("cf.lookup", t_cf, self.clock.now,
+                                 track=self._track(f"slot{slot}"),
+                                 rid=req.rid, hits=res["hits"],
+                                 misses=res["misses"],
+                                 candidates=len(req.candidates))
+            if self.metrics is not None:
+                self.metrics.counter("cf_cache.hits").inc(res["hits"])
+                self.metrics.counter("cf_cache.misses").inc(res["misses"])
+                self.metrics.gauge("cf_cache.hit_rate").set(
+                    self.cf_head.hit_rate)
+                self.metrics.gauge("cf_cache.rows").set(
+                    self.cf_head.cache_rows_live)
         key = self._request_key(req)
         first = sample_token(logits_row, req.temperature, req.top_k,
                              jax.random.fold_in(key, 0))
@@ -1893,6 +1925,9 @@ class ServingEngine:
                 "verify_rows_per_step": (
                     self.spec_rows / max(self.spec_slot_steps, 1)),
             }
+        if self.cf_head is not None:
+            summary["cf"] = self.cf_head.summary()
+            summary["cf"]["requests_scored_here"] = self.cf_scored
         if self.pool is not None:
             summary["paged"] = {
                 "num_blocks": self.pool.num_blocks,

@@ -56,6 +56,9 @@ class Request:
     # Drives the request's multimodal-RoPE position layout at prefill and
     # the per-token position advance at decode.
     grid: Optional[Tuple[int, int]] = None
+    # recsys retrieval->rank: the candidate item ids this request asks to
+    # be scored (CF head + LM fusion); None = plain LM request.
+    candidates: Optional[Tuple[int, ...]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +86,13 @@ class TrafficConfig:
     image_grid: Tuple[int, int] = ()    # (gh, gw): vlm requests carry a
                                         # gh x gw patch-token prompt prefix
     image_fraction: float = 1.0         # share of requests with an image
+    # recsys retrieval->rank: candidate ids per request (0 = none).
+    # Head-heavy (Zipfian item popularity) — the distribution that makes
+    # the hot-row cache pay — and drawn from a separate per-request rng
+    # stream, so the base workload stays byte-identical with candidates
+    # on or off.
+    candidates: int = 0
+    zipf_items: float = 1.3             # candidate-popularity skew (>1)
     seed: int = 0
 
 
@@ -108,6 +118,22 @@ def _arrival_times(cfg: TrafficConfig, rng: np.random.Generator) -> np.ndarray:
     else:
         raise ValueError(f"unknown arrival process {cfg.process!r}")
     return np.cumsum(gaps)
+
+
+def _candidate_set(cfg: TrafficConfig, rid: int) -> Tuple[int, ...]:
+    """Head-heavy candidate item ids for one request.
+
+    Zipf(``zipf_items``) over the item vocabulary: a popularity-biased
+    retrieval stage mostly proposes the same head of hot items across
+    requests (repeats across — and occasionally within — a set are the
+    point).  The rng is seeded from (seed, rid) alone, never the shared
+    workload stream, so turning candidates on/off cannot perturb
+    arrivals, users, prompts, or SLO assignment.
+    """
+    crng = np.random.default_rng((cfg.seed, 0x5EED5, rid))
+    ids = _bounded_zipf(crng, cfg.zipf_items, 1, cfg.vocab_size,
+                        cfg.candidates) - 1
+    return tuple(int(i) for i in ids)
 
 
 def _user_prompt(cfg: TrafficConfig, user_id: int, length: int,
@@ -165,6 +191,8 @@ def generate(cfg: TrafficConfig) -> List[Request]:
             top_k=cfg.top_k,
             frames=frames,
             grid=grid,
+            candidates=(_candidate_set(cfg, i) if cfg.candidates > 0
+                        else None),
         ))
     return reqs
 
@@ -230,11 +258,13 @@ class Clock:
 
     def __init__(self, fixed_decode_s: Optional[float] = None,
                  fixed_prefill_s: Optional[float] = None,
-                 fixed_handoff_s: Optional[float] = None):
+                 fixed_handoff_s: Optional[float] = None,
+                 fixed_cf_s: Optional[float] = None):
         self.now = 0.0
         self.fixed_decode_s = fixed_decode_s
         self.fixed_prefill_s = fixed_prefill_s
         self.fixed_handoff_s = fixed_handoff_s
+        self.fixed_cf_s = fixed_cf_s
 
     def advance(self, dt: float) -> None:
         assert dt >= 0.0

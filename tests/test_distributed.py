@@ -50,6 +50,7 @@ CHECKS = [
     "embed_sparse_row_sync_matches_dense_pmean",
     "dp_train_step_sparse_embed_matches_dense",
     "hybrid_recllm_embed_plan_matches_replicated",
+    "cf_hot_row_cache_matches_sharded",
     "dryrun_cell_on_host_mesh",
 ]
 
